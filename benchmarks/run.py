@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper theorem/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV rows (template contract)."""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_collectives,
+        bench_fig2_spectrum,
+        bench_gradient_coding,
+        bench_roofline,
+        bench_serving_latency,
+        bench_step_time,
+        bench_thm1_assignment,
+        bench_thm2_exponential,
+        bench_thm4_variance,
+    )
+
+    modules = [
+        bench_thm1_assignment,
+        bench_thm2_exponential,
+        bench_fig2_spectrum,
+        bench_thm4_variance,
+        bench_step_time,
+        bench_collectives,
+        bench_serving_latency,
+        bench_gradient_coding,
+        bench_roofline,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

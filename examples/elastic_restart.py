@@ -1,0 +1,46 @@
+"""Fault-tolerance walkthrough: kill BOTH replicas of a batch mid-training,
+watch the runtime detect the lost replica group, restore from checkpoint,
+shrink the fleet, re-plan B, and keep training.
+
+Run: PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import numpy as np
+
+from repro.core import FaultEvent
+from repro.launch.train import Trainer, TrainerConfig
+
+
+def main():
+    faults = (
+        # batch 1's replicas on an 8-worker B=4 plan are coords 1 and 5
+        FaultEvent(worker=1, start_step=20, end_step=10**9),
+        FaultEvent(worker=5, start_step=20, end_step=10**9),
+    )
+    tc = TrainerConfig(
+        arch="qwen2-0.5b",
+        steps=60,
+        seq_len=64,
+        global_batch=16,
+        n_workers=8,
+        n_batches=4,
+        faults=faults,
+        checkpoint_dir="/tmp/repro_elastic",
+        checkpoint_every=10,
+        seed=0,
+    )
+    res = Trainer(tc).run()
+    print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}")
+    print(f"plan history (step, B): {res.plan_history}")
+    print("events:")
+    for e in res.events:
+        print("  ", e)
+    assert any("replan" in e for e in res.events), "expected an elastic replan"
+    assert res.final_plan.n_data < 8
+    assert np.isfinite(res.losses).all()
+    print(f"\nOK: survived a whole-replica-group loss; now on "
+          f"N={res.final_plan.n_data}, B={res.final_plan.n_batches}")
+
+
+if __name__ == "__main__":
+    main()

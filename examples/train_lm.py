@@ -1,0 +1,87 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model for a few
+hundred steps under the replication runtime, with checkpointing, the
+diversity-parallelism tuner, and a straggler injection at step 150.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params; a few minutes on CPU.  --small for a 2-minute variant.)
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    tc = TrainerConfig(
+        arch="qwen2-0.5b",
+        reduced=args.small,
+        steps=args.steps,
+        seq_len=128 if args.small else 256,
+        global_batch=16,
+        n_workers=8,
+        n_batches=4,
+        lr=1e-3,
+        warmup=30,
+        service="sexp",
+        delta=0.5,
+        mu=2.0,
+        slow_workers={5: 25.0},
+        tuner=True,
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=100,
+        seed=0,
+    )
+    if not args.small:
+        # ~100M-param variant of the qwen2 family (same code path)
+        base = get_config("qwen2-0.5b")
+        cfg = dataclasses.replace(
+            base, name="qwen2-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=2, d_ff=2048, vocab_size=32000,
+        )
+        trainer = Trainer(tc)
+        # swap in the 100M config before params are used
+        from repro.models import init_params
+        import jax
+
+        trainer.cfg = cfg
+        trainer.params = init_params(jax.random.PRNGKey(0), cfg)
+        from repro.optim import init as opt_init
+
+        trainer.opt_state = opt_init(trainer.params, trainer.adamw)
+        from repro.data import TokenPipeline
+        from repro.configs.base import ShapeCell
+
+        trainer.pipeline = TokenPipeline(
+            cfg, ShapeCell("driver", tc.seq_len, tc.global_batch, "train"),
+            seed=tc.seed,
+        )
+        from repro.models import count_params
+
+        print(f"model: {cfg.name} ({count_params(cfg)/1e6:.0f}M params)")
+    else:
+        trainer = Trainer(tc)
+
+    res = trainer.run()
+    print(f"\nloss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"over {len(res.losses)} steps")
+    print(f"simulated wall-clock: {res.total_sim_time:.0f}s "
+          f"(host wall: {res.wall_time:.0f}s)")
+    print(f"plan history (step, B): {res.plan_history}")
+    for e in res.events[:10]:
+        print("  ", e)
+    assert np.mean(res.losses[-20:]) < np.mean(res.losses[:20])
+    print("OK: loss decreased under stragglers + replication runtime")
+
+
+if __name__ == "__main__":
+    main()

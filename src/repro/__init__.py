@@ -1,0 +1,8 @@
+"""repro: straggler-resilient distributed training/serving framework in JAX.
+
+Reproduction of Behrouzi-Far & Soljanin, 'Data Replication for Reducing
+Computing Time in Distributed Systems with Stragglers' (2019), extended into
+a production-grade multi-pod framework.  See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

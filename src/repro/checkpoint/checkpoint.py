@@ -1,0 +1,159 @@
+"""Sharded checkpointing with async writes and elastic restore.
+
+Format: one directory per step —
+    step_000123/
+      manifest.json      # treedef, leaf dtypes/shapes, metadata (plan, rng)
+      leaves.npz         # flat leaf arrays (leaf_000, leaf_001, ...)
+
+Writes go to ``<name>.tmp`` then atomically rename, so a crash mid-write
+never corrupts the latest checkpoint (restart finds the previous complete
+one).  ``save_async`` pushes serialization to a background thread — the
+training loop only blocks on the previous write (single-buffer, bounded
+memory).  ``restore`` optionally re-plans the replication factor: the state
+itself is placement-agnostic (params are data-parallel-replicated), so
+elastic restarts with a different B or N just reload and re-factor the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "latest_step"]
+
+
+def _tree_flatten_with_meta(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def latest_step(root: str | pathlib.Path) -> Optional[int]:
+    root = pathlib.Path(root)
+    if not root.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in root.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+@dataclasses.dataclass
+class Checkpointer:
+    root: str
+    keep: int = 3
+
+    def __post_init__(self):
+        self._root = pathlib.Path(self.root)
+        self._root.mkdir(parents=True, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write --------------------------------------------------------------
+    def save(self, step: int, state: Any, metadata: dict | None = None) -> None:
+        leaves, treedef = jax.tree.flatten(state)
+        host_leaves = [np.asarray(l) for l in leaves]
+        self._write(step, host_leaves, treedef, metadata or {})
+
+    def save_async(self, step: int, state: Any, metadata: dict | None = None) -> None:
+        self.wait()  # bound to one in-flight write
+        leaves, treedef = jax.tree.flatten(state)
+        host_leaves = [np.asarray(l) for l in leaves]  # device->host now
+
+        def work():
+            try:
+                self._write(step, host_leaves, treedef, metadata or {})
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def _write(self, step, host_leaves, treedef, metadata):
+        final = self._root / f"step_{step:08d}"
+        tmp = self._root / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            import shutil
+
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        # npz can't round-trip ml_dtypes (bfloat16 etc): store raw bits +
+        # record the true dtype in the manifest
+        arrays, dtypes = {}, []
+        for i, l in enumerate(host_leaves):
+            dtypes.append(str(l.dtype))
+            if l.dtype.kind == "V" or str(l.dtype) == "bfloat16":
+                l = l.view(np.uint16)
+            arrays[f"leaf_{i:05d}"] = l
+        np.savez(tmp / "leaves.npz", **arrays)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(host_leaves),
+            "dtypes": dtypes,
+            "metadata": metadata,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            import shutil
+
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            p
+            for p in self._root.iterdir()
+            if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+        )
+        for p in steps[: -self.keep]:
+            import shutil
+
+            shutil.rmtree(p)
+
+    # -- read ---------------------------------------------------------------
+    def restore(self, example_state: Any, step: Optional[int] = None):
+        """Returns (state, metadata).  ``example_state`` supplies the pytree
+        structure (and target dtypes); leaf count must match."""
+        if step is None:
+            step = latest_step(self._root)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {self._root}")
+        d = self._root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "leaves.npz")
+        import ml_dtypes
+
+        leaves = []
+        for i in range(manifest["n_leaves"]):
+            arr = data[f"leaf_{i:05d}"]
+            dt = manifest.get("dtypes", [None] * (i + 1))[i]
+            if dt == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16)
+            leaves.append(arr)
+        ex_leaves, treedef = jax.tree.flatten(example_state)
+        if len(ex_leaves) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, expected {len(ex_leaves)}"
+            )
+        cast = [
+            np.asarray(l).astype(ex.dtype) if hasattr(ex, "dtype") else l
+            for l, ex in zip(leaves, ex_leaves)
+        ]
+        return jax.tree.unflatten(treedef, cast), manifest["metadata"]

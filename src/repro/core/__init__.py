@@ -1,0 +1,53 @@
+"""Core library: the paper's data-replication/straggler technique.
+
+Analysis layer (pure python/numpy — control plane):
+    order_stats, policies, simulator, spectrum, estimator, tuner
+Execution layer (jax — data plane):
+    replication (RDP mesh factoring + straggler-drop aggregation)
+"""
+
+from .gradient_coding import (
+    CyclicGradientCode,
+    compare_schemes,
+    expected_coding_time,
+    simulate_gradient_coding,
+)
+from .order_stats import (
+    Exponential,
+    ServiceDistribution,
+    ShiftedExponential,
+    completion_mean,
+    completion_quantile,
+    completion_var,
+    generalized_harmonic,
+    harmonic,
+)
+from .policies import (
+    Assignment,
+    balanced_nonoverlapping,
+    divisors,
+    overlapping_cyclic,
+    random_assignment,
+    unbalanced_nonoverlapping,
+)
+from .replication import (
+    ReplicationPlan,
+    aggregate_gradients,
+    aggregate_host,
+    batch_index_for_data_coord,
+    make_rdp_mesh,
+    rdp_data_spec,
+)
+from .simulator import (
+    FaultEvent,
+    SimResult,
+    StepTimeSimulator,
+    completion_from_step_times,
+    simulate_coverage,
+    simulate_maxmin,
+)
+from .spectrum import SpectrumPoint, SpectrumResult, continuous_optimum, optimize, sweep
+from .estimator import FitResult, fit_best, fit_exponential, fit_shifted_exponential
+from .tuner import RescalePlan, StragglerTuner, TunerConfig
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,113 @@
+"""MLE fitting of the service-time distribution from runtime telemetry.
+
+The tuner observes per-worker step times.  Two complications vs textbook MLE:
+
+* **Right censoring** — when the runtime cancels stragglers (or a step
+  finishes because every batch has a fast replica), slow workers' times are
+  only known to exceed the step's cutoff.  We support censored samples.
+* **Model selection** — Exp vs SExp: we fit both and pick by (censored)
+  log-likelihood with a small penalty for the extra parameter (AIC).
+
+Shifted-exponential MLE (uncensored): Delta_hat = X_(1) (sample min),
+mu_hat = 1 / (mean(X) - X_(1)).  We apply the standard small-sample
+bias correction Delta_hat -= (mean - min)/(n-1) when requested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .order_stats import Exponential, ServiceDistribution, ShiftedExponential
+
+__all__ = ["FitResult", "fit_exponential", "fit_shifted_exponential", "fit_best"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    dist: ServiceDistribution
+    log_likelihood: float
+    n_samples: int
+    n_censored: int
+
+    @property
+    def aic(self) -> float:
+        k = 2 if isinstance(self.dist, ShiftedExponential) else 1
+        return 2 * k - 2 * self.log_likelihood
+
+
+def _validate(samples, censored):
+    x = np.asarray(samples, dtype=float)
+    if x.ndim != 1 or x.size == 0:
+        raise ValueError("samples must be a non-empty 1-D array")
+    if np.any(~np.isfinite(x)) or np.any(x < 0):
+        raise ValueError("samples must be finite and non-negative")
+    if censored is None:
+        c = np.zeros(x.shape, dtype=bool)
+    else:
+        c = np.asarray(censored, dtype=bool)
+        if c.shape != x.shape:
+            raise ValueError("censored mask must match samples shape")
+    if c.all():
+        raise ValueError("at least one uncensored observation required")
+    return x, c
+
+
+def fit_exponential(samples, censored=None) -> FitResult:
+    """Censored MLE for Exp(mu): mu_hat = n_uncensored / sum(all times)."""
+    x, c = _validate(samples, censored)
+    n_unc = int((~c).sum())
+    total = float(x.sum())
+    if total <= 0:
+        raise ValueError("sum of observation times must be positive")
+    mu = n_unc / total
+    # log L = n_unc * log(mu) - mu * sum(x)   (censored terms contribute -mu*c_i)
+    ll = n_unc * math.log(mu) - mu * total
+    return FitResult(Exponential(mu=mu), ll, int(x.size), int(c.sum()))
+
+
+def fit_shifted_exponential(
+    samples, censored=None, bias_correct: bool = True
+) -> FitResult:
+    """Censored MLE for SExp(Delta, mu).
+
+    Delta_hat = min over UNCENSORED observations (a censored time > Delta
+    carries no extra information about the shift as long as it exceeds the
+    min).  Given Delta, the exponential part uses the censored-Exp MLE on
+    (x - Delta) clipped at 0 for censored entries that are below Delta
+    (cannot happen for valid data, guarded anyway).
+    """
+    x, c = _validate(samples, censored)
+    unc = x[~c]
+    delta = float(unc.min())
+    n_unc = int(unc.size)
+    if bias_correct and n_unc > 1:
+        excess_mean = float(unc.mean() - delta)
+        delta = max(0.0, delta - excess_mean / (n_unc - 1))
+    shifted = np.clip(x - delta, 0.0, None)
+    total = float(shifted.sum())
+    if total <= 0:
+        # degenerate: all mass at the shift; fall back to a very fast rate
+        mu = 1e12
+    else:
+        mu = n_unc / total
+    ll = n_unc * math.log(mu) - mu * total
+    return FitResult(
+        ShiftedExponential(delta=delta, mu=mu), ll, int(x.size), int(c.sum())
+    )
+
+
+def fit_best(samples, censored=None) -> FitResult:
+    """Fit both families, return the lower-AIC one.
+
+    A fitted SExp with Delta ~ 0 collapses to Exp; the AIC penalty breaks the
+    tie toward the 1-parameter family.
+    """
+    fe = fit_exponential(samples, censored)
+    try:
+        fs = fit_shifted_exponential(samples, censored)
+    except ValueError:
+        return fe
+    return fs if fs.aic < fe.aic else fe

@@ -1,0 +1,225 @@
+"""Closed-form order statistics for the paper's completion-time analysis.
+
+The paper (Behrouzi-Far & Soljanin, 2019) normalizes the dataset size to
+``|D| = N`` units (one unit per worker at full parallelism).  With ``B``
+disjoint batches (``B | N``) each batch has size ``s = N/B`` and is assigned
+to ``r = N/B`` workers.  Under the size-dependent service model of Gardner
+et al. (MASCOTS'16):
+
+* ``Exp``  : a batch of size ``s`` is served at rate ``mu / s``
+* ``SExp`` : a batch of size ``s`` has shift ``s * Delta`` and rate ``mu / s``
+
+Job completion (System1) is ``T(B) = max_i min_j T_ij`` — every batch needs
+at least one finished replica.  The min of ``r`` i.i.d. ``Exp(mu * B / N)``
+is ``Exp(r * mu * B / N) = Exp(mu)``, hence
+
+    E[T] = N*Delta/B + H_B / mu          (Thm 3; Delta=0 gives Thm 2)
+    Var[T] = (sum_{k=1..B} k^-2) / mu^2  (Thms 2 & 4 — shift is deterministic)
+
+Everything in this module is plain-float math (no jax) so it can be used by
+the control plane (tuner / spectrum optimizer) without touching device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterable, Sequence
+
+__all__ = [
+    "harmonic",
+    "generalized_harmonic",
+    "ServiceDistribution",
+    "Exponential",
+    "ShiftedExponential",
+    "batch_service",
+    "completion_mean",
+    "completion_var",
+    "completion_quantile",
+    "expected_max_exponential",
+    "expected_max_min_groups",
+]
+
+
+def harmonic(n: int) -> float:
+    """H_n = sum_{k=1..n} 1/k (exact summation; n is small in practice)."""
+    if n < 0:
+        raise ValueError(f"harmonic undefined for n={n}")
+    return sum(1.0 / k for k in range(1, n + 1))
+
+
+def generalized_harmonic(n: int, p: int = 2) -> float:
+    """H_n^(p) = sum_{k=1..n} k^-p."""
+    if n < 0:
+        raise ValueError(f"generalized_harmonic undefined for n={n}")
+    return sum(k ** (-float(p)) for k in range(1, n + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceDistribution:
+    """Base class: service time of ONE unit of data on one worker."""
+
+    def scaled(self, size: float) -> "ServiceDistribution":
+        raise NotImplementedError
+
+    def sample(self, rng, shape):  # numpy rng
+        raise NotImplementedError
+
+    def mean(self) -> float:
+        raise NotImplementedError
+
+    def var(self) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(ServiceDistribution):
+    """T ~ Exp(mu): P{T > t} = exp(-mu t)."""
+
+    mu: float
+
+    def __post_init__(self):
+        if self.mu <= 0:
+            raise ValueError(f"mu must be positive, got {self.mu}")
+
+    def scaled(self, size: float) -> "Exponential":
+        # size-dependent service: rate mu/size
+        return Exponential(mu=self.mu / size)
+
+    def sample(self, rng, shape):
+        return rng.exponential(scale=1.0 / self.mu, size=shape)
+
+    def mean(self) -> float:
+        return 1.0 / self.mu
+
+    def var(self) -> float:
+        return 1.0 / self.mu**2
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExponential(ServiceDistribution):
+    """T ~ SExp(Delta, mu): P{T > t} = exp(-mu (t - Delta)) for t >= Delta."""
+
+    delta: float
+    mu: float
+
+    def __post_init__(self):
+        if self.mu <= 0:
+            raise ValueError(f"mu must be positive, got {self.mu}")
+        if self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+
+    def scaled(self, size: float) -> "ShiftedExponential":
+        return ShiftedExponential(delta=self.delta * size, mu=self.mu / size)
+
+    def sample(self, rng, shape):
+        return self.delta + rng.exponential(scale=1.0 / self.mu, size=shape)
+
+    def mean(self) -> float:
+        return self.delta + 1.0 / self.mu
+
+    def var(self) -> float:
+        return 1.0 / self.mu**2
+
+
+def batch_service(dist: ServiceDistribution, n: int, b: int) -> ServiceDistribution:
+    """Service distribution of one batch of size N/B under the size model."""
+    if n % b:
+        raise ValueError(f"B={b} must divide N={n}")
+    return dist.scaled(n / b)
+
+
+def completion_mean(dist: ServiceDistribution, n: int, b: int) -> float:
+    """E[T(B)] for balanced non-overlapping replication (Thms 2 & 3)."""
+    if n % b:
+        raise ValueError(f"B={b} must divide N={n}")
+    if isinstance(dist, ShiftedExponential):
+        return n * dist.delta / b + harmonic(b) / dist.mu
+    if isinstance(dist, Exponential):
+        return harmonic(b) / dist.mu
+    raise TypeError(f"unsupported distribution {dist!r}")
+
+
+def completion_var(dist: ServiceDistribution, n: int, b: int) -> float:
+    """Var[T(B)] for balanced non-overlapping replication (Thms 2 & 4).
+
+    The exponential part of every batch-minimum is Exp(mu) regardless of B
+    (rate mu*B/N, min over N/B replicas), so T - shift = max of B iid Exp(mu)
+    whose variance is mu^-2 * sum_{k<=B} k^-2.
+    """
+    if n % b:
+        raise ValueError(f"B={b} must divide N={n}")
+    if isinstance(dist, (Exponential, ShiftedExponential)):
+        return generalized_harmonic(b, 2) / dist.mu**2
+    raise TypeError(f"unsupported distribution {dist!r}")
+
+
+def completion_quantile(
+    dist: ServiceDistribution, n: int, b: int, q: float
+) -> float:
+    """Quantile of T(B): shift + quantile of max of B iid Exp(mu).
+
+    CDF of the max is (1 - e^{-mu t})^B, so t_q = -ln(1 - q^{1/B}) / mu.
+    Used for p99-style tail guarantees (the paper motivates variance control
+    via performance guarantees, Dean & Barroso 'tail at scale').
+    """
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"quantile must be in (0,1), got {q}")
+    if n % b:
+        raise ValueError(f"B={b} must divide N={n}")
+    shift = 0.0
+    if isinstance(dist, ShiftedExponential):
+        shift = n * dist.delta / b
+    elif not isinstance(dist, Exponential):
+        raise TypeError(f"unsupported distribution {dist!r}")
+    return shift - math.log(1.0 - q ** (1.0 / b)) / dist.mu
+
+
+def expected_max_exponential(rates: Sequence[float]) -> float:
+    """E[max of independent Exp(rate_i)] via inclusion-exclusion.
+
+    E[max] = sum_{nonempty S} (-1)^{|S|+1} / sum_{i in S} rate_i.
+    Exact; cost 2^len(rates), intended for len <= ~20 (policy comparisons).
+    """
+    rates = list(rates)
+    if not rates or any(r <= 0 for r in rates):
+        raise ValueError(f"rates must be positive and non-empty: {rates}")
+    if len(rates) > 22:
+        raise ValueError("inclusion-exclusion limited to <=22 rates")
+    total = 0.0
+    for k in range(1, len(rates) + 1):
+        for subset in itertools.combinations(rates, k):
+            total += (-1.0) ** (k + 1) / sum(subset)
+    return total
+
+
+def expected_max_min_groups(
+    dist: ServiceDistribution, n: int, group_sizes: Iterable[int]
+) -> float:
+    """E[T] for a (possibly unbalanced) non-overlapping assignment.
+
+    ``group_sizes[i]`` workers serve batch i; batches have equal size n/B
+    (B = len(group_sizes)); sum(group_sizes) must equal n.  Used to verify
+    Thm 1's 'balanced beats unbalanced' claim exactly for exponentials, and
+    the shifted case decomposes as shift + exponential part only when the
+    assignment is balanced — for unbalanced SExp we fall back to simulation
+    (see core.simulator).
+    """
+    sizes = list(group_sizes)
+    b = len(sizes)
+    if sum(sizes) != n:
+        raise ValueError(f"group sizes {sizes} must sum to N={n}")
+    if any(g <= 0 for g in sizes):
+        raise ValueError(f"group sizes must be positive: {sizes}")
+    per_batch = batch_service(dist, n, b)
+    if isinstance(dist, Exponential):
+        # min over g_i replicas of Exp(mu*B/N) ~ Exp(g_i*mu*B/N)
+        rates = [g * per_batch.mu for g in sizes]
+        return expected_max_exponential(rates)
+    if isinstance(dist, ShiftedExponential):
+        # every batch has the same deterministic shift (equal batch sizes);
+        # the exponential parts are Exp(g_i * mu * B / N)
+        rates = [g * per_batch.mu for g in sizes]
+        return per_batch.delta + expected_max_exponential(rates)
+    raise TypeError(f"unsupported distribution {dist!r}")

@@ -1,0 +1,186 @@
+"""Batching + assignment policies (the paper's Fig. 1 'batching unit' and
+'batch assignment unit').
+
+A policy produces an :class:`Assignment`:
+
+* ``batches``      — list of B frozensets of data-unit ids (0..N-1 data units,
+                     dataset normalized to N units as in the paper);
+* ``worker_batch`` — length-N tuple: which batch each worker serves.
+
+Completion semantics (used by core.simulator): the job is done at the first
+time the union of finished workers' batches covers all N data units.  For
+non-overlapping policies this reduces to the paper's ``max_i min_j T_ij``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Assignment",
+    "balanced_nonoverlapping",
+    "unbalanced_nonoverlapping",
+    "overlapping_cyclic",
+    "random_assignment",
+    "divisors",
+]
+
+
+def divisors(n: int) -> list[int]:
+    """All positive divisors of n, ascending (feasible B values, B | N)."""
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return small + large[::-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """A concrete placement of data batches onto workers."""
+
+    n_workers: int
+    n_units: int
+    batches: tuple[frozenset, ...]
+    worker_batch: tuple[int, ...]  # worker j serves batches[worker_batch[j]]
+
+    def __post_init__(self):
+        if len(self.worker_batch) != self.n_workers:
+            raise ValueError("one batch index per worker required")
+        covered = set().union(*self.batches) if self.batches else set()
+        if covered != set(range(self.n_units)):
+            raise ValueError("batches must cover all data units")
+        used = set(self.worker_batch)
+        if used != set(range(len(self.batches))):
+            raise ValueError("every batch must be assigned to >=1 worker")
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.batches)
+
+    @property
+    def batch_sizes(self) -> tuple[int, ...]:
+        return tuple(len(b) for b in self.batches)
+
+    @property
+    def replication(self) -> tuple[int, ...]:
+        """Number of workers serving each batch."""
+        counts = [0] * self.n_batches
+        for b in self.worker_batch:
+            counts[b] += 1
+        return tuple(counts)
+
+    @property
+    def is_overlapping(self) -> bool:
+        total = sum(self.batch_sizes)
+        return total > self.n_units
+
+    def coverage_matrix(self) -> np.ndarray:
+        """(n_workers, n_units) bool: worker j covers unit u."""
+        mat = np.zeros((self.n_workers, self.n_units), dtype=bool)
+        for j, b in enumerate(self.worker_batch):
+            mat[j, list(self.batches[b])] = True
+        return mat
+
+    def worker_load(self) -> np.ndarray:
+        """Units of data each worker processes (drives service-time scaling)."""
+        return np.array([len(self.batches[b]) for b in self.worker_batch], float)
+
+
+def balanced_nonoverlapping(n_workers: int, n_batches: int) -> Assignment:
+    """The paper's optimal policy (Thm 1): B disjoint equal batches, each
+    replicated on exactly N/B workers."""
+    if n_workers % n_batches:
+        raise ValueError(f"B={n_batches} must divide N={n_workers}")
+    size = n_workers // n_batches
+    batches = tuple(
+        frozenset(range(i * size, (i + 1) * size)) for i in range(n_batches)
+    )
+    worker_batch = tuple(j // size for j in range(n_workers))
+    return Assignment(n_workers, n_workers, batches, worker_batch)
+
+
+def unbalanced_nonoverlapping(
+    n_workers: int, replication: Sequence[int]
+) -> Assignment:
+    """Disjoint equal-size batches with a custom (unbalanced) replication
+    vector; sum(replication) == N.  Used to verify Thm 1 numerically."""
+    reps = list(replication)
+    if sum(reps) != n_workers:
+        raise ValueError(f"replication {reps} must sum to N={n_workers}")
+    if any(r <= 0 for r in reps):
+        raise ValueError(f"replication counts must be positive: {reps}")
+    b = len(reps)
+    if n_workers % b:
+        raise ValueError(f"B={b} must divide N={n_workers} for equal batch size")
+    size = n_workers // b
+    batches = tuple(frozenset(range(i * size, (i + 1) * size)) for i in range(b))
+    worker_batch = []
+    for i, r in enumerate(reps):
+        worker_batch.extend([i] * r)
+    return Assignment(n_workers, n_workers, batches, tuple(worker_batch))
+
+
+def overlapping_cyclic(n_workers: int, n_batches: int) -> Assignment:
+    """Overlapping batches: same batch size N/B as the balanced policy but
+    batch i starts at offset i * N/B' with B' = N/(N/B) ... concretely we tile
+    N overlapping windows of length N/B with stride N/B_eff < N/B so adjacent
+    batches share units.  We build N/B-sized windows at stride N/n_batches
+    rounded; each worker serves one window (cyclically).
+
+    This realizes the paper's 'partial overlap' regime; the simulator shows it
+    is dominated by the balanced non-overlapping policy (Thm 1 discussion).
+    """
+    if n_workers % n_batches:
+        raise ValueError(f"B={n_batches} must divide N={n_workers}")
+    size = n_workers // n_batches  # same batch size as non-overlapping
+    if size == n_workers:
+        # full diversity is already 'everything everywhere'; no overlap variant
+        return balanced_nonoverlapping(n_workers, 1)
+    n_units = n_workers
+    # one window per worker, stride 1*size//2 (50% overlap), wrapped
+    stride = max(1, size // 2)
+    n_windows = n_units // stride
+    batches = []
+    for w in range(n_windows):
+        start = w * stride
+        batches.append(
+            frozenset((start + k) % n_units for k in range(size))
+        )
+    worker_batch = tuple(j % n_windows for j in range(n_workers))
+    # ensure every window has a worker; if more windows than workers, merge
+    used = sorted(set(worker_batch))
+    remap = {b: i for i, b in enumerate(used)}
+    batches = tuple(batches[b] for b in used)
+    worker_batch = tuple(remap[b] for b in worker_batch)
+    # coverage check: windows at stride covering the ring cover everything
+    return Assignment(n_workers, n_units, batches, worker_batch)
+
+
+def random_assignment(
+    n_workers: int, n_batches: int, seed: int = 0
+) -> Assignment:
+    """Disjoint equal batches, workers assigned uniformly at random (with the
+    constraint that every batch gets >=1 worker)."""
+    if n_workers % n_batches:
+        raise ValueError(f"B={n_batches} must divide N={n_workers}")
+    rng = np.random.default_rng(seed)
+    size = n_workers // n_batches
+    batches = tuple(
+        frozenset(range(i * size, (i + 1) * size)) for i in range(n_batches)
+    )
+    while True:
+        worker_batch = rng.integers(0, n_batches, size=n_workers)
+        if len(set(worker_batch.tolist())) == n_batches:
+            return Assignment(
+                n_workers, n_workers, batches, tuple(int(x) for x in worker_batch)
+            )

@@ -1,0 +1,247 @@
+"""Replicated data parallelism (RDP) — the paper's technique as a first-class
+mesh/collective feature.
+
+The data-parallel extent ``N_d`` of the mesh is factored into
+``(replica=r, batch=B)`` with ``B * r = N_d``:
+
+* all ``r`` devices of a *replica group* (fixed batch index) receive the SAME
+  microbatch — the balanced non-overlapping assignment of Thm 1;
+* the gradient is the mean over the B distinct batches; a batch survives as
+  long as ANY of its replicas survives — the paper's ``max-min`` rule;
+* replicas are placed OUTERMOST so that on a multi-pod mesh the replica axis
+  maps onto the pod axis: replicas of a batch live in different pods, making
+  pod loss non-fatal and (in the steady state) removing gradient traffic from
+  the slow inter-pod links entirely (identical replicas need no reduction).
+
+Aggregation modes:
+
+* ``psum_all``        — baseline: mean over the full (replica, batch) plane.
+* ``weighted``        — straggler-drop weighted psum: dead/dropped devices are
+                        masked; per-batch renormalization keeps the estimate
+                        an exact mean over surviving batches (unbiased,
+                        because replicas hold identical data).
+* ``hierarchical``    — steady-state fast path: psum over ``batch`` only
+                        (replicas already agree); zero replica-axis traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .order_stats import ServiceDistribution, completion_mean, completion_var
+from .policies import divisors
+
+__all__ = [
+    "ReplicationPlan",
+    "make_rdp_mesh",
+    "batch_index_for_data_coord",
+    "aggregate_gradients",
+    "rdp_data_spec",
+]
+
+AggregationMode = Literal["psum_all", "weighted", "hierarchical"]
+
+REPLICA_AXIS = "replica"
+BATCH_AXIS = "batch"
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationPlan:
+    """Factoring of the data-parallel extent into (batch, replica)."""
+
+    n_data: int  # total data-parallel device extent (incl. pod axis)
+    n_batches: int  # B
+
+    def __post_init__(self):
+        if self.n_data <= 0 or self.n_batches <= 0:
+            raise ValueError(f"invalid plan {self}")
+        if self.n_data % self.n_batches:
+            raise ValueError(
+                f"B={self.n_batches} must divide data extent {self.n_data}"
+            )
+
+    @property
+    def replication(self) -> int:
+        return self.n_data // self.n_batches
+
+    @property
+    def is_full_parallelism(self) -> bool:
+        return self.n_batches == self.n_data
+
+    @property
+    def is_full_diversity(self) -> bool:
+        return self.n_batches == 1
+
+    def feasible_alternatives(self) -> list[int]:
+        return divisors(self.n_data)
+
+    def expected_step_stats(
+        self, dist: ServiceDistribution
+    ) -> tuple[float, float]:
+        """(mean, var) of the per-step completion time under the paper's
+        model, treating the B batches as the paper's batches and r as the
+        replication (Thms 2-4)."""
+        return (
+            completion_mean(dist, self.n_data, self.n_batches),
+            completion_var(dist, self.n_data, self.n_batches),
+        )
+
+
+def make_rdp_mesh(
+    plan: ReplicationPlan,
+    model_parallel: int,
+    devices: np.ndarray | None = None,
+) -> Mesh:
+    """Build a mesh with axes (replica, batch, model).
+
+    ``devices`` defaults to all local devices.  The device order is taken
+    pod-major (the order ``jax.devices()`` returns), so with r replicas the
+    replica axis strides across the largest blocks — i.e. across pods when
+    the physical topology is multi-pod.  Replicas of a batch therefore live
+    in different pods (fault isolation + inter-pod traffic elimination).
+    """
+    if devices is None:
+        devices = np.array(jax.devices())
+    devices = np.asarray(devices).reshape(-1)
+    expected = plan.n_data * model_parallel
+    if devices.size != expected:
+        raise ValueError(
+            f"need {expected} devices for plan {plan} x model={model_parallel}, "
+            f"got {devices.size}"
+        )
+    arr = devices.reshape(plan.replication, plan.n_batches, model_parallel)
+    return Mesh(arr, (REPLICA_AXIS, BATCH_AXIS, MODEL_AXIS))
+
+
+def rdp_data_spec(*trailing) -> P:
+    """PartitionSpec for activations under RDP: batch dim is sharded over the
+    ``batch`` axis only and REPLICATED over the ``replica`` axis — that is the
+    assignment unit: every replica group member sees the same data."""
+    return P(BATCH_AXIS, *trailing)
+
+
+def batch_index_for_data_coord(plan: ReplicationPlan, data_coord: int) -> int:
+    """Which batch a flat data-axis coordinate serves (pipeline feed map).
+
+    Flat data coordinates enumerate (replica-major) the (replica, batch)
+    grid: coord = replica * B + batch.
+    """
+    if not 0 <= data_coord < plan.n_data:
+        raise ValueError(f"data coord {data_coord} out of range")
+    return data_coord % plan.n_batches
+
+
+def _check_axes(mesh: Mesh) -> None:
+    for ax in (REPLICA_AXIS, BATCH_AXIS):
+        if ax not in mesh.axis_names:
+            raise ValueError(
+                f"mesh {mesh.axis_names} lacks required axis {ax!r}; build it "
+                "with make_rdp_mesh"
+            )
+
+
+def aggregate_gradients(
+    grads,
+    alive: jax.Array | None = None,
+    mode: AggregationMode = "weighted",
+):
+    """Aggregate per-device gradients inside a shard_map'd step.
+
+    Must be called INSIDE shard_map over a mesh with (replica, batch) axes.
+    ``grads`` is a pytree of local gradient shards (each replica group member
+    computed the same batch, so group members agree up to numerical noise).
+    ``alive`` is a scalar 0/1 float for this device (1 = contributed).
+
+    Returns the pytree of aggregated gradients, identical on every device,
+    equal to the exact mean over surviving batches.  If a whole replica group
+    died, its batch is excluded and the mean renormalizes (the job survives —
+    cf. the coverage rule); callers can detect total batch loss via the
+    returned ``n_batches_used``.
+    """
+    if mode == "psum_all":
+        def agg(g):
+            return jax.lax.pmean(g, (REPLICA_AXIS, BATCH_AXIS))
+        return jax.tree.map(agg, grads), None
+
+    if mode == "hierarchical":
+        # Steady state: replicas hold identical grads; reduce over batch only.
+        def agg(g):
+            return jax.lax.pmean(g, BATCH_AXIS)
+        return jax.tree.map(agg, grads), None
+
+    if mode != "weighted":
+        raise ValueError(f"unknown aggregation mode {mode!r}")
+
+    if alive is None:
+        alive = jnp.float32(1.0)
+    alive = jnp.asarray(alive, jnp.float32)
+    # per replica group: how many members contributed
+    n_alive_in_group = jax.lax.psum(alive, REPLICA_AXIS)
+    group_ok = (n_alive_in_group > 0).astype(jnp.float32)
+    # weight for this device inside its group (0 if group empty)
+    w_member = jnp.where(n_alive_in_group > 0, alive / jnp.maximum(n_alive_in_group, 1.0), 0.0)
+    # number of surviving batches (same value on every device)
+    n_batches_used = jax.lax.psum(group_ok, BATCH_AXIS)
+
+    def agg(g):
+        g = g.astype(jnp.float32) if jnp.issubdtype(g.dtype, jnp.floating) else g
+        # mean within the replica group (survivors only)
+        g_group = jax.lax.psum(g * w_member, REPLICA_AXIS)
+        # mean over surviving batches
+        g_sum = jax.lax.psum(g_group, BATCH_AXIS)
+        return g_sum / jnp.maximum(n_batches_used, 1.0)
+
+    return jax.tree.map(agg, grads), n_batches_used
+
+
+def aggregate_host(
+    grads_per_worker: list,
+    alive: np.ndarray,
+    plan: ReplicationPlan,
+):
+    """Host-side (driver-level) reference aggregation for the virtual-pod
+    runtime and for tests: numpy pytrees, same semantics as
+    :func:`aggregate_gradients` with mode='weighted'.
+
+    ``grads_per_worker[w]`` is the gradient pytree computed by flat data
+    coordinate ``w`` (or None if it produced nothing); ``alive[w]`` marks
+    contribution.  Returns (mean over surviving batches, n_batches_used).
+    """
+    if len(grads_per_worker) != plan.n_data:
+        raise ValueError("need one (possibly None) gradient per data coord")
+    alive = np.asarray(alive, dtype=bool)
+    batch_grads = []
+    for b in range(plan.n_batches):
+        members = [
+            w
+            for w in range(plan.n_data)
+            if batch_index_for_data_coord(plan, w) == b and alive[w]
+            and grads_per_worker[w] is not None
+        ]
+        if not members:
+            continue
+        # replicas agree; average anyway for numerical symmetry
+        leaves = [jax.tree.leaves(grads_per_worker[w]) for w in members]
+        treedef = jax.tree.structure(grads_per_worker[members[0]])
+        mean_leaves = [
+            functools.reduce(lambda a, c: a + c, parts) / len(members)
+            for parts in zip(*leaves)
+        ]
+        batch_grads.append(jax.tree.unflatten(treedef, mean_leaves))
+    if not batch_grads:
+        raise RuntimeError("all batches lost — elastic re-plan required")
+    treedef = jax.tree.structure(batch_grads[0])
+    leaves = [jax.tree.leaves(g) for g in batch_grads]
+    mean_leaves = [
+        functools.reduce(lambda a, c: a + c, parts) / len(batch_grads)
+        for parts in zip(*leaves)
+    ]
+    return jax.tree.unflatten(treedef, mean_leaves), len(batch_grads)

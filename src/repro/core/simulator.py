@@ -1,0 +1,215 @@
+"""Monte-Carlo simulator of the paper's System1.
+
+Two modes:
+
+* :func:`simulate_maxmin` — the paper's completion rule for non-overlapping
+  balanced replication, fully vectorized: ``T = max_i min_j T_ij``.
+* :func:`simulate_coverage` — general rule for ANY :class:`Assignment`
+  (overlapping, unbalanced): completion is the first time the union of
+  finished workers' batches covers the dataset.  Vectorized over trials via a
+  sort + running-coverage scan.
+
+Service times are drawn per (worker) from the size-dependent model: a worker
+serving ``s`` units draws from ``dist.scaled(s)``.
+
+Also provides :class:`StepTimeSimulator` — the runtime-facing generator of
+per-step, per-worker service times (with optional persistent slow nodes and
+transient failures) used by the fault-tolerance harness and the tuner tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .order_stats import ServiceDistribution
+from .policies import Assignment, balanced_nonoverlapping
+
+__all__ = [
+    "SimResult",
+    "simulate_maxmin",
+    "simulate_coverage",
+    "StepTimeSimulator",
+    "FaultEvent",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    samples: np.ndarray  # (n_trials,) completion times
+
+    @property
+    def mean(self) -> float:
+        return float(self.samples.mean())
+
+    @property
+    def var(self) -> float:
+        return float(self.samples.var(ddof=1))
+
+    @property
+    def std(self) -> float:
+        return float(self.samples.std(ddof=1))
+
+    def quantile(self, q: float) -> float:
+        return float(np.quantile(self.samples, q))
+
+    @property
+    def stderr(self) -> float:
+        return float(self.samples.std(ddof=1) / np.sqrt(len(self.samples)))
+
+
+def simulate_maxmin(
+    dist: ServiceDistribution,
+    n_workers: int,
+    n_batches: int,
+    n_trials: int = 20_000,
+    seed: int = 0,
+) -> SimResult:
+    """Completion time of balanced non-overlapping replication (fast path)."""
+    if n_workers % n_batches:
+        raise ValueError(f"B={n_batches} must divide N={n_workers}")
+    r = n_workers // n_batches
+    per_batch = dist.scaled(n_workers / n_batches)
+    rng = np.random.default_rng(seed)
+    t = per_batch.sample(rng, (n_trials, n_batches, r))
+    completion = t.min(axis=2).max(axis=1)
+    return SimResult(completion)
+
+
+def simulate_coverage(
+    dist: ServiceDistribution,
+    assignment: Assignment,
+    n_trials: int = 20_000,
+    seed: int = 0,
+) -> SimResult:
+    """Completion time under the coverage rule for arbitrary assignments.
+
+    Vectorized: draw all worker times, argsort per trial, walk the sorted
+    order accumulating covered units, record the time when coverage hits N.
+    The walk is a python loop over workers (N is small, <=64) but vectorized
+    over trials.
+    """
+    rng = np.random.default_rng(seed)
+    loads = assignment.worker_load()  # (N,)
+    n = assignment.n_workers
+    # scaled sampling: worker j draws from dist.scaled(load_j)
+    base = dist.scaled(1.0)
+    # sample unit-load times then rescale: for Exp/SExp, scaled(s) is an
+    # affine transform of the unit draw ONLY for Exp (rate mu/s <=> s * unit
+    # draw).  SExp(s*Delta, mu/s) = s * SExp(Delta, mu) likewise.  So we can
+    # draw unit times and multiply by the load.
+    unit = base.sample(rng, (n_trials, n))
+    times = unit * loads[None, :]
+
+    cov = assignment.coverage_matrix()  # (N, units) bool
+    order = np.argsort(times, axis=1)  # (trials, N)
+    sorted_times = np.take_along_axis(times, order, axis=1)
+    completion = np.empty(n_trials, dtype=float)
+    # running coverage via bit-packing for speed
+    packed = np.packbits(cov, axis=1)  # (N, ceil(units/8)) uint8
+    full = np.packbits(np.ones(assignment.n_units, dtype=bool))
+    for t in range(n_trials):
+        acc = np.zeros_like(full)
+        done_time = sorted_times[t, -1]
+        for k in range(n):
+            acc |= packed[order[t, k]]
+            if np.array_equal(acc & full, full):
+                done_time = sorted_times[t, k]
+                break
+        completion[t] = done_time
+    return SimResult(completion)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """A scheduled fault: worker ``worker`` is dead during steps
+    [start_step, end_step)."""
+
+    worker: int
+    start_step: int
+    end_step: int
+
+
+class StepTimeSimulator:
+    """Per-step service-time generator for the runtime harness.
+
+    Models three straggler phenomena on top of the base distribution:
+
+    * i.i.d. randomness (the paper's model),
+    * persistent slow workers (multiplicative slowdown),
+    * transient faults (worker produces no result during the event).
+
+    Returns, per step, an array of service times (np.inf for dead workers).
+    """
+
+    def __init__(
+        self,
+        dist: ServiceDistribution,
+        n_workers: int,
+        seed: int = 0,
+        slow_workers: dict[int, float] | None = None,
+        faults: Sequence[FaultEvent] = (),
+    ):
+        self._dist = dist
+        self._n = n_workers
+        self._rng = np.random.default_rng(seed)
+        self._slow = dict(slow_workers or {})
+        for w in self._slow:
+            if not 0 <= w < n_workers:
+                raise ValueError(f"slow worker id {w} out of range")
+        self._faults = list(faults)
+        self.step = 0
+
+    def next_step(self, loads: np.ndarray | None = None) -> np.ndarray:
+        """Draw one step of per-worker service times.
+
+        ``loads``: units of data per worker (defaults to 1.0 each); service
+        scales per the size-dependent model.
+        """
+        if loads is None:
+            loads = np.ones(self._n)
+        loads = np.asarray(loads, dtype=float)
+        if loads.shape != (self._n,):
+            raise ValueError(f"loads shape {loads.shape} != ({self._n},)")
+        unit = self._dist.sample(self._rng, (self._n,))
+        times = unit * loads
+        for w, factor in self._slow.items():
+            times[w] *= factor
+        for ev in self._faults:
+            if ev.start_step <= self.step < ev.end_step:
+                times[ev.worker] = np.inf
+        self.step += 1
+        return times
+
+    def alive_mask(self) -> np.ndarray:
+        mask = np.ones(self._n, dtype=bool)
+        for ev in self._faults:
+            if ev.start_step <= self.step < ev.end_step:
+                mask[ev.worker] = False
+        return mask
+
+
+def completion_from_step_times(
+    times: np.ndarray, assignment: Assignment
+) -> tuple[float, np.ndarray]:
+    """Apply the paper's completion rule to one step of worker times.
+
+    Returns (completion_time, used_mask) where used_mask marks the workers
+    whose results the master actually consumed (the fastest replica of each
+    batch).  Workers with np.inf (dead) are never used; if a batch has no
+    finite replica the completion time is inf (job cannot finish -> the
+    elastic layer must re-plan).
+    """
+    b = assignment.n_batches
+    used = np.zeros(assignment.n_workers, dtype=bool)
+    batch_done = np.full(b, np.inf)
+    for batch in range(b):
+        members = [j for j, wb in enumerate(assignment.worker_batch) if wb == batch]
+        t = times[members]
+        k = int(np.argmin(t))
+        if np.isfinite(t[k]):
+            batch_done[batch] = t[k]
+            used[members[k]] = True
+    return float(batch_done.max()), used

@@ -1,0 +1,137 @@
+"""The diversity–parallelism spectrum optimizer (Thms 2–4, Fig. 2).
+
+Given N workers and a fitted service distribution, choose the number of
+batches B (equivalently the replication factor r = N/B):
+
+* B = 1  -> full diversity (everything replicated everywhere)
+* B = N  -> full parallelism (no replication)
+
+For SExp the expected completion time  E[T](B) = N*Delta/B + H_B/mu  has an
+interior optimum governed by the product Delta*mu (paper Fig. 2); for Exp the
+optimum is B=1 (Thm 2); the variance is minimized at B=1 for both (Thm 4) —
+so mean-optimal and variance-optimal B generally DIFFER, which is the paper's
+trade-off headline.  :func:`optimize` exposes all of it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+from .order_stats import (
+    Exponential,
+    ServiceDistribution,
+    ShiftedExponential,
+    completion_mean,
+    completion_quantile,
+    completion_var,
+)
+from .policies import divisors
+
+__all__ = ["SpectrumPoint", "SpectrumResult", "sweep", "optimize", "continuous_optimum"]
+
+Metric = Literal["mean", "var", "p99", "p999"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectrumPoint:
+    n_batches: int
+    replication: int
+    mean: float
+    var: float
+    p99: float
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.var)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectrumResult:
+    points: tuple[SpectrumPoint, ...]
+    best_mean: SpectrumPoint
+    best_var: SpectrumPoint
+    best_p99: SpectrumPoint
+
+    @property
+    def tradeoff(self) -> bool:
+        """True when the mean-optimal and var-optimal B differ (paper §III)."""
+        return self.best_mean.n_batches != self.best_var.n_batches
+
+    def pareto_front(self) -> tuple[SpectrumPoint, ...]:
+        """Non-dominated (mean, var) points, ascending in mean."""
+        pts = sorted(self.points, key=lambda p: (p.mean, p.var))
+        front: list[SpectrumPoint] = []
+        best_var = math.inf
+        for p in pts:
+            if p.var < best_var - 1e-15:
+                front.append(p)
+                best_var = p.var
+        return tuple(front)
+
+
+def sweep(
+    dist: ServiceDistribution,
+    n_workers: int,
+    feasible_b: Sequence[int] | None = None,
+) -> SpectrumResult:
+    """Evaluate every feasible B (divisors of N by default) in closed form."""
+    bs = list(feasible_b) if feasible_b is not None else divisors(n_workers)
+    if not bs:
+        raise ValueError("no feasible B values")
+    pts = []
+    for b in bs:
+        if n_workers % b:
+            raise ValueError(f"B={b} infeasible: must divide N={n_workers}")
+        pts.append(
+            SpectrumPoint(
+                n_batches=b,
+                replication=n_workers // b,
+                mean=completion_mean(dist, n_workers, b),
+                var=completion_var(dist, n_workers, b),
+                p99=completion_quantile(dist, n_workers, b, 0.99),
+            )
+        )
+    points = tuple(pts)
+    return SpectrumResult(
+        points=points,
+        best_mean=min(points, key=lambda p: p.mean),
+        best_var=min(points, key=lambda p: p.var),
+        best_p99=min(points, key=lambda p: p.p99),
+    )
+
+
+def optimize(
+    dist: ServiceDistribution,
+    n_workers: int,
+    metric: Metric = "mean",
+    feasible_b: Sequence[int] | None = None,
+) -> SpectrumPoint:
+    """argmin_B of the requested metric over feasible B (Thm 3 Eq. (4))."""
+    res = sweep(dist, n_workers, feasible_b)
+    if metric == "mean":
+        return res.best_mean
+    if metric == "var":
+        return res.best_var
+    if metric == "p99":
+        return res.best_p99
+    if metric == "p999":
+        return min(
+            res.points,
+            key=lambda p: completion_quantile(dist, n_workers, p.n_batches, 0.999),
+        )
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def continuous_optimum(dist: ShiftedExponential, n_workers: int) -> float:
+    """Continuous relaxation of Thm 3: treating H_B ~ ln B + gamma,
+    d/dB [N Delta / B + (ln B + gamma)/mu] = 0  =>  B* = N * Delta * mu.
+
+    Clipped to [1, N].  Useful as a sanity anchor for the discrete argmin and
+    to expose the paper's 'larger Delta*mu -> more parallelism' monotonicity.
+    """
+    if not isinstance(dist, ShiftedExponential):
+        raise TypeError("continuous optimum defined for SExp only (Exp -> B*=1)")
+    b_star = n_workers * dist.delta * dist.mu
+    return min(max(b_star, 1.0), float(n_workers))

@@ -1,0 +1,140 @@
+"""Online diversity–parallelism tuner.
+
+Closes the loop the paper leaves open: *where do Delta and mu come from?*
+The tuner ingests per-step, per-worker service times (censored when the step
+completed before slow workers finished), maintains a sliding window, fits the
+service distribution (core.estimator), and re-solves the spectrum problem
+(core.spectrum).  A re-plan is emitted only when the predicted improvement
+clears a hysteresis threshold and a cooldown has elapsed — re-factoring the
+mesh is not free (it flushes compiled executables and reshuffles the data
+pipeline), so we only move for real wins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Literal, Optional
+
+import numpy as np
+
+from .estimator import FitResult, fit_best
+from .replication import ReplicationPlan
+from .spectrum import optimize, sweep
+
+__all__ = ["TunerConfig", "RescalePlan", "StragglerTuner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TunerConfig:
+    window_steps: int = 50  # sliding window of step observations
+    min_samples: int = 64  # don't fit with fewer points
+    improvement_threshold: float = 0.10  # >=10% predicted mean win to move
+    cooldown_steps: int = 20  # steps between re-plans
+    metric: Literal["mean", "var", "p99"] = "mean"
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_batches: int
+    new_batches: int
+    predicted_old: float
+    predicted_new: float
+    fit: FitResult
+    step: int
+
+    @property
+    def predicted_improvement(self) -> float:
+        if self.predicted_old <= 0:
+            return 0.0
+        return 1.0 - self.predicted_new / self.predicted_old
+
+
+class StragglerTuner:
+    def __init__(self, plan: ReplicationPlan, config: TunerConfig | None = None):
+        self.plan = plan
+        self.config = config or TunerConfig()
+        self._times: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
+        self._censored: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
+        self._step = 0
+        self._last_replan = -(10**9)
+        self.last_fit: Optional[FitResult] = None
+
+    def observe(
+        self, step_times: np.ndarray, censored: np.ndarray | None = None
+    ) -> None:
+        """Record one step of per-worker service times.
+
+        ``step_times`` are normalized to PER-UNIT-OF-DATA times (divide the
+        measured time by the worker's batch size) so that fits are comparable
+        across different B.  Infinite times (dead workers) are recorded as
+        censored at the max finite time.
+        """
+        t = np.asarray(step_times, dtype=float).copy()
+        c = (
+            np.zeros(t.shape, dtype=bool)
+            if censored is None
+            else np.asarray(censored, dtype=bool).copy()
+        )
+        dead = ~np.isfinite(t)
+        if dead.all():
+            return  # nothing usable this step
+        if dead.any():
+            t[dead] = t[~dead].max()
+            c |= dead
+        self._times.append(t)
+        self._censored.append(c)
+        self._step += 1
+
+    @property
+    def n_samples(self) -> int:
+        return int(sum(t.size for t in self._times))
+
+    def fit(self) -> Optional[FitResult]:
+        if self.n_samples < self.config.min_samples:
+            return None
+        x = np.concatenate([t.ravel() for t in self._times])
+        c = np.concatenate([m.ravel() for m in self._censored])
+        if (~c).sum() == 0:
+            return None
+        self.last_fit = fit_best(x, c)
+        return self.last_fit
+
+    def maybe_replan(self) -> Optional[RescalePlan]:
+        """Fit, re-optimize B, and emit a plan if it clears the hysteresis."""
+        if self._step - self._last_replan < self.config.cooldown_steps:
+            return None
+        fit = self.fit()
+        if fit is None:
+            return None
+        res = sweep(fit.dist, self.plan.n_data)
+        cur = next(
+            p for p in res.points if p.n_batches == self.plan.n_batches
+        )
+        best = optimize(fit.dist, self.plan.n_data, metric=self.config.metric)
+        metric_of = {
+            "mean": lambda p: p.mean,
+            "var": lambda p: p.var,
+            "p99": lambda p: p.p99,
+        }[self.config.metric]
+        if best.n_batches == self.plan.n_batches:
+            return None
+        improvement = 1.0 - metric_of(best) / max(metric_of(cur), 1e-30)
+        if improvement < self.config.improvement_threshold:
+            return None
+        self._last_replan = self._step
+        return RescalePlan(
+            old_batches=self.plan.n_batches,
+            new_batches=best.n_batches,
+            predicted_old=metric_of(cur),
+            predicted_new=metric_of(best),
+            fit=fit,
+            step=self._step,
+        )
+
+    def apply(self, plan: RescalePlan) -> ReplicationPlan:
+        """Commit a re-plan (the caller re-factors the mesh + pipeline)."""
+        self.plan = ReplicationPlan(
+            n_data=self.plan.n_data, n_batches=plan.new_batches
+        )
+        return self.plan

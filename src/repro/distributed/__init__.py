@@ -1,0 +1,18 @@
+from repro.distributed.collectives import (
+    allreduce_bytes,
+    hierarchical_allreduce,
+    replication_aware_pmean,
+)
+from repro.distributed.elastic import RescaleExecutor, RuntimeTopology
+from repro.distributed.fault import FaultDecision, FaultManager, StragglerDetector
+
+__all__ = [
+    "allreduce_bytes",
+    "hierarchical_allreduce",
+    "replication_aware_pmean",
+    "RescaleExecutor",
+    "RuntimeTopology",
+    "FaultDecision",
+    "FaultManager",
+    "StragglerDetector",
+]

@@ -1,0 +1,84 @@
+"""Replication-aware collectives + byte accounting.
+
+The beyond-paper optimization (DESIGN.md §2.4): members of a replica group
+hold IDENTICAL gradients, so
+
+* ``replication_aware_pmean``  — reduces over the ``batch`` axis only; the
+  ``replica`` axis (mapped onto pods) carries ZERO gradient traffic in the
+  steady state;
+* ``hierarchical_allreduce``   — reduce-scatter over batch + all-gather over
+  batch, expressed with explicit shard_map collectives (predictable HLO for
+  byte accounting);
+* :func:`allreduce_bytes` — analytic per-device byte model used by the
+  benchmarks and the §Perf iteration log.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replication import BATCH_AXIS, REPLICA_AXIS, ReplicationPlan
+
+__all__ = [
+    "replication_aware_pmean",
+    "hierarchical_allreduce",
+    "allreduce_bytes",
+]
+
+
+def replication_aware_pmean(tree):
+    """Steady-state RDP gradient mean: batch axis only (call inside shard_map)."""
+    return jax.tree.map(lambda g: jax.lax.pmean(g, BATCH_AXIS), tree)
+
+
+def hierarchical_allreduce(tree):
+    """reduce_scatter(batch) -> all_gather(batch): same result as pmean but
+    exposes the two phases so layout/overlap can be tuned; replica axis idle."""
+
+    def rs_ag(g):
+        flat = g.reshape(-1)
+        # pad to a multiple of the batch-axis size
+        n = jax.lax.psum(1, BATCH_AXIS)
+        pad = (-flat.shape[0]) % n
+        flat = jnp.pad(flat, (0, pad))
+        piece = jax.lax.psum_scatter(
+            flat.reshape(n, -1), BATCH_AXIS, scatter_dimension=0, tiled=False
+        )
+        full = jax.lax.all_gather(piece, BATCH_AXIS, axis=0, tiled=False)
+        out = full.reshape(-1)[: g.size].reshape(g.shape)
+        return out / n
+
+    return jax.tree.map(rs_ag, tree)
+
+
+def allreduce_bytes(
+    n_bytes: int, plan: ReplicationPlan, mode: str = "rdp"
+) -> dict[str, float]:
+    """Analytic per-device collective bytes for a gradient of ``n_bytes``.
+
+    Ring all-reduce over k devices moves 2 * (k-1)/k * n_bytes per device.
+    Returns bytes split into intra-group (fast, e.g. intra-pod ICI) and
+    cross-replica (slow, e.g. inter-pod DCI) assuming ``replica`` maps onto
+    the slow tier.
+
+    modes: 'plain' (all-reduce over all N_d), 'rdp' (batch axis only),
+           'weighted' (rdp + small replica-axis mask reconcile).
+    """
+    n = plan.n_data
+    b = plan.n_batches
+    r = plan.replication
+    ring = lambda k: 0.0 if k <= 1 else 2.0 * (k - 1) / k * n_bytes
+    if mode == "plain":
+        # ring over all n workers; the slow tier carries ~1/r of the ring hops
+        total = ring(n)
+        cross = total * (r - 1) / max(n - 1, 1)
+        return {"intra": total - cross, "cross": cross, "total": total}
+    if mode == "rdp":
+        return {"intra": ring(b), "cross": 0.0, "total": ring(b)}
+    if mode == "weighted":
+        # mask-weighted reconcile: one extra all-reduce over replica of the
+        # already-reduced mean — only when masks differ; upper bound here
+        cross = ring(r)
+        return {"intra": ring(b), "cross": cross, "total": ring(b) + cross}
+    raise ValueError(f"unknown mode {mode}")

@@ -1,0 +1,62 @@
+"""Elastic rescaling: apply a RescalePlan (tuner) or a FaultDecision
+(fault manager) to produce the next runtime configuration.
+
+The state that survives a rescale is exactly (params, opt_state, data step)
+— all placement-agnostic — so the executor's job is bookkeeping: pick the
+new (N', B'), validate divisibility, and describe the new mesh factoring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.policies import divisors
+from repro.core.replication import ReplicationPlan
+from repro.core.spectrum import optimize
+from repro.core.order_stats import ServiceDistribution
+
+__all__ = ["RescaleExecutor", "RuntimeTopology"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeTopology:
+    plan: ReplicationPlan
+    generation: int  # bumped on every rescale (invalidates compiled steps)
+
+    @property
+    def n_workers(self) -> int:
+        return self.plan.n_data
+
+
+@dataclasses.dataclass
+class RescaleExecutor:
+    topology: RuntimeTopology
+
+    def apply_replan(self, new_batches: int) -> RuntimeTopology:
+        plan = ReplicationPlan(
+            n_data=self.topology.plan.n_data, n_batches=new_batches
+        )
+        self.topology = RuntimeTopology(plan, self.topology.generation + 1)
+        return self.topology
+
+    def shrink(
+        self,
+        n_lost: int,
+        dist: Optional[ServiceDistribution] = None,
+    ) -> RuntimeTopology:
+        """Lose ``n_lost`` workers: choose the largest feasible N' <= N-lost
+        and re-optimize B for it (falling back to the old B if infeasible)."""
+        old = self.topology.plan
+        n_new = old.n_data - n_lost
+        if n_new < 1:
+            raise RuntimeError("no workers left")
+        # keep it simple: require N' to retain at least one feasible B
+        feas = divisors(n_new)
+        if dist is not None:
+            b_new = optimize(dist, n_new, metric="mean").n_batches
+        else:
+            b_new = max(b for b in feas if b <= old.n_batches)
+        plan = ReplicationPlan(n_data=n_new, n_batches=b_new)
+        self.topology = RuntimeTopology(plan, self.topology.generation + 1)
+        return self.topology

@@ -1,0 +1,101 @@
+"""Fault tolerance + straggler detection (control plane).
+
+On a real pod the signals are host heartbeats and per-step barrier timings;
+here the same logic runs against :class:`repro.core.simulator.StepTimeSimulator`
+so every policy is CPU-testable.
+
+* :class:`StragglerDetector` — one-step-delayed control (DESIGN.md §2):
+  flags workers whose recent service times are k-sigma/medians above the
+  fleet, emits the ``alive`` mask consumed by the weighted psum.
+* :class:`FaultManager` — tracks hard failures (missed heartbeats), decides
+  between *mask* (batch still covered by surviving replicas) and *elastic
+  restart* (a whole replica group lost -> re-plan B from checkpoint).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.replication import ReplicationPlan, batch_index_for_data_coord
+
+__all__ = ["StragglerDetector", "FaultManager", "FaultDecision"]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    n_workers: int
+    window: int = 20
+    threshold: float = 3.0  # flag if time > threshold * fleet median
+    min_history: int = 5
+
+    def __post_init__(self):
+        self._hist: deque[np.ndarray] = deque(maxlen=self.window)
+
+    def observe(self, step_times: np.ndarray) -> None:
+        t = np.asarray(step_times, dtype=float)
+        if t.shape != (self.n_workers,):
+            raise ValueError(f"expected ({self.n_workers},), got {t.shape}")
+        self._hist.append(t)
+
+    def drop_mask(self) -> np.ndarray:
+        """True = keep.  Workers persistently slower than threshold x median
+        get dropped from the NEXT step's aggregation (their replica group
+        still covers the batch)."""
+        if len(self._hist) < self.min_history:
+            return np.ones(self.n_workers, dtype=bool)
+        h = np.stack(self._hist)  # (w, n)
+        finite = np.where(np.isfinite(h), h, np.nan)
+        per_worker = np.nanmedian(finite, axis=0)
+        fleet = np.nanmedian(per_worker)
+        mask = per_worker <= self.threshold * fleet
+        dead = np.isnan(per_worker)
+        return mask & ~dead
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultDecision:
+    kind: str  # 'ok' | 'mask' | 'replan'
+    alive: np.ndarray  # per-worker keep mask
+    lost_batches: tuple[int, ...] = ()
+
+    @property
+    def needs_restart(self) -> bool:
+        return self.kind == "replan"
+
+
+@dataclasses.dataclass
+class FaultManager:
+    plan: ReplicationPlan
+    heartbeat_misses_fatal: int = 3
+
+    def __post_init__(self):
+        self._missed = np.zeros(self.plan.n_data, dtype=int)
+
+    def heartbeat(self, responded: np.ndarray) -> None:
+        responded = np.asarray(responded, dtype=bool)
+        self._missed = np.where(responded, 0, self._missed + 1)
+
+    def dead_mask(self) -> np.ndarray:
+        """True = dead."""
+        return self._missed >= self.heartbeat_misses_fatal
+
+    def decide(self, straggler_keep: Optional[np.ndarray] = None) -> FaultDecision:
+        """Combine hard faults + straggler drops into the step decision."""
+        alive = ~self.dead_mask()
+        if straggler_keep is not None:
+            alive = alive & np.asarray(straggler_keep, dtype=bool)
+        # which batches still have at least one live replica?
+        covered = np.zeros(self.plan.n_batches, dtype=bool)
+        for w in range(self.plan.n_data):
+            if alive[w]:
+                covered[batch_index_for_data_coord(self.plan, w)] = True
+        lost = tuple(int(b) for b in np.nonzero(~covered)[0])
+        if lost:
+            return FaultDecision("replan", alive, lost)
+        if not alive.all():
+            return FaultDecision("mask", alive)
+        return FaultDecision("ok", alive)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for split-KV decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q: (b, h, d); caches (b, S_max, h, d) (GQA pre-expanded);
+    cache_len: int — valid prefix length.  Returns (b, h, d)."""
+    b, h, d = q.shape
+    smax = k_cache.shape[1]
+    logits = jnp.einsum(
+        "bhd,bshd->bhs", q * (d ** -0.5), k_cache
+    ).astype(jnp.float32)
+    mask = jnp.arange(smax)[None, None, :] < cache_len
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhs,bshd->bhd", w, v_cache)

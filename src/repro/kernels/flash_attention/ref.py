@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Numerics contract (shared with kernel.py and the model's XLA path):
+fp32 logits/softmax, bf16 (or input-dtype) weights applied to V, causal mask
+by absolute position with ``q_offset``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, q_offset: int = 0):
+    """q: (b, sq, h, d); k, v: (b, skv, h, d) — GQA pre-expanded.
+    Returns (b, sq, h, d) in q.dtype."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    logits = jnp.einsum(
+        "bqhd,bshd->bhqs", q * (d ** -0.5), k
+    ).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        logits = jnp.where((qpos >= kpos)[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the chunked SSD scan kernel: the sequential
+recurrence (repro.models.ssm.ssd_sequential re-exported with the kernel's
+calling convention)."""
+
+from __future__ import annotations
+
+from repro.models.ssm import ssd_sequential
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip):
+    """x (B,S,H,P); dt (B,S,H); a_log (H,); b,c (B,S,G,N); d_skip (H,).
+    Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    return ssd_sequential(x, dt, a_log, b, c, d_skip)

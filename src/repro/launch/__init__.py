@@ -1,0 +1,20 @@
+from repro.launch.mesh import (
+    dp_axes_of,
+    make_production_mesh,
+    make_rdp_production_mesh,
+)
+from repro.launch.policies import auto_policy
+from repro.launch.specs import input_specs, params_shapes
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+
+__all__ = [
+    "auto_policy",
+    "dp_axes_of",
+    "input_specs",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_production_mesh",
+    "make_rdp_production_mesh",
+    "make_train_step",
+    "params_shapes",
+]

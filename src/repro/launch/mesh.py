@@ -1,0 +1,38 @@
+"""Mesh construction (functions only — importing this module never touches
+jax device state)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_rdp_production_mesh", "dp_axes_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The required production meshes: 16x16 single pod (256 chips) or
+    2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a production mesh ('pod' extends data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data", "batch", "replica"))
+
+
+def make_rdp_production_mesh(n_batches: int, *, multi_pod: bool = False):
+    """Production mesh with the data extent factored per the paper:
+    (replica, batch, model).  Replica strides across pods (fault isolation +
+    inter-pod traffic relief — DESIGN.md §2.4)."""
+    from repro.core.replication import ReplicationPlan, make_rdp_mesh
+
+    n_data = 32 if multi_pod else 16
+    plan = ReplicationPlan(n_data=n_data, n_batches=n_batches)
+    devices = np.array(jax.devices())
+    need = n_data * 16
+    if devices.size < need:
+        raise RuntimeError(f"need {need} devices, have {devices.size}")
+    return make_rdp_mesh(plan, model_parallel=16, devices=devices[:need]), plan

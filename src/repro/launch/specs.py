@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every model input
+(dry-run: weak-type-correct, shardable, zero device allocation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell, ShardingPolicy
+from repro.data.pipeline import make_batch_shapes
+
+__all__ = ["input_specs", "params_shapes"]
+
+
+def params_shapes(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    from repro.models import init_params
+
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy, mesh):
+    """Returns (args_sds, args_pspecs) for the step function of this cell.
+
+    train:   (params, opt_state, batch, lr)
+    prefill: (params, batch)
+    decode:  (params, state, token, cache_len)
+    """
+    from repro.models import decode_state_shapes, decode_state_specs
+    from repro.models import param_specs as model_param_specs
+    from repro.optim import AdamWConfig, state_specs as opt_state_specs
+
+    dp_total = 1
+    for a in policy.dp_axes:
+        dp_total *= mesh.shape[a]
+
+    sds = jax.ShapeDtypeStruct
+    shapes = make_batch_shapes(cfg, cell)
+    gb = next(iter(shapes.values()))[0]
+    batch_lead = policy.dp_axes if (gb % dp_total == 0 and gb >= dp_total) else None
+
+    def batch_sds():
+        out = {}
+        for name, shape in shapes.items():
+            dt = (
+                jnp.int32
+                if name in ("tokens", "labels", "token")
+                else jnp.bfloat16
+            )
+            out[name] = sds(shape, dt)
+        return out
+
+    def batch_ps():
+        return {
+            name: P(batch_lead, *([None] * (len(shape) - 1)))
+            for name, shape in shapes.items()
+        }
+
+    pshapes = params_shapes(cfg)
+    pspecs = model_param_specs(cfg, policy)
+
+    if cell.kind == "train":
+        ocfg = AdamWConfig()
+        from repro.optim import init as opt_init
+
+        oshapes = jax.eval_shape(lambda p: opt_init(p, ocfg), pshapes)
+        ospecs = opt_state_specs(pspecs, ocfg)
+        args = (pshapes, oshapes, batch_sds(), sds((), jnp.float32))
+        specs = (pspecs, ospecs, batch_ps(), P())
+        return args, specs
+
+    if cell.kind == "prefill":
+        return (pshapes, batch_sds()), (pspecs, batch_ps())
+
+    if cell.kind == "decode":
+        state_sh = decode_state_shapes(cfg, gb, cell.seq_len)
+        state_ps = decode_state_specs(
+            cfg, policy, batch_shardable=batch_lead is not None
+        )
+        tok = sds((gb, 1), jnp.int32)
+        tok_ps = P(batch_lead, None)
+        args = (pshapes, state_sh, tok, sds((), jnp.int32))
+        specs = (pspecs, state_ps, tok_ps, P())
+        return args, specs
+
+    raise ValueError(cell.kind)

@@ -1,0 +1,107 @@
+"""Step-function factories: the compiled units of work.
+
+``make_train_step`` builds the full training step — value_and_grad over the
+(micro-batched) loss, fp32 gradient accumulation, AdamW — as one jittable
+function.  The gradient mean over the data axes is GSPMD-implicit (batch is
+sharded over dp, loss is a mean), so no explicit psum appears here; the RDP
+weighted-psum variant lives in repro.core.replication and is exercised via
+shard_map in the RDP runtime and tests.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell, ShardingPolicy
+from repro.models import Shard, decode_step, prefill, train_loss
+from repro.optim import AdamWConfig
+from repro.optim import update as adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    policy: ShardingPolicy,
+    mesh=None,
+    adamw: AdamWConfig = AdamWConfig(),
+) -> Callable:
+    shard = Shard(mesh, policy)
+    n_micro = policy.num_microbatches
+
+    def loss_fn(params, batch):
+        loss, metrics = train_loss(cfg, shard, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, lr):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, met), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / n_micro, acc, g
+                )
+                return acc, (l, met)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, micro)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, lr, adamw
+        )
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss_total"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(
+    cfg: ArchConfig, policy: ShardingPolicy, mesh=None, max_len: int | None = None
+) -> Callable:
+    shard = Shard(mesh, policy)
+
+    def prefill_step(params, batch):
+        key = "frames" if cfg.family == "audio" else "tokens"
+        seq = batch[key].shape[1]
+        if cfg.family == "audio":
+            # prefill for enc-dec: encode + one decoder step from BOS
+            from repro.models import whisper as W
+
+            enc = W.encode(cfg, shard, params, batch["frames"])
+            logits = W.decode_train(cfg, shard, params, batch["tokens"], enc)
+            return shard.logits(logits[:, -1:])
+        logits, state = prefill(
+            cfg, shard, params, batch, max_len=max_len or seq
+        )
+        return logits, state
+
+    return prefill_step
+
+
+def make_decode_step(
+    cfg: ArchConfig, policy: ShardingPolicy, mesh=None
+) -> Callable:
+    shard = Shard(mesh, policy)
+
+    def step(params, state, token, cache_len):
+        return decode_step(cfg, shard, params, state, token, cache_len)
+
+    return step

@@ -1,0 +1,337 @@
+"""End-to-end training driver with the paper's replication runtime.
+
+Execution model (DESIGN.md §2): within a pod, a compiled SPMD ``train_step``;
+ACROSS pods/hosts, the master–worker dynamics of the paper.  On this CPU
+container the workers are *virtual*: each of the N workers is a data-axis
+coordinate whose gradient work is actually executed (grads are real, one
+compute per distinct batch since replicas are bit-identical) and whose
+service time is drawn from the calibrated straggler model
+(core.simulator.StepTimeSimulator).  The master applies the paper's
+completion rule (fastest replica per batch), aggregates, steps the
+optimizer, advances a SIMULATED wall clock, feeds the tuner, reacts to
+faults, and checkpoints.
+
+This gives real loss curves against simulated time — exactly what is needed
+to reproduce Fig. 2 style results on an actual training workload, and it is
+the same control plane that would drive pods on real hardware.
+
+Run:  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+          --steps 100 --workers 8 --batches 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core import (
+    Exponential,
+    FaultEvent,
+    ReplicationPlan,
+    ShiftedExponential,
+    StepTimeSimulator,
+    StragglerTuner,
+    TunerConfig,
+    aggregate_host,
+    balanced_nonoverlapping,
+    batch_index_for_data_coord,
+    completion_from_step_times,
+)
+from repro.data import TokenPipeline
+from repro.distributed import FaultManager, StragglerDetector
+from repro.models import Shard, init_params, train_loss
+from repro.optim import AdamWConfig, init as opt_init, update as opt_update
+from repro.optim import warmup_cosine
+from repro.optim.compression import compressed_reduce_host, init_error_state
+
+__all__ = ["TrainerConfig", "Trainer", "TrainResult"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    arch: str = "qwen2-0.5b"
+    reduced: bool = True
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 32
+    n_workers: int = 8  # the paper's N (virtual pods)
+    n_batches: int = 4  # the paper's B (replication r = N/B)
+    lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+    # straggler model (per unit of data)
+    service: str = "sexp"  # 'exp' | 'sexp'
+    delta: float = 1.0
+    mu: float = 2.0
+    slow_workers: Optional[dict[int, float]] = None
+    faults: tuple[FaultEvent, ...] = ()
+    # control plane
+    tuner: bool = False
+    tuner_metric: str = "mean"
+    drop_stragglers: bool = True
+    grad_compression: bool = False
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    sim_times: list  # per-step completion time (simulated seconds)
+    wall_time: float
+    plan_history: list  # (step, B)
+    events: list  # strings
+    final_plan: ReplicationPlan
+
+    @property
+    def total_sim_time(self) -> float:
+        return float(np.sum(self.sim_times))
+
+
+class Trainer:
+    def __init__(self, tc: TrainerConfig):
+        self.tc = tc
+        cfg = get_config(tc.arch)
+        if tc.reduced:
+            cfg = reduced_config(cfg)
+        self.cfg = cfg
+        self.plan = ReplicationPlan(n_data=tc.n_workers, n_batches=tc.n_batches)
+        cell = ShapeCell("driver", tc.seq_len, tc.global_batch, "train")
+        self.pipeline = TokenPipeline(cfg, cell, seed=tc.seed)
+        self.shard = Shard.local()
+        key = jax.random.PRNGKey(tc.seed)
+        self.params = init_params(key, cfg)
+        self.adamw = AdamWConfig()
+        self.opt_state = opt_init(self.params, self.adamw)
+        self.schedule = warmup_cosine(tc.lr, tc.warmup, tc.steps)
+        if tc.service == "exp":
+            self.dist = Exponential(mu=tc.mu)
+        else:
+            self.dist = ShiftedExponential(delta=tc.delta, mu=tc.mu)
+        self.sim = StepTimeSimulator(
+            self.dist,
+            tc.n_workers,
+            seed=tc.seed + 1,
+            slow_workers=tc.slow_workers,
+            faults=tc.faults,
+        )
+        self.tuner = StragglerTuner(
+            self.plan, TunerConfig(metric=tc.tuner_metric)
+        )
+        self.detector = StragglerDetector(tc.n_workers)
+        self.faultmgr = FaultManager(self.plan)
+        self.ckpt = (
+            Checkpointer(tc.checkpoint_dir) if tc.checkpoint_dir else None
+        )
+        self.error_state = (
+            [init_error_state(self.params) for _ in range(tc.n_workers)]
+            if tc.grad_compression
+            else None
+        )
+
+        def grad_fn(params, batch):
+            def loss_fn(p):
+                loss, m = train_loss(self.cfg, self.shard, p, batch)
+                return loss, m
+
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+            return loss, g
+
+        self._grad_fn = jax.jit(grad_fn)
+        self._opt_fn = jax.jit(
+            lambda g, s, p, lr: opt_update(g, s, p, lr, self.adamw)
+        )
+
+    # -- one step -----------------------------------------------------------
+    def step(self, step_idx: int):
+        tc = self.tc
+        plan = self.plan
+        assignment = balanced_nonoverlapping(plan.n_data, plan.n_batches)
+        loads = assignment.worker_load() / plan.replication  # data units
+        times = self.sim.next_step(loads=loads)
+
+        # straggler drops decided from PREVIOUS steps (one-step delay)
+        keep = (
+            self.detector.drop_mask() if tc.drop_stragglers else None
+        )
+        self.faultmgr.heartbeat(np.isfinite(times))
+        decision = self.faultmgr.decide(keep)
+
+        # apply the paper's completion rule on the surviving workers
+        eff_times = times.copy()
+        eff_times[~decision.alive] = np.inf
+        completion, used = completion_from_step_times(eff_times, assignment)
+
+        # gradients: one REAL compute per distinct batch with >=1 used worker
+        losses, grads_per_worker = [], [None] * plan.n_data
+        batch_grads = {}
+        for w in range(plan.n_data):
+            if not used[w]:
+                continue
+            b = batch_index_for_data_coord(plan, w)
+            if b not in batch_grads:
+                data = self.pipeline.batch_for(step_idx, b, plan.n_batches)
+                batch = {k: jnp.asarray(v) for k, v in data.items()}
+                loss, g = self._grad_fn(self.params, batch)
+                losses.append(float(loss))
+                batch_grads[b] = g
+            grads_per_worker[w] = batch_grads[b]
+
+        alive_used = np.array([g is not None for g in grads_per_worker])
+        if self.error_state is not None:
+            trees = [g for g in grads_per_worker if g is not None]
+            errs = [
+                self.error_state[w]
+                for w in range(plan.n_data)
+                if grads_per_worker[w] is not None
+            ]
+            grad, new_errs = compressed_reduce_host(trees, errs)
+            it = iter(new_errs)
+            for w in range(plan.n_data):
+                if grads_per_worker[w] is not None:
+                    self.error_state[w] = next(it)
+        else:
+            grad, _ = aggregate_host(grads_per_worker, alive_used, plan)
+
+        lr = self.schedule(step_idx)
+        self.params, self.opt_state, om = self._opt_fn(
+            grad, self.opt_state, self.params, lr
+        )
+
+        # telemetry (normalized per unit of data), censored at completion
+        finite = np.isfinite(times)
+        unit_times = np.where(finite, times, completion) / np.maximum(loads, 1e-9)
+        censored = (~used) | (~finite)
+        self.detector.observe(np.where(finite, times, np.nan))
+        self.tuner.observe(unit_times, censored)
+        return float(np.mean(losses)), completion, decision
+
+    # -- loop ---------------------------------------------------------------
+    def run(self) -> TrainResult:
+        tc = self.tc
+        losses, sim_times, events = [], [], []
+        plan_history = [(0, self.plan.n_batches)]
+        t0 = time.time()
+        step_idx = 0
+        while step_idx < tc.steps:
+            loss, completion, decision = self.step(step_idx)
+            losses.append(loss)
+            sim_times.append(completion)
+            if decision.kind != "ok":
+                events.append(f"step {step_idx}: fault decision {decision.kind}"
+                              f" lost_batches={decision.lost_batches}")
+            if decision.needs_restart:
+                # whole replica group lost: restore + re-plan
+                events.append(f"step {step_idx}: elastic re-plan triggered")
+                self._elastic_replan(decision)
+                plan_history.append((step_idx, self.plan.n_batches))
+            if tc.tuner:
+                rp = self.tuner.maybe_replan()
+                if rp is not None:
+                    events.append(
+                        f"step {step_idx}: tuner B {rp.old_batches}->"
+                        f"{rp.new_batches} (pred {rp.predicted_improvement:.1%})"
+                    )
+                    self.plan = self.tuner.apply(rp)
+                    self.faultmgr = FaultManager(self.plan)
+                    plan_history.append((step_idx, self.plan.n_batches))
+            if self.ckpt and (step_idx + 1) % tc.checkpoint_every == 0:
+                self.ckpt.save_async(
+                    step_idx + 1,
+                    {"params": self.params, "opt": self.opt_state},
+                    {"plan_batches": self.plan.n_batches, "step": step_idx + 1},
+                )
+            step_idx += 1
+        if self.ckpt:
+            self.ckpt.wait()
+        return TrainResult(
+            losses=losses,
+            sim_times=sim_times,
+            wall_time=time.time() - t0,
+            plan_history=plan_history,
+            events=events,
+            final_plan=self.plan,
+        )
+
+    def _elastic_replan(self, decision):
+        """Restore from checkpoint (if any) and choose a feasible B given the
+        dead workers."""
+        from repro.core.policies import divisors
+
+        dead = self.faultmgr.dead_mask()
+        n_alive = int((~dead).sum())
+        # feasible B: divides both the worker count and the global batch
+        gb = self.tc.global_batch
+        feas = [
+            b for b in divisors(max(n_alive, 1))
+            if gb % b == 0 and b <= self.plan.n_batches
+        ]
+        new_b = max(feas) if feas else 1
+        if self.ckpt is not None:
+            try:
+                state, meta = self.ckpt.restore(
+                    {"params": self.params, "opt": self.opt_state}
+                )
+                self.params, self.opt_state = state["params"], state["opt"]
+            except FileNotFoundError:
+                pass
+        self.plan = ReplicationPlan(n_data=n_alive, n_batches=new_b)
+        self.tuner = StragglerTuner(self.plan, self.tuner.config)
+        self.faultmgr = FaultManager(self.plan)
+        self.detector = StragglerDetector(n_alive)
+        self.sim = StepTimeSimulator(
+            self.dist, n_alive, seed=self.tc.seed + 17
+        )
+        if self.error_state is not None:
+            self.error_state = self.error_state[:n_alive]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--service", default="sexp", choices=["exp", "sexp"])
+    ap.add_argument("--delta", type=float, default=1.0)
+    ap.add_argument("--mu", type=float, default=2.0)
+    ap.add_argument("--tuner", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    tc = TrainerConfig(
+        arch=args.arch,
+        steps=args.steps,
+        n_workers=args.workers,
+        n_batches=args.batches,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        service=args.service,
+        delta=args.delta,
+        mu=args.mu,
+        tuner=args.tuner,
+        grad_compression=args.compress,
+        checkpoint_dir=args.ckpt_dir,
+    )
+    res = Trainer(tc).run()
+    print(f"final loss {res.losses[-1]:.4f} (from {res.losses[0]:.4f})")
+    print(f"simulated time {res.total_sim_time:.1f}s over {len(res.losses)} steps")
+    print(f"wall time {res.wall_time:.1f}s; plan history {res.plan_history}")
+    for e in res.events[:20]:
+        print(" ", e)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+from repro.models.lm import (
+    active_params,
+    count_params,
+    decode_state_shapes,
+    decode_state_specs,
+    decode_step,
+    init_decode_state,
+    init_params,
+    param_specs,
+    prefill,
+    train_loss,
+)
+from repro.models.sharding import Shard
+
+__all__ = [
+    "Shard",
+    "active_params",
+    "count_params",
+    "decode_state_shapes",
+    "decode_state_specs",
+    "decode_step",
+    "init_decode_state",
+    "init_params",
+    "param_specs",
+    "prefill",
+    "train_loss",
+]

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN (olmoe-1b-7b, deepseek-moe-16b).
+
+Sort-based capacity dispatch (MegaBlocks/MaxText style) — never materializes
+the (T, E, C) one-hot of GShard:
+
+  1. top-k routing over (T, E) gate probs;
+  2. flat (T*k,) assignments sorted by expert id (argsort — XLA sort);
+  3. rank within expert via searchsorted; tokens beyond the per-expert
+     capacity C are DROPPED (residual connection carries them — standard);
+  4. gather tokens into an (E, C, d) buffer (experts sharded over `model`),
+     per-expert SwiGLU FFN as one batched einsum, weighted scatter-add back.
+
+Shared experts (DeepSeekMoE) are a plain dense SwiGLU applied to every token.
+The router adds the Switch-style load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig, ShardingPolicy
+from repro.models import layers as L
+from repro.models.sharding import Shard
+
+__all__ = ["init_moe", "moe_specs", "apply_moe", "router_capacity"]
+
+from jax.sharding import PartitionSpec as P
+
+
+def router_capacity(moe: MoEConfig, n_tokens: int) -> int:
+    """Per-expert capacity for a token block of size n_tokens."""
+    ideal = n_tokens * moe.top_k / moe.n_experts
+    cap = int(moe.capacity_factor * ideal + 0.5)
+    return max(cap, moe.top_k)
+
+
+def init_moe(key, cfg: ArchConfig):
+    moe = cfg.moe
+    assert moe is not None
+    d, f, e = cfg.d_model, moe.d_expert, moe.n_experts
+    kg, k1, k2, k3, ks = jax.random.split(key, 5)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(kg, (d, e)) * scale_in).astype(jnp.float32),
+        "wi_gate": (jax.random.normal(k1, (e, d, f)) * scale_in).astype(L.DTYPE),
+        "wi_up": (jax.random.normal(k2, (e, d, f)) * scale_in).astype(L.DTYPE),
+        "wo": (jax.random.normal(k3, (e, f, d)) * scale_out).astype(L.DTYPE),
+    }
+    if moe.n_shared > 0:
+        p["shared"] = L.init_mlp(ks, cfg, d_ff=moe.n_shared * moe.d_expert)
+    return p
+
+
+def moe_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    moe = cfg.moe
+    m = policy.model_axis
+    dp = policy.dp_axes if policy.fsdp else None
+    p = {
+        "router": P(None, None),
+        "wi_gate": P(m, dp, None),
+        "wi_up": P(m, dp, None),
+        "wo": P(m, None, dp),
+    }
+    if moe.n_shared > 0:
+        p["shared"] = L.mlp_specs(cfg, policy)
+    return p
+
+
+def _expert_ffn(params, xb):
+    """xb: (D, E, C, d) -> (D, E, C, d); batched SwiGLU over the expert dim."""
+    g = jnp.einsum("gecd,edf->gecf", xb, params["wi_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xb, params["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    return jnp.einsum("gecf,efd->gecd", h, params["wo"])
+
+
+def apply_moe(
+    cfg: ArchConfig,
+    shard: Shard,
+    params,
+    x,
+    capacity: Optional[int] = None,
+):
+    """x: (b, s, d) -> (y, aux_loss).
+
+    Dispatch is PER DATA SHARD (tokens viewed as (D, T_local, d)): slot
+    buffers shard (dp, model) so expert compute is fully local — without
+    this, capacity slots cannot shard over dp and every device computes the
+    global expert load (16x waste; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.n_experts, moe.top_k
+    nd = shard.n_data_shards()
+    if t % nd:
+        nd = 1
+    tl = t // nd  # tokens per dp shard
+    cap = capacity if capacity is not None else router_capacity(moe, tl)
+
+    xt = shard.moe_tokens(x.reshape(nd, tl, d))
+    logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), params["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (D, tl, e)
+    gate_w, gate_e = jax.lax.top_k(probs, k)  # (D, tl, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # -- load-balancing aux loss (Switch): E * sum_e f_e * p_e (global)
+    me = probs.mean(axis=(0, 1))  # (e,)
+    counts = jnp.zeros((e,), jnp.float32).at[gate_e.reshape(-1)].add(1.0)
+    fe = counts / (t * k)
+    aux = moe.aux_loss_weight * e * jnp.sum(fe * me)
+
+    # -- sort-based dispatch, vectorized over the dp-shard dim
+    flat_e = gate_e.reshape(nd, tl * k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tl), k)[None], (nd, tl * k)
+    )
+    flat_w = gate_w.reshape(nd, tl * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    # rank within expert group (per shard)
+    group_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left")
+    )(se)
+    rank = jnp.arange(tl * k)[None] - group_start
+    valid = rank < cap
+    slot = se * cap + jnp.where(valid, rank, 0)  # (D, tl*k) in [0, e*cap)
+
+    def scatter_row(slots, vals, valid_row, dtype):
+        buf = jnp.zeros((e * cap,), dtype)
+        return buf.at[slots].set(
+            jnp.where(valid_row, vals, jnp.zeros((), dtype)), mode="drop"
+        )
+
+    slot_tok = jax.vmap(
+        lambda sl, v, ok: scatter_row(sl, v.astype(jnp.int32), ok, jnp.int32)
+    )(slot, st, valid)
+    slot_w = jax.vmap(
+        lambda sl, v, ok: scatter_row(sl, v, ok, jnp.float32)
+    )(slot, sw, valid)
+    slot_live = jax.vmap(
+        lambda sl, v, ok: scatter_row(sl, v, ok, jnp.float32)
+    )(slot, valid.astype(jnp.float32), valid)
+
+    # gather tokens into (D, E, C, d), experts sharded over model
+    xb = jnp.take_along_axis(xt, slot_tok[..., None], axis=1)
+    xb = xb * slot_live[..., None].astype(xt.dtype)
+    xb = shard.moe_buffer(xb.reshape(nd, e, cap, d))
+    yb = _expert_ffn(params, xb)
+    yb = shard.moe_buffer(yb).reshape(nd, e * cap, d)
+
+    yw = yb.astype(jnp.float32) * (slot_w * slot_live)[..., None]
+    out = jax.vmap(
+        lambda toks, vals: jnp.zeros((tl, d), jnp.float32).at[toks].add(vals)
+    )(slot_tok, yw)
+    y = shard.moe_tokens(out.astype(x.dtype)).reshape(b, s, d)
+
+    if moe.n_shared > 0:
+        y = y + L.apply_mlp(cfg, params["shared"], x)
+    return y, aux

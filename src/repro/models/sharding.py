@@ -1,0 +1,141 @@
+"""Shard — the context object threading (mesh, policy) through model code.
+
+Model code never touches jax.sharding directly; it calls semantic hooks:
+
+* ``activation(x)``  — constrain a (b, s, d) residual-stream tensor
+* ``full_seq(x)``    — force the seq dim gathered (pre-attention)
+* ``cache(x)``       — constrain a (b, S_max, kv, hd) KV cache
+* ``logits(x)``      — constrain (b, s, vocab)
+* ``moe_buffer(x)``  — constrain (E, C, d) expert buffers
+
+With ``mesh=None`` (CPU smoke tests) every hook is the identity, so the same
+model code runs on one device with zero sharding machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShardingPolicy
+
+__all__ = ["Shard"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    mesh: Optional[Mesh]
+    policy: ShardingPolicy
+
+    @staticmethod
+    def local(policy: Optional[ShardingPolicy] = None) -> "Shard":
+        return Shard(mesh=None, policy=policy or ShardingPolicy())
+
+    def _c(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def n_data_shards(self) -> int:
+        """Extent of the data-parallel axes (1 on a local mesh)."""
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.policy.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def dp(self):
+        return self.policy.dp_axes
+
+    @property
+    def m(self):
+        return self.policy.model_axis
+
+    def activation(self, x):
+        """(b, s, d): batch over dp; seq over model when sequence-parallel."""
+        if self.policy.seq_shard:
+            return self._c(x, P(self.dp, self.m, None))
+        return self._c(x, P(self.dp, None, None))
+
+    def full_seq(self, x):
+        """(b, s, d) gathered over seq (entering attention)."""
+        return self._c(x, P(self.dp, None, None))
+
+    def mm_boundary(self, x):
+        """Weight-matmul OUTPUT boundary under sequence parallelism.
+
+        Primal: constrain to SEQ-SHARDED immediately (the partial-sum psum
+        can lower as reduce-scatter — half the wire of an all-reduce).
+        Cotangent: gather to FULL-SEQ before it reaches the matmul, so the
+        weight-grad contraction is seq-local and never psums the (d, f)
+        gradient over the model axis.  custom_vjp lets the two directions
+        carry different shardings (§Perf iterations 4-7)."""
+        if not (self.policy.seq_shard and self.policy.sp_weightgrad_fix):
+            return x
+        if self.mesh is None:
+            return x
+
+        shard = self
+
+        @jax.custom_vjp
+        def boundary(t):
+            return t
+
+        def fwd(t):
+            return shard._c(t, P(shard.dp, shard.m, None)), None
+
+        def bwd(_, g):
+            return (shard._c(g, P(shard.dp, None, None)),)
+
+        boundary.defvjp(fwd, bwd)
+        return boundary(x)
+
+    def mm_input(self, x):
+        """Weight-matmul INPUT boundary: gather seq (fwd) so the forward
+        weight contraction is seq-local; no-op when the fix is off."""
+        if self.policy.seq_shard and self.policy.sp_weightgrad_fix:
+            return self._c(x, P(self.dp, None, None))
+        return x
+
+    def heads(self, x):
+        """(b, s, H, hd) q/k/v: heads over model (or head_dim per policy)."""
+        if self.mesh is None:
+            return x
+        if self.policy.attn_mode == "heads":
+            if x.shape[2] % self.mesh.shape[self.m]:
+                return x  # unshardable head count (replicated small models)
+            return self._c(x, P(self.dp, None, self.m, None))
+        return self._c(x, P(self.dp, None, None, self.m))
+
+    def cache(self, x):
+        """(b, S_max, kv, hd) KV cache."""
+        if self.policy.kv_seq_shard:
+            return self._c(x, P(self.dp, self.m, None, None))
+        if self.policy.shard_kv_heads:
+            return self._c(x, P(self.dp, None, self.m, None))
+        return self._c(x, P(self.dp, None, None, None))
+
+    def cache_long(self, x):
+        """(b, S_max, kv, hd) cache for batch=1 long-context: seq over dp."""
+        return self._c(x, P(None, self.dp, self.m, None))
+
+    def logits(self, x):
+        v = self.m if self.policy.shard_vocab else None
+        return self._c(x, P(self.dp, None, v))
+
+    def moe_buffer(self, x):
+        """(D, E, C, d) dispatched expert buffer: dp shards x experts."""
+        return self._c(x, P(self.dp, self.m, None, None))
+
+    def moe_tokens(self, x):
+        """(D, T_local, d) tokens viewed as dp shards."""
+        return self._c(x, P(self.dp, None, None))
+
+    def ssm_state(self, x):
+        """(b, h, n, p) SSM state: heads over model."""
+        return self._c(x, P(self.dp, self.m, None, None))

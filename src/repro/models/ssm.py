@@ -1,0 +1,297 @@
+"""Mamba2 / SSD block (zamba2-7b backbone).
+
+State-space recurrence per head h with scalar decay:
+
+    a_t = exp(dt_t * A)                       A < 0, per head
+    S_t = a_t * S_{t-1} + dt_t * (B_t ⊗ x_t)  S: (n, p) per head
+    y_t = C_t · S_t + D * x_t
+
+Training/prefill uses the CHUNKED parallel form (the SSD algorithm of
+Mamba-2): intra-chunk attention-like masked matmul + inter-chunk linear
+recurrence over per-chunk states.  Decode keeps S as the cache (O(1) per
+token).  The chunked function here is the XLA twin of the Pallas kernel in
+repro.kernels.ssm_scan (same block decomposition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SSMConfig, ShardingPolicy
+from repro.models import layers as L
+from repro.models.sharding import Shard
+
+__all__ = [
+    "ssd_chunked",
+    "ssd_sequential",
+    "ssd_decode_step",
+    "init_mamba2_block",
+    "mamba2_block_specs",
+    "apply_mamba2_block",
+    "apply_mamba2_decode",
+    "mamba2_state_shape",
+]
+
+
+def ssd_sequential(x, dt, a_log, b, c, d_skip):
+    """Oracle: step-by-step recurrence.  Shapes:
+    x (B, S, H, P); dt (B, S, H); a_log (H,) [A = -exp(a_log)];
+    b, c (B, S, G, N) with H % G == 0.  Returns (y, final_state (B,H,N,P)).
+    """
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (h,)
+    bx = jnp.repeat(b, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    cx = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, t):
+        decay = jnp.exp(dtf[:, t] * a)  # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dtf[:, t], bx[:, t], xf[:, t])
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", cx[:, t], state)
+        return state, y
+
+    state0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    y = ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int, initial_state=None):
+    """Chunked SSD (Mamba-2 'minimal SSD').  Same shapes as ssd_sequential.
+    Returns (y, final_state)."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    if s % chunk:
+        raise ValueError(f"seq {s} must be divisible by chunk {chunk}")
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (h,)
+
+    xf = x.astype(jnp.float32).reshape(bs, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bs, nc, chunk, h)
+    bf = jnp.repeat(b, rep, axis=2).astype(jnp.float32).reshape(bs, nc, chunk, h, n)
+    cf = jnp.repeat(c, rep, axis=2).astype(jnp.float32).reshape(bs, nc, chunk, h, n)
+
+    # log-decay cumulative sums within each chunk
+    la = dtf * a[None, None, None, :]  # (B,nc,cl,H) log a_t (negative)
+    cum = jnp.cumsum(la, axis=2)  # inclusive: L_t = sum_{s<=t} la_s
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # intra-chunk: y_t = sum_{s<=t} (C_t·B_s) exp(L_t - L_s) dt_s x_s
+    # score[t,s] = (C_t·B_s) * exp(L_t - L_s) for s <= t
+    cb = jnp.einsum("bkthn,bkshn->bkhts", cf, bf)  # (B,nc,H,cl,cl)
+    ldiff = cum[..., :, None, :] - cum[..., None, :, :]  # (B,nc,t,s,H)
+    ldiff = ldiff.transpose(0, 1, 4, 2, 3)  # (B,nc,H,t,s)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(mask, cb * jnp.exp(jnp.where(mask, ldiff, 0.0)), 0.0)
+    xdt = xf * dtf[..., None]  # (B,nc,cl,H,P)
+    y_intra = jnp.einsum("bkhts,bkshp->bkthp", w, xdt)
+
+    # per-chunk input state: S_k = sum_s exp(L_total - L_s) dt_s B_s⊗x_s
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # (B,nc,cl,H)
+    sk = jnp.einsum("bksh,bkshn,bkshp->bkhnp", decay_to_end * dtf, bf, xf)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(total)  # (B,nc,H)
+
+    def step(state, args):
+        dec, s_in = args  # (B,H), (B,H,N,P)
+        prev = state
+        state = state * dec[..., None, None] + s_in
+        return state, prev  # emit state BEFORE this chunk
+
+    init = (
+        jnp.zeros((bs, h, n, p), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (chunk_decay.transpose(1, 0, 2), sk.transpose(1, 0, 2, 3, 4)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    # inter contribution: y_t += C_t · (exp(L_t) * S_{k-1})
+    y_inter = jnp.einsum(
+        "bkth,bkthn,bkhnp->bkthp", jnp.exp(cum), cf, prev_states
+    )
+
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c, d_skip):
+    """One-token recurrent update.  x (B,H,P); dt (B,H); b,c (B,G,N);
+    state (B,H,N,P).  Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    g = b.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bf = jnp.repeat(b, rep, axis=1).astype(jnp.float32)
+    cf = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt.astype(jnp.float32) * a)  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt.astype(jnp.float32), bf,
+                     x.astype(jnp.float32))
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", cf, state)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expansion * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_state_shape(cfg: ArchConfig, batch: int):
+    ssm = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.state_dim
+    return {
+        "ssm": (batch, n_heads, ssm.state_dim, ssm.head_dim),
+        "conv": (batch, ssm.conv_kernel - 1, conv_dim),
+    }
+
+
+def init_mamba2_block(key, cfg: ArchConfig):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.state_dim
+    proj_out = 2 * d_inner + 2 * ssm.n_groups * ssm.state_dim + n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln": L.init_norm(cfg),
+        "in_proj": (jax.random.normal(k1, (d, proj_out)) * d ** -0.5).astype(L.DTYPE),
+        "conv_w": (jax.random.normal(k2, (ssm.conv_kernel, conv_dim)) * 0.1).astype(L.DTYPE),
+        "conv_b": jnp.zeros((conv_dim,), L.DTYPE),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),  # A = -exp(0) = -1
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "gate_ln": {"scale": jnp.ones((d_inner,), L.DTYPE)},
+        "out_proj": (jax.random.normal(k4, (d_inner, d)) * d_inner ** -0.5).astype(L.DTYPE),
+    }
+
+
+def mamba2_block_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    m = policy.model_axis
+    dp = policy.dp_axes if policy.fsdp else None
+    return {
+        "ln": L.norm_specs(cfg),
+        "in_proj": P(dp, m),
+        "conv_w": P(None, m),
+        "conv_b": P(m),
+        "a_log": P(m),
+        "d_skip": P(m),
+        "dt_bias": P(m),
+        "gate_ln": {"scale": P(m)},
+        "out_proj": P(m, dp),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    ssm = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    gn = ssm.n_groups * ssm.state_dim
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_depthwise_conv(x, w, b, prev=None):
+    """x: (B, S, C); w: (K, C); prev: (B, K-1, C) left context (decode)."""
+    k = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prev.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def apply_mamba2_block(cfg: ArchConfig, shard: Shard, params, x,
+                       initial_state=None):
+    """x: (b, s, d) -> (y, final_ssm_state)."""
+    ssm = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    gn = ssm.n_groups * ssm.state_dim
+    h = L.apply_norm(cfg, params["ln"], x)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["in_proj"])
+    z, xbc_raw, dt_pre = _split_proj(cfg, zxbcdt)
+    xbc = _causal_depthwise_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    bs, s, _ = xs.shape
+    xs = xs.reshape(bs, s, n_heads, ssm.head_dim)
+    b = b.reshape(bs, s, ssm.n_groups, ssm.state_dim)
+    c = c.reshape(bs, s, ssm.n_groups, ssm.state_dim)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])
+    chunk = min(ssm.chunk, s)
+    if s % chunk:
+        chunk = s  # tiny smoke shapes
+    y, ssm_state = ssd_chunked(
+        xs, dt, params["a_log"], b, c, params["d_skip"], chunk,
+        initial_state=initial_state,
+    )
+    # conv left-context for decode continuation
+    kconv = ssm.conv_kernel - 1
+    pad = jnp.zeros((bs, max(kconv - s, 0), xbc_raw.shape[-1]), xbc_raw.dtype)
+    conv_tail = jnp.concatenate([pad, xbc_raw[:, max(s - kconv, 0):]], axis=1)
+    state = {"ssm": ssm_state, "conv": conv_tail}
+    y = y.reshape(bs, s, d_inner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = gated.astype(jnp.float32)
+    gf = gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)
+    gated = (gf * params["gate_ln"]["scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", gated, params["out_proj"])
+    return x + out, state
+
+
+def apply_mamba2_decode(cfg: ArchConfig, shard: Shard, params, x, state):
+    """x: (b, 1, d); state dict {'ssm': (b,H,N,P), 'conv': (b,K-1,C)}."""
+    ssm = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    gn = ssm.n_groups * ssm.state_dim
+    h = L.apply_norm(cfg, params["ln"], x)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["in_proj"])
+    z, xbc, dt_pre = _split_proj(cfg, zxbcdt)
+    conv_prev = state["conv"]
+    xbc_conv = _causal_depthwise_conv(
+        xbc, params["conv_w"], params["conv_b"], prev=conv_prev
+    )
+    new_conv = jnp.concatenate([conv_prev[:, 1:], xbc], axis=1)
+    xbc = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(x.dtype)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    bs = xs.shape[0]
+    xs = xs.reshape(bs, n_heads, ssm.head_dim)
+    b = b.reshape(bs, ssm.n_groups, ssm.state_dim)
+    c = c.reshape(bs, ssm.n_groups, ssm.state_dim)
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + params["dt_bias"])
+    y, new_ssm = ssd_decode_step(
+        state["ssm"], xs, dt, params["a_log"], b, c, params["d_skip"]
+    )
+    y = y.reshape(bs, 1, d_inner)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = gated.astype(jnp.float32)
+    gf = gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)
+    gated = (gf * params["gate_ln"]["scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", gated, params["out_proj"])
+    return x + out, {"ssm": new_ssm, "conv": new_conv}

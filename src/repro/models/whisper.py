@@ -1,0 +1,208 @@
+"""Whisper-medium encoder-decoder (audio family).
+
+The conv/mel frontend is STUBBED per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, T, frontend_dim); a learned linear maps them
+to d_model and sinusoidal positions are added.  Encoder blocks are
+bidirectional; decoder blocks are causal self-attention + cross-attention
+into the encoder output.  LayerNorm + GELU + biases (cfg drives all of it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShardingPolicy
+from repro.models import layers as L
+from repro.models import transformer
+from repro.models.sharding import Shard
+
+__all__ = [
+    "init_whisper",
+    "whisper_specs",
+    "encode",
+    "decode_train",
+    "whisper_cache_shape",
+    "decode_step",
+]
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    return transformer.init_block(key, cfg)
+
+
+def init_dec_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = transformer.init_block(k1, cfg)
+    p["ln_cross"] = L.init_norm(cfg)
+    p["cross"] = L.init_attention(k2, cfg)
+    return p
+
+
+def dec_block_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    p = transformer.block_specs(cfg, policy)
+    p["ln_cross"] = L.norm_specs(cfg)
+    p["cross"] = L.attention_specs(cfg, policy)
+    return p
+
+
+def init_whisper(key, cfg: ArchConfig):
+    ke, kd, kf, kv = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.n_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "frontend": (
+            jax.random.normal(kf, (cfg.frontend_dim, cfg.d_model))
+            * cfg.frontend_dim ** -0.5
+        ).astype(L.DTYPE),
+        "embed": L.init_embedding(kv, cfg),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": L.init_norm(cfg),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "dec_norm": L.init_norm(cfg),
+    }
+
+
+def whisper_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    dp = policy.dp_axes if policy.fsdp else None
+    enc = jax.tree.map(
+        lambda s: P(None, *s), transformer.block_specs(cfg, policy)
+    )
+    dec = jax.tree.map(lambda s: P(None, *s), dec_block_specs(cfg, policy))
+    return {
+        "frontend": P(None, dp),
+        "embed": L.embedding_specs(cfg, policy),
+        "enc_blocks": enc,
+        "enc_norm": L.norm_specs(cfg),
+        "dec_blocks": dec,
+        "dec_norm": L.norm_specs(cfg),
+    }
+
+
+def _cross_attend(cfg, shard, params, x, enc_k, enc_v):
+    """Cross attention: queries from decoder x, cached encoder K/V."""
+    h = L.apply_norm(cfg, params["ln_cross"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["cross"]["wq"])
+    if cfg.qkv_bias:
+        q = q + params["cross"]["bq"]
+    ctx = transformer.chunked_gqa_attend(q, enc_k, enc_v, causal=False)
+    return x + L.attn_out(cfg, params["cross"], ctx)
+
+
+def _cross_kv(cfg, params, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["cross"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["cross"]["wv"])
+    if cfg.qkv_bias:
+        k = k + params["cross"]["bk"]
+        v = v + params["cross"]["bv"]
+    return k, v
+
+
+def encode(cfg: ArchConfig, shard: Shard, params, frames):
+    """frames: (b, t, frontend_dim) -> (b, t, d)."""
+    x = jnp.einsum("btf,fd->btd", frames.astype(L.DTYPE), params["frontend"])
+    pos = _sinusoid(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+
+    def body(h, lp):
+        h = shard.activation(h)
+        h1 = L.apply_norm(cfg, lp["ln1"], h)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h1, None, shard)
+        ctx = transformer.chunked_gqa_attend(q, k, v, causal=False)
+        h = h + L.attn_out(cfg, lp["attn"], ctx, shard)
+        h2 = L.apply_norm(cfg, lp["ln2"], h)
+        return h + L.apply_mlp(cfg, lp["mlp"], h2), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(cfg: ArchConfig, shard: Shard, params, tokens, enc_out):
+    """Teacher-forced decoder pass.  tokens: (b, sd) -> logits (b, sd, V)."""
+    x = L.embed_tokens(params["embed"], tokens)
+    pos = _sinusoid(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+
+    def body(h, lp):
+        h = shard.activation(h)
+        h1 = L.apply_norm(cfg, lp["ln1"], h)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h1, None, shard)
+        ctx = transformer.chunked_gqa_attend(q, k, v, causal=True)
+        h = h + L.attn_out(cfg, lp["attn"], ctx, shard)
+        ek, ev = _cross_kv(cfg, lp, enc_out)
+        h = _cross_attend(cfg, shard, lp, h, ek, ev)
+        h2 = L.apply_norm(cfg, lp["ln2"], h)
+        return h + L.apply_mlp(cfg, lp["mlp"], h2), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.apply_norm(cfg, params["dec_norm"], x)
+    return L.unembed(cfg, params["embed"], x)
+
+
+def whisper_cache_shape(cfg: ArchConfig, batch: int, max_len: int):
+    kv, hd, ld = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "self_k": (ld, batch, max_len, kv, hd),
+        "self_v": (ld, batch, max_len, kv, hd),
+        "cross_k": (ld, batch, max_len, kv, hd),
+        "cross_v": (ld, batch, max_len, kv, hd),
+    }
+
+
+def decode_step(cfg: ArchConfig, shard: Shard, params, cache, token,
+                cache_len, cross_len):
+    """One decoder token against cached self-KV and cached cross-KV.
+    token: (b, 1) int32.  Returns (logits (b,1,V), cache)."""
+    x = L.embed_tokens(params["embed"], token)
+    pos = _sinusoid(jnp.full((1,), cache_len, jnp.int32), cfg.d_model)
+    x = x + pos[None].astype(x.dtype)
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        h1 = L.apply_norm(cfg, lp["ln1"], h)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h1, None, shard)
+        sk = jax.lax.dynamic_update_slice_in_dim(
+            sk, k.astype(sk.dtype), cache_len, axis=1
+        )
+        sv = jax.lax.dynamic_update_slice_in_dim(
+            sv, v.astype(sv.dtype), cache_len, axis=1
+        )
+        sk, sv = shard.cache(sk), shard.cache(sv)
+        ctx = transformer.decode_attend(q, sk, sv, cache_len + 1)
+        h = h + L.attn_out(cfg, lp["attn"], ctx, shard)
+        # cross attention against cached encoder KV
+        hc = L.apply_norm(cfg, lp["ln_cross"], h)
+        qc = jnp.einsum("bsd,dhk->bshk", hc, lp["cross"]["wq"])
+        if cfg.qkv_bias:
+            qc = qc + lp["cross"]["bq"]
+        cctx = transformer.decode_attend(qc, ck, cv, cross_len)
+        h = h + L.attn_out(cfg, lp["cross"], cctx)
+        h2 = L.apply_norm(cfg, lp["ln2"], h)
+        return h + L.apply_mlp(cfg, lp["mlp"], h2), (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        body,
+        x,
+        (
+            params["dec_blocks"],
+            cache["self_k"],
+            cache["self_v"],
+            cache["cross_k"],
+            cache["cross_v"],
+        ),
+    )
+    x = L.apply_norm(cfg, params["dec_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    new_cache = dict(cache)
+    new_cache.update(self_k=new_sk, self_v=new_sv)
+    return logits, new_cache

@@ -1,0 +1,416 @@
+"""xLSTM blocks (xlstm-350m): mLSTM (matrix memory, exponential gating) and
+sLSTM (scalar memory with recurrent mixing).
+
+mLSTM recurrence per head (dk key dim, dv value dim), stabilized:
+
+    m_t = max(logsig(f~_t) + m_{t-1}, i~_t)
+    C_t = e^{logsig(f~)+m_{t-1}-m_t} C_{t-1} + e^{i~_t - m_t} k_t v_t^T
+    n_t = e^{logsig(f~)+m_{t-1}-m_t} n_{t-1} + e^{i~_t - m_t} k_t
+    h_t = (q_t·C_t) / max(|q_t·n_t|, e^{-m_t})
+
+Training uses the CHUNKWISE parallel form (flash-linear-attention style,
+carrying (C, n, m) across chunks); decode is the O(1) recurrence.  The
+chunked function is the XLA twin of repro.kernels.ssm_scan's Pallas kernel
+family.
+
+sLSTM keeps the paper's recurrent memory mixing (R·h_{t-1} into the gate
+preactivations) which is inherently sequential — lax.scan over time.  Only 3
+of 24 blocks are sLSTM (7:1), so the sequential cost is bounded; DESIGN.md
+records this trade-off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShardingPolicy
+from repro.models import layers as L
+from repro.models.sharding import Shard
+
+__all__ = [
+    "mlstm_sequential",
+    "mlstm_chunked",
+    "mlstm_decode_step",
+    "init_mlstm_block",
+    "mlstm_block_specs",
+    "apply_mlstm_block",
+    "apply_mlstm_decode",
+    "init_slstm_block",
+    "slstm_block_specs",
+    "apply_slstm_block",
+    "apply_slstm_decode",
+    "mlstm_state_shape",
+    "slstm_state_shape",
+]
+
+NEG = -1e30
+
+
+def _logsig(x):
+    return jax.nn.log_sigmoid(x)
+
+
+def mlstm_sequential(q, k, v, i_pre, f_pre, initial=None):
+    """Oracle.  q,k: (B,S,H,DK); v: (B,S,H,DV); i_pre,f_pre: (B,S,H).
+    Returns (h (B,S,H,DV), (C,n,m))."""
+    bq, s, h, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    lf = _logsig(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    if initial is None:
+        c0 = jnp.zeros((bq, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((bq, h, dk), jnp.float32)
+        m0 = jnp.full((bq, h), NEG, jnp.float32)
+    else:
+        c0, n0, m0 = initial
+
+    def step(carry, t):
+        c, n, m = carry
+        m_new = jnp.maximum(lf[:, t] + m, li[:, t])
+        fw = jnp.exp(lf[:, t] + m - m_new)
+        iw = jnp.exp(li[:, t] - m_new)
+        c = c * fw[..., None, None] + iw[..., None, None] * (
+            kf[:, t][..., :, None] * vf[:, t][..., None, :]
+        )
+        n = n * fw[..., None] + iw[..., None] * kf[:, t]
+        num = jnp.einsum("bhk,bhkv->bhv", qf[:, t], c)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf[:, t], n))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), jnp.arange(s))
+    return hs.transpose(1, 0, 2, 3), (c, n, m)
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int, initial=None):
+    """Chunkwise-parallel stabilized mLSTM.  Same shapes/returns as
+    mlstm_sequential."""
+    bq, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    qf = (q.astype(jnp.float32) * dk ** -0.5).reshape(bq, nc, chunk, h, dk)
+    kf = k.astype(jnp.float32).reshape(bq, nc, chunk, h, dk)
+    vf = v.astype(jnp.float32).reshape(bq, nc, chunk, h, dv)
+    lf = _logsig(f_pre.astype(jnp.float32)).reshape(bq, nc, chunk, h)
+    li = i_pre.astype(jnp.float32).reshape(bq, nc, chunk, h)
+
+    bcum = jnp.cumsum(lf, axis=2)  # inclusive within-chunk decay sums
+    btot = bcum[:, :, -1]  # (B,nc,H)
+
+    # intra log-weights D[t,s] = b_t - b_s + li_s  (s <= t)
+    dmat = (
+        bcum[..., :, None, :] - bcum[..., None, :, :]
+        + li[..., None, :, :]
+    )  # (B,nc,t,s,H)
+    dmat = dmat.transpose(0, 1, 4, 2, 3)  # (B,nc,H,t,s)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(mask, dmat, NEG)
+    m_intra = dmat.max(axis=-1)  # (B,nc,H,t)
+
+    if initial is None:
+        c0 = jnp.zeros((bq, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((bq, h, dk), jnp.float32)
+        m0 = jnp.full((bq, h), NEG, jnp.float32)
+    else:
+        c0, n0, m0 = initial
+
+    qk = jnp.einsum("bkthd,bkshd->bkhts", qf, kf)  # (B,nc,H,t,s)
+    # chunk-state ingredients: sum_s exp(btot - b_s + li_s - m_new) k v^T
+    st_logw = btot[:, :, None] - bcum + li  # (B,nc,cl,H)
+    st_max = st_logw.max(axis=2)  # (B,nc,H)
+
+    def step(carry, xs):
+        c, n, m = carry
+        qk_c, d_c, mi_c, q_c, k_c, v_c, lfb, lf_tot, stw, stm = xs
+        # per-step stabilizer: max(inter, intra)
+        m_inter = lfb + m[:, :, None]  # (B,H,t) : b_t + m_prev
+        m_t = jnp.maximum(m_inter, mi_c)  # (B,H,t)
+        w_intra = jnp.exp(d_c - m_t[..., None])  # (B,H,t,s)
+        num = jnp.einsum("bhts,bhsv->bhtv", qk_c * w_intra, v_c)
+        den = jnp.einsum("bhts,bhsk->bhtk", w_intra, k_c)
+        den = jnp.einsum("bhtk,bhtk->bht", q_c, den)
+        w_inter = jnp.exp(m_inter - m_t)  # (B,H,t)
+        num = num + w_inter[..., None] * jnp.einsum("bhtk,bhkv->bhtv", q_c, c)
+        den = den + w_inter * jnp.einsum("bhtk,bhk->bht", q_c, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        out = num / den[..., None]  # (B,H,t,DV)
+        # carry update
+        m_new = jnp.maximum(lf_tot + m, stm)  # (B,H)
+        wdec = jnp.exp(lf_tot + m - m_new)
+        w_in = jnp.exp(stw - m_new[:, None, :])  # (B,cl,H)
+        c = c * wdec[..., None, None] + jnp.einsum(
+            "bsh,bshk,bshv->bhkv", w_in, k_c.transpose(0, 2, 1, 3), v_c.transpose(0, 2, 1, 3)
+        )
+        n = n * wdec[..., None] + jnp.einsum(
+            "bsh,bshk->bhk", w_in, k_c.transpose(0, 2, 1, 3)
+        )
+        return (c, n, m_new), out
+
+    xs = (
+        qk.transpose(1, 0, 2, 3, 4),
+        dmat.transpose(1, 0, 2, 3, 4),
+        m_intra.transpose(1, 0, 2, 3),
+        qf.transpose(1, 0, 3, 2, 4),  # (nc,B,H,t,dk)
+        kf.transpose(1, 0, 3, 2, 4),
+        vf.transpose(1, 0, 3, 2, 4),
+        bcum.transpose(1, 0, 3, 2),  # (nc,B,H,t)
+        btot.transpose(1, 0, 2),  # (nc,B,H)
+        st_logw.transpose(1, 0, 2, 3),  # (nc,B,cl,H)
+        st_max.transpose(1, 0, 2),  # (nc,B,H)
+    )
+    (c, n, m), outs = jax.lax.scan(step, (c0, n0, m0), xs)
+    hs = outs.transpose(1, 0, 3, 2, 4).reshape(bq, s, h, dv)
+    return hs, (c, n, m)
+
+
+def mlstm_decode_step(state, q, k, v, i_pre, f_pre):
+    """One token.  q,k: (B,H,DK); v: (B,H,DV); gates (B,H)."""
+    c, n, m = state
+    dk = q.shape[-1]
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    lf = _logsig(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = c * fw[..., None, None] + iw[..., None, None] * (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n = n * fw[..., None] + iw[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+    return num / den[..., None], (c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expansion * cfg.d_model
+    h = cfg.n_heads
+    dv = d_inner // h  # value dim per head
+    dk = ssm.state_dim  # key/query dim per head
+    return d_inner, h, dk, dv
+
+
+def mlstm_state_shape(cfg: ArchConfig, batch: int):
+    ssm = cfg.ssm
+    d_inner, h, dk, dv = _mdims(cfg)
+    return {
+        "c": (batch, h, dk, dv),
+        "n": (batch, h, dk),
+        "m": (batch, h),
+        "conv": (batch, ssm.conv_kernel - 1, d_inner),
+    }
+
+
+def init_mlstm_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_inner, h, dk, dv = _mdims(cfg)
+    ks = jax.random.split(key, 8)
+    s_in = d ** -0.5
+    s_inner = d_inner ** -0.5
+    return {
+        "ln": L.init_norm(cfg),
+        "w_up": (jax.random.normal(ks[0], (d, d_inner)) * s_in).astype(L.DTYPE),
+        "w_z": (jax.random.normal(ks[1], (d, d_inner)) * s_in).astype(L.DTYPE),
+        "conv_w": (jax.random.normal(ks[2], (ssm.conv_kernel, d_inner)) * 0.1).astype(L.DTYPE),
+        "conv_b": jnp.zeros((d_inner,), L.DTYPE),
+        "w_q": (jax.random.normal(ks[3], (d_inner, h, dk)) * s_inner).astype(L.DTYPE),
+        "w_k": (jax.random.normal(ks[4], (d_inner, h, dk)) * s_inner).astype(L.DTYPE),
+        "w_v": (jax.random.normal(ks[5], (d_inner, h, dv)) * s_inner).astype(L.DTYPE),
+        "w_if": (jax.random.normal(ks[6], (d_inner, h, 2)) * s_inner).astype(jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h, 1)), jnp.full((h, 1), 3.0)], axis=-1
+        ).astype(jnp.float32),  # forget-gate bias +3 (standard LSTM trick)
+        "head_ln": {"scale": jnp.ones((h, dv), L.DTYPE)},
+        "w_out": (jax.random.normal(ks[7], (d_inner, d)) * s_inner).astype(L.DTYPE),
+    }
+
+
+def mlstm_block_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    m = policy.model_axis
+    dp = policy.dp_axes if policy.fsdp else None
+    # 4 heads < axis: shard the per-head dims (dk/dv) over model
+    return {
+        "ln": L.norm_specs(cfg),
+        "w_up": P(dp, m),
+        "w_z": P(dp, m),
+        "conv_w": P(None, m),
+        "conv_b": P(m),
+        "w_q": P(m, None, None),
+        "w_k": P(m, None, None),
+        "w_v": P(m, None, None),
+        "w_if": P(m, None, None),
+        "b_if": P(None, None),
+        "head_ln": {"scale": P(None, None)},
+        "w_out": P(m, dp),
+    }
+
+
+def _head_rmsnorm(x, scale):
+    """Per-head RMSNorm over the value dim.  x: (..., H, DV)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_proj(cfg, params, x, conv_prev=None):
+    from repro.models.ssm import _causal_depthwise_conv
+
+    h_in = L.apply_norm(cfg, params["ln"], x)
+    up = jnp.einsum("bsd,de->bse", h_in, params["w_up"])
+    z = jnp.einsum("bsd,de->bse", h_in, params["w_z"])
+    conv = _causal_depthwise_conv(up, params["conv_w"], params["conv_b"], conv_prev)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("bse,ehk->bshk", conv, params["w_q"])
+    k = jnp.einsum("bse,ehk->bshk", conv, params["w_k"])
+    v = jnp.einsum("bse,ehv->bshv", up, params["w_v"])
+    gates = jnp.einsum(
+        "bse,ehg->bshg", up.astype(jnp.float32), params["w_if"]
+    ) + params["b_if"]
+    i_pre, f_pre = gates[..., 0], gates[..., 1]
+    return up, z, q, k, v, i_pre, f_pre
+
+
+def apply_mlstm_block(cfg: ArchConfig, shard: Shard, params, x, initial=None):
+    ssm = cfg.ssm
+    d_inner, h, dk, dv = _mdims(cfg)
+    bq, s, _ = x.shape
+    up, z, q, k, v, i_pre, f_pre = _mlstm_proj(cfg, params, x)
+    chunk = min(ssm.chunk, s)
+    if s % chunk:
+        chunk = s
+    hs, (c, n, m) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk, initial)
+    # conv left-context for a subsequent decode continuation
+    kconv = ssm.conv_kernel - 1
+    pad = jnp.zeros((bq, max(kconv - s, 0), d_inner), up.dtype)
+    conv_tail = jnp.concatenate([pad, up[:, max(s - kconv, 0):]], axis=1)
+    state = {"c": c, "n": n, "m": m, "conv": conv_tail}
+    hs = _head_rmsnorm(hs, params["head_ln"]["scale"]).astype(x.dtype)
+    out = hs.reshape(bq, s, d_inner) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(x.dtype)
+    return x + jnp.einsum("bse,ed->bsd", out, params["w_out"]), state
+
+
+def apply_mlstm_decode(cfg: ArchConfig, shard: Shard, params, x, state):
+    """x: (b, 1, d); state dict per mlstm_state_shape."""
+    d_inner, h, dk, dv = _mdims(cfg)
+    bq = x.shape[0]
+    conv_prev = state["conv"]
+    up, z, q, k, v, i_pre, f_pre = _mlstm_proj(cfg, params, x, conv_prev)
+    new_conv = jnp.concatenate([conv_prev[:, 1:], up], axis=1)
+    hs, (c, n, m) = mlstm_decode_step(
+        (state["c"], state["n"], state["m"]),
+        q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0],
+    )
+    hs = _head_rmsnorm(hs, params["head_ln"]["scale"]).astype(x.dtype)
+    out = hs.reshape(bq, 1, d_inner) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(x.dtype)
+    y = x + jnp.einsum("bse,ed->bsd", out, params["w_out"])
+    return y, {"c": c, "n": n, "m": m, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential; recurrent memory mixing)
+# ---------------------------------------------------------------------------
+
+def slstm_state_shape(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {
+        "c": (batch, h, dh),
+        "n": (batch, h, dh),
+        "m": (batch, h, dh),
+        "h": (batch, h, dh),
+    }
+
+
+def init_slstm_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_r = dh ** -0.5
+    return {
+        "ln": L.init_norm(cfg),
+        # input projections for (z, i, f, o)
+        "w_in": (jax.random.normal(ks[0], (d, 4, h, dh)) * s_in).astype(jnp.float32),
+        # recurrent block-diagonal mixing per head for (z, i, f, o)
+        "r": (jax.random.normal(ks[1], (4, h, dh, dh)) * s_r).astype(jnp.float32),
+        "b": jnp.zeros((4, h, dh), jnp.float32)
+        .at[2]
+        .set(3.0),  # forget bias
+        "head_ln": {"scale": jnp.ones((h, dh), L.DTYPE)},
+        "w_out": (jax.random.normal(ks[2], (d, d)) * s_in).astype(L.DTYPE),
+    }
+
+
+def slstm_block_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    m = policy.model_axis
+    dp = policy.dp_axes if policy.fsdp else None
+    return {
+        "ln": L.norm_specs(cfg),
+        "w_in": P(dp, None, None, m),
+        "r": P(None, None, None, m),
+        "b": P(None, None, m),
+        "head_ln": {"scale": P(None, m)},
+        "w_out": P(dp, m),
+    }
+
+
+def _slstm_cell(params, carry, pre_t):
+    """One sLSTM step.  pre_t: (B,4,H,DH) input preacts; carry (c,n,m,h)."""
+    c, n, m, h_prev = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, params["r"])
+    pre = pre_t + rec + params["b"][None]
+    z = jnp.tanh(pre[:, 0])
+    li = pre[:, 1]  # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(lf + m, li)
+    iw = jnp.exp(li - m_new)
+    fw = jnp.exp(lf + m - m_new)
+    c_new = fw * c + iw * z
+    n_new = jnp.maximum(fw * n + iw, jnp.exp(-m_new))
+    h_new = o * c_new / n_new
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def apply_slstm_block(cfg: ArchConfig, shard: Shard, params, x, initial=None):
+    bq, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xin = L.apply_norm(cfg, params["ln"], x)
+    pre = jnp.einsum("bsd,dghe->bsghe", xin.astype(jnp.float32), params["w_in"])
+    if initial is None:
+        zeros = jnp.zeros((bq, h, dh), jnp.float32)
+        carry = (zeros, zeros + 1.0, zeros, zeros)
+    else:
+        carry = (initial["c"], initial["n"], initial["m"], initial["h"])
+
+    def step(carry, t):
+        return _slstm_cell(params, carry, pre[:, t])
+
+    (c, n, m, hl), hs = jax.lax.scan(step, carry, jnp.arange(s))
+    hs = hs.transpose(1, 0, 2, 3)  # (B,S,H,DH)
+    hs = _head_rmsnorm(hs, params["head_ln"]["scale"])
+    out = jnp.einsum("bsd,de->bse", hs.reshape(bq, s, d).astype(x.dtype), params["w_out"])
+    return x + out, {"c": c, "n": n, "m": m, "h": hl}
+
+
+def apply_slstm_decode(cfg: ArchConfig, shard: Shard, params, x, state):
+    y, new_state = apply_slstm_block(cfg, shard, params, x, initial=state)
+    return y, new_state

@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamWConfig, global_norm, init, state_specs, update
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "global_norm",
+    "init",
+    "state_specs",
+    "update",
+    "constant",
+    "warmup_cosine",
+]

@@ -1,0 +1,91 @@
+"""AdamW with ZeRO-style sharded state and fp32 master weights.
+
+Functional API (no optimizer classes):
+
+    state = init(params, master_fp32=True)
+    new_params, new_state = update(grads, state, params, lr, cfg)
+
+State sharding: m/v/master inherit the PARAM PartitionSpecs via
+:func:`state_specs` — with FSDP param specs that is full ZeRO-3; without
+FSDP the states still shard over the model axis (ZeRO-1-ish on the TP
+dimension).  Gradients arrive in fp32 (cast by the train step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init", "update", "state_specs", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True
+
+
+def init(params, cfg: AdamWConfig = AdamWConfig()):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def state_specs(param_specs, cfg: AdamWConfig = AdamWConfig()):
+    from jax.sharding import PartitionSpec as P
+
+    specs = {
+        "step": P(),
+        "m": param_specs,
+        "v": param_specs,
+    }
+    if cfg.master_fp32:
+        specs["master"] = param_specs
+    return specs
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    ref = state["master"] if cfg.master_fp32 else params
+
+    def upd(p32, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        return p32.astype(jnp.float32) - lr * (u + cfg.weight_decay * p32.astype(jnp.float32))
+
+    new_master = jax.tree.map(upd, ref, m, v)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params
+    )
+    new_state = {"step": step, "m": m, "v": v}
+    if cfg.master_fp32:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "clip_scale": scale}

@@ -1,0 +1,19 @@
+from repro.roofline.analysis import (
+    DCI_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    analyze_compiled,
+    model_flops,
+    parse_collectives,
+)
+
+__all__ = [
+    "DCI_BW",
+    "HBM_BW",
+    "ICI_BW",
+    "PEAK_FLOPS",
+    "analyze_compiled",
+    "model_flops",
+    "parse_collectives",
+]

@@ -1,0 +1,92 @@
+"""Perf-hillclimb reporting: apply the kernel-substitution model to the
+dry-run artifacts of the selected cells and write
+reports/perf_hillclimb.json (consumed by EXPERIMENTS.md §Perf).
+
+Run: PYTHONPATH=src python -m repro.roofline.hillclimb
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro.configs import SHAPE_CELLS, get_config
+from repro.configs.base import ShardingPolicy
+from repro.roofline.kernel_model import kernel_adjusted_terms
+
+REPORTS = pathlib.Path("reports/dryrun")
+OUT = pathlib.Path("reports/perf_hillclimb.json")
+
+CELLS = [
+    ("qwen2-0.5b", "train_4k", "pod16x16"),
+    ("qwen2-0.5b", "prefill_32k", "pod16x16"),
+    ("qwen2.5-14b", "train_4k", "pod16x16"),
+    ("command-r-plus-104b", "train_4k", "pod16x16"),
+    ("internvl2-76b", "train_4k", "pod16x16"),
+    ("qwen2.5-14b", "train_4k", "pod2x16x16"),
+    ("xlstm-350m", "train_4k", "pod16x16"),
+]
+
+
+def _policy_from_report(rep: dict) -> ShardingPolicy:
+    p = rep["policy"]
+    return ShardingPolicy(
+        dp_axes=tuple(p.get("dp_axes", ("data",))),
+        fsdp=p["fsdp"],
+        seq_shard=p["seq_shard"],
+        attn_mode=p["attn_mode"],
+        attn_pad_heads=p.get("attn_pad_heads", 0),
+        shard_kv_heads=p["shard_kv_heads"],
+        kv_seq_shard=p["kv_seq_shard"],
+        num_microbatches=p["num_microbatches"],
+    )
+
+
+def _mesh_shape(rep: dict) -> dict:
+    dims = rep["mesh"]
+    if len(dims) == 3:
+        return {"pod": dims[0], "data": dims[1], "model": dims[2]}
+    return {"data": dims[0], "model": dims[1]}
+
+
+def run():
+    out = {}
+    for arch, shape, mesh_tag in CELLS:
+        path = REPORTS / f"{arch}__{shape}__{mesh_tag}.json"
+        if not path.exists():
+            continue
+        rep = json.loads(path.read_text())
+        cfg = get_config(arch)
+        cell = SHAPE_CELLS[shape]
+        policy = _policy_from_report(rep)
+        adj = kernel_adjusted_terms(rep, cfg, cell, policy, _mesh_shape(rep))
+        out[f"{arch}__{shape}__{mesh_tag}"] = {
+            "as_compiled": {
+                "terms": rep["terms"],
+                "dominant": rep["dominant"],
+                "useful": rep["useful_flop_ratio"],
+            },
+            "kernel_substituted": {
+                "terms": adj["terms"],
+                "dominant": adj["dominant"],
+                "attention_xla_bytes": adj["attention_traffic"]["xla_bytes"],
+                "attention_flash_bytes": adj["attention_traffic"]["flash_bytes"],
+            },
+            "collectives": {
+                "ici": rep["collectives"]["ici_bytes"],
+                "dci": rep["collectives"]["dci_bytes"],
+            },
+        }
+    OUT.parent.mkdir(exist_ok=True)
+    OUT.write_text(json.dumps(out, indent=2))
+    for k, v in out.items():
+        a, s = v["as_compiled"], v["kernel_substituted"]
+        print(f"{k}")
+        print(f"  as-compiled: {({kk: round(vv,2) for kk,vv in a['terms'].items()})} dom={a['dominant']}")
+        print(f"  kernel-sub : {({kk: round(vv,2) for kk,vv in s['terms'].items()})} dom={s['dominant']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

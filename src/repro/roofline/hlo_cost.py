@@ -1,0 +1,436 @@
+"""HLO cost walker: flops / HBM bytes / collective wire bytes with WHILE
+trip counts resolved.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (trip counts
+are invisible to HloCostAnalysis), which undercounts a scanned-layer model
+by a factor of n_layers.  This walker parses the optimized (post-partition,
+per-device) HLO text, computes per-computation costs, and resolves caller
+multiplicities: while bodies multiply by their trip count (taken from the
+loop's ``backend_config known_trip_count``, falling back to the condition's
+comparison constant), fusions/calls/branches by 1.
+
+Cost model (per instruction, HBM-traffic oriented):
+  dot          2 * prod(result_dims) * contraction_size flops
+               bytes = operands + result (at the call site computation)
+  fusion       bytes = operands + result (inner elementwise ops are free;
+               inner DOTS still counted as flops)
+  dus/ds       2x the update/result bytes (in-place semantics)
+  collectives  ring-model wire bytes, split ICI vs inter-pod DCI
+  elementwise  bytes = operands + result
+  bookkeeping  (tuple/gte/parameter/constant/bitcast/...) free
+
+Computations are classified by their INVOCATION site: `calls=` (fusion,
+inner bytes free), `body=`/`condition=` (loop, full accounting),
+`to_apply=` (reduce-apply, free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["walk_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    "get-dimension-size", "opt-barrier", "copy-start", "copy-done",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "send", "recv", "send-done", "recv-done", "domain",
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_TYPE_HEAD = re.compile(r"^[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?")
+_IOTA_RG = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_EXPLICIT_RG = re.compile(r"replica_groups=\{\{(.*?)\}\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _type_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _type_dims(type_str):
+        total += math.prod(dims) * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+def _split_instr(line: str):
+    """'  [ROOT] %name = TYPE op(args), attrs' -> (name, type, op, rest)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rhs = s[eq + 3 :]
+    if rhs.startswith("("):  # tuple type: find matching paren
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: i + 1]
+                    rest = rhs[i + 1 :].lstrip()
+                    break
+        else:
+            return None
+    else:
+        m = _TYPE_HEAD.match(rhs)
+        if not m:
+            return None
+        type_str = m.group(0)
+        rest = rhs[m.end() :].lstrip()
+    sp = rest.find("(")
+    if sp < 0:
+        return None
+    op = rest[:sp].strip()
+    return name, type_str, op, rest[sp + 1 :]
+
+
+def _operand_names(args_str: str) -> list[str]:
+    names, depth, buf = [], 0, []
+    for ch in args_str:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        else:
+            buf.append(ch)
+    for part in "".join(buf).split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            names.append(part[1:].split(" ")[0])
+    return names
+
+
+def _replica_group_info(line: str, pod_size: int):
+    m = _IOTA_RG.search(line)
+    if m:
+        g, k = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(math.prod(dims)).reshape(dims)
+        if m.group(4):
+            ids = np.transpose(ids, [int(x) for x in m.group(4).split(",")])
+        groups = ids.reshape(g, k)
+        crosses = bool(
+            ((groups // pod_size).max(1) != (groups // pod_size).min(1)).any()
+        )
+        return k, crosses
+    m = _EXPLICIT_RG.search(line)
+    if m:
+        first = m.group(1).split("},{")[0]
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        pods = {i // pod_size for i in ids}
+        return max(len(ids), 1), len(pods) > 1
+    return 1, False
+
+
+@dataclasses.dataclass
+class _CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_ici: float = 0.0
+    coll_dci: float = 0.0
+    calls: list = dataclasses.field(default_factory=list)
+    coll_types: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    coll_ici: float
+    coll_dci: float
+    coll_by_type: dict
+    n_collectives: int
+    while_trip_counts: dict
+
+
+def top_instructions(hlo_text: str, k: int = 15, pod_size: int = 256):
+    """Debug view: the k largest flop-instructions and collective ops,
+    multiplied by their computation's resolved multiplicity."""
+    cost = walk_hlo(hlo_text, pod_size=pod_size, _collect_top=True)
+    tops = sorted(cost._top_flops, key=lambda t: -t[0])[:k]  # type: ignore
+    colls = sorted(cost._top_colls, key=lambda t: -t[0])[:k]  # type: ignore
+    return tops, colls
+
+
+def walk_hlo(hlo_text: str, pod_size: int = 256, _collect_top: bool = False) -> HloCost:
+    lines = hlo_text.splitlines()
+
+    # ---- split into computations ----
+    comps: dict[str, list[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for ln in lines:
+        if ln.endswith("{") and ("->" in ln) and not ln.startswith(" "):
+            hdr = ln.lstrip()
+            is_entry = hdr.startswith("ENTRY")
+            if is_entry:
+                hdr = hdr[len("ENTRY") :].lstrip()
+            name = hdr.split(" ")[0].lstrip("%")
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = cur
+            continue
+        if ln.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(ln)
+    if entry is None:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return HloCost(0, 0, 0, 0, {}, 0, {})
+
+    # ---- classify computations by invocation ----
+    kind: dict[str, str] = {}  # 'fusion' | 'loop' | 'apply'
+    for body in comps.values():
+        for ln in body:
+            for m in re.finditer(r"calls=%?([\w.\-]+)", ln):
+                kind[m.group(1)] = "fusion"
+            for m in re.finditer(r"(?:body|condition)=%?([\w.\-]+)", ln):
+                kind.setdefault(m.group(1), "loop")
+            for m in re.finditer(r"to_apply=%?([\w.\-]+)", ln):
+                kind.setdefault(m.group(1), "apply")
+            for m in re.finditer(
+                r"(?:true_computation|false_computation)=%?([\w.\-]+)", ln
+            ):
+                kind.setdefault(m.group(1), "loop")
+    kind[entry] = "loop"  # full accounting at top level
+
+    def cond_trip_count(cond_name: str) -> int:
+        best = 1
+        for ln in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # ---- per-fusion parameter read sizes ------------------------------------
+    # a fusion that only dynamic-slices a parameter reads the SLICE, not the
+    # whole buffer (critical for KV-cache decode loops).
+    fusion_param_reads: dict[str, dict[int, int]] = {}
+    for name, body in comps.items():
+        if kind.get(name, "fusion") != "fusion":
+            continue
+        # param name -> (index, full bytes)
+        params: dict[str, tuple[int, int]] = {}
+        uses: dict[str, list[tuple[str, int]]] = {}
+        symtab_f: dict[str, str] = {}
+        for ln in body:
+            parsed = _split_instr(ln)
+            if not parsed:
+                continue
+            iname, rtype, op, rest = parsed
+            symtab_f[iname] = rtype
+            if op == "parameter":
+                idx = int(re.search(r"parameter\((\d+)\)", ln).group(1))
+                params[iname] = (idx, _type_bytes(rtype))
+            else:
+                for o in _operand_names(rest):
+                    uses.setdefault(o, []).append((op, _type_bytes(rtype)))
+        reads: dict[int, int] = {}
+        for pname, (idx, full) in params.items():
+            u = uses.get(pname, [])
+            if u and all(op in ("dynamic-slice", "slice") for op, _ in u):
+                reads[idx] = sum(b for _, b in u)
+            else:
+                reads[idx] = full
+        fusion_param_reads[name] = reads
+
+    costs: dict[str, _CompCost] = {}
+    trip_counts: dict[str, int] = {}
+    n_coll = 0
+    instr_flops: list = []  # (flops, comp, line-head) pre-multiplicity
+    instr_colls: list = []  # (wire, comp, line-head)
+
+    for name, body in comps.items():
+        symtab: dict[str, str] = {}
+        cc = _CompCost()
+        free_bytes = kind.get(name, "fusion") in ("fusion", "apply")
+        for ln in body:
+            parsed = _split_instr(ln)
+            if not parsed:
+                continue
+            iname, rtype, op, rest = parsed
+            symtab[iname] = rtype
+            if op in _FREE_OPS:
+                continue
+            rbytes = _type_bytes(rtype)
+            opnames = _operand_names(rest)
+
+            if op == "dot":
+                out_dims = _type_dims(rtype)
+                out_elems = math.prod(out_dims[0][1]) if out_dims else 0
+                contraction = 1
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                if m and opnames and opnames[0] in symtab:
+                    lhs_dims = _type_dims(symtab[opnames[0]])
+                    if lhs_dims:
+                        for idx in (int(x) for x in m.group(1).split(",") if x):
+                            if idx < len(lhs_dims[0][1]):
+                                contraction *= lhs_dims[0][1][idx]
+                cc.flops += 2.0 * out_elems * contraction
+                if _collect_top:
+                    instr_flops.append(
+                        (2.0 * out_elems * contraction, name, ln.strip()[:160])
+                    )
+                if not free_bytes:
+                    cc.bytes += rbytes + sum(
+                        _type_bytes(symtab.get(o, "")) for o in opnames
+                    )
+                continue
+
+            if op == "convolution":
+                out_dims = _type_dims(rtype)
+                out_elems = math.prod(out_dims[0][1]) if out_dims else 0
+                kshape = (
+                    _type_dims(symtab.get(opnames[1], ""))
+                    if len(opnames) > 1
+                    else []
+                )
+                kelems = math.prod(kshape[0][1][:-1]) if kshape else 1
+                cc.flops += 2.0 * out_elems * kelems
+                if not free_bytes:
+                    cc.bytes += 3 * rbytes
+                continue
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                k, crosses = _replica_group_info(ln, pod_size)
+                ring = (k - 1) / k if k > 1 else 0.0
+                if base == "all-reduce":
+                    wire = 2.0 * rbytes * ring
+                elif base == "reduce-scatter":
+                    wire = rbytes * (k - 1)
+                elif base == "collective-permute":
+                    wire = rbytes
+                else:
+                    wire = rbytes * ring
+                cc.coll_types[base] = cc.coll_types.get(base, 0.0) + wire
+                n_coll += 1
+                if _collect_top:
+                    instr_colls.append((wire, name, ln.strip()[:160]))
+                if crosses:
+                    cc.coll_dci += wire
+                else:
+                    cc.coll_ici += wire
+                cc.bytes += 2 * rbytes
+                continue
+
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                if bm:
+                    tm = _TRIP_RE.search(ln)
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                        trips = cond_trip_count(cm.group(1)) if cm else 1
+                    trip_counts[bm.group(1)] = trips
+                    cc.calls.append((bm.group(1), float(trips)))
+                continue
+
+            if op in ("fusion", "call", "async-start", "custom-call"):
+                callee = None
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                    callee = m.group(1)
+                    cc.calls.append((callee, 1.0))
+                if not free_bytes:
+                    reads = fusion_param_reads.get(callee or "", {})
+                    opbytes = 0
+                    for i, o in enumerate(opnames):
+                        full = _type_bytes(symtab.get(o, ""))
+                        opbytes += min(full, reads.get(i, full)) if reads else full
+                    cc.bytes += rbytes + opbytes
+                continue
+
+            if op == "conditional":
+                for m in re.finditer(
+                    r"(?:true_computation|false_computation)=%?([\w.\-]+)", ln
+                ):
+                    cc.calls.append((m.group(1), 1.0))
+                continue
+
+            if op in ("dynamic-update-slice", "dynamic-slice"):
+                if not free_bytes:
+                    upd = (
+                        _type_bytes(symtab.get(opnames[1], ""))
+                        if op == "dynamic-update-slice" and len(opnames) > 1
+                        else rbytes
+                    )
+                    cc.bytes += 2 * upd
+                continue
+
+            # generic op (elementwise / reduce / transpose / copy / gather ...)
+            if not free_bytes:
+                cc.bytes += rbytes + sum(
+                    _type_bytes(symtab.get(o, "")) for o in opnames
+                )
+        costs[name] = cc
+
+    # ---- resolve multiplicities from ENTRY ----
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in costs:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, k in costs[name].calls:
+            visit(callee, m * k, depth + 1)
+
+    visit(entry, 1.0)
+
+    tot = HloCost(0.0, 0.0, 0.0, 0.0, {}, n_coll, trip_counts)
+    for name, m in mult.items():
+        cc = costs[name]
+        tot.flops += cc.flops * m
+        tot.bytes += cc.bytes * m
+        tot.coll_ici += cc.coll_ici * m
+        tot.coll_dci += cc.coll_dci * m
+        for k, v in cc.coll_types.items():
+            tot.coll_by_type[k] = tot.coll_by_type.get(k, 0.0) + v * m
+    if _collect_top:
+        tot._top_flops = [  # type: ignore[attr-defined]
+            (f * mult.get(comp, 0.0), comp, head)
+            for f, comp, head in instr_flops
+        ]
+        tot._top_colls = [  # type: ignore[attr-defined]
+            (w * mult.get(comp, 0.0), comp, head)
+            for w, comp, head in instr_colls
+        ]
+    return tot

@@ -1,0 +1,7 @@
+from repro.serving.engine import (
+    ReplicatedServingEngine,
+    RequestStats,
+    ServeEngineConfig,
+)
+
+__all__ = ["ReplicatedServingEngine", "RequestStats", "ServeEngineConfig"]

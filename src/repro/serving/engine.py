@@ -1,0 +1,171 @@
+"""Replicated batched-serving engine — the paper's System1 as a request
+runtime.
+
+Requests arrive at a master, are grouped into batches (the batching unit),
+and each batch is dispatched to r = N/B server groups (the assignment
+unit).  A batch completes when its FASTEST replica responds; a request's
+latency is its batch's completion time plus queueing.  The engine
+
+* actually executes prefill + decode on a (small) model for the batch the
+  simulated-fastest replica serves (outputs are real tokens),
+* draws per-(batch, replica) service times from the calibrated straggler
+  model and advances a discrete-event clock,
+* feeds observed service times to the spectrum tuner so B adapts online —
+  the serving twin of the training runtime in launch/train.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core import (
+    ReplicationPlan,
+    ServiceDistribution,
+    ShiftedExponential,
+    StragglerTuner,
+    TunerConfig,
+)
+from repro.models import Shard, decode_step, init_params, prefill
+
+__all__ = ["ServeEngineConfig", "RequestStats", "ReplicatedServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeEngineConfig:
+    arch: str = "qwen2-0.5b"
+    n_server_groups: int = 8  # the paper's N
+    n_batches: int = 4  # the paper's B (replication r = N/B)
+    batch_size: int = 4  # requests per batch
+    prompt_len: int = 16
+    gen_tokens: int = 8
+    max_len: int = 64
+    # service-time model per REQUEST-UNIT of work (scaled by batch tokens)
+    delta: float = 0.02
+    mu: float = 50.0
+    seed: int = 0
+    tuner: bool = False
+
+
+@dataclasses.dataclass
+class RequestStats:
+    request_id: int
+    arrival: float
+    completion: float
+    tokens: np.ndarray
+
+    @property
+    def latency(self) -> float:
+        return self.completion - self.arrival
+
+
+class ReplicatedServingEngine:
+    def __init__(self, sc: ServeEngineConfig):
+        self.sc = sc
+        self.cfg = reduced_config(get_config(sc.arch))
+        self.plan = ReplicationPlan(
+            n_data=sc.n_server_groups, n_batches=sc.n_batches
+        )
+        self.params = init_params(jax.random.PRNGKey(sc.seed), self.cfg)
+        self.shard = Shard.local()
+        self.dist: ServiceDistribution = ShiftedExponential(
+            delta=sc.delta, mu=sc.mu
+        )
+        self.rng = np.random.default_rng(sc.seed + 1)
+        self.tuner = StragglerTuner(
+            self.plan, TunerConfig(min_samples=16, cooldown_steps=4)
+        )
+        self.clock = 0.0
+        self._next_id = 0
+        self._decode = jax.jit(
+            lambda p, s, t, c: decode_step(self.cfg, self.shard, p, s, t, c)
+        )
+
+    # -- real model work -----------------------------------------------------
+    def _generate(self, prompts: jnp.ndarray) -> np.ndarray:
+        sc = self.sc
+        logits, state = prefill(
+            self.cfg, self.shard, self.params, {"tokens": prompts},
+            max_len=sc.max_len,
+        )
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for i in range(sc.gen_tokens - 1):
+            logits, state = self._decode(
+                self.params, state, tok, jnp.int32(sc.prompt_len + i)
+            )
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    # -- one master round ----------------------------------------------------
+    def serve_round(self, n_requests: Optional[int] = None) -> list[RequestStats]:
+        """Accept B*batch_size requests (default), dispatch with replication,
+        advance the clock by the paper's completion rule, run the real model
+        once per batch, return per-request stats."""
+        sc = self.sc
+        b = self.plan.n_batches
+        r = self.plan.replication
+        n_requests = n_requests or b * sc.batch_size
+        arrival = self.clock
+
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(self.sc.seed + self._next_id),
+            (n_requests, sc.prompt_len), 0, self.cfg.vocab_size,
+        )
+        # batching unit: contiguous request batches
+        per_batch = max(n_requests // b, 1)
+        # service times: each batch has r replicas; unit work = batch tokens
+        work = per_batch * (sc.prompt_len + sc.gen_tokens) / 100.0
+        times = self.dist.scaled(work).sample(self.rng, (b, r))
+        batch_done = times.min(axis=1)  # fastest replica per batch
+        round_done = float(batch_done.max())
+
+        stats: list[RequestStats] = []
+        for bi in range(b):
+            lo, hi = bi * per_batch, min((bi + 1) * per_batch, n_requests)
+            if lo >= hi:
+                continue
+            tokens = self._generate(prompts[lo:hi])
+            for k in range(hi - lo):
+                stats.append(
+                    RequestStats(
+                        request_id=self._next_id,
+                        arrival=arrival,
+                        completion=arrival + float(batch_done[bi]),
+                        tokens=tokens[k],
+                    )
+                )
+                self._next_id += 1
+
+        self.clock = arrival + round_done
+        # telemetry: per-unit times, censored for unused replicas
+        unit = (times / work).reshape(-1)
+        used = np.zeros_like(times, dtype=bool)
+        used[np.arange(b), times.argmin(axis=1)] = True
+        self.tuner.observe(unit, censored=~used.reshape(-1))
+        if self.sc.tuner:
+            rp = self.tuner.maybe_replan()
+            if rp is not None:
+                self.plan = self.tuner.apply(rp)
+        return stats
+
+    def run(self, n_rounds: int = 5) -> dict:
+        all_stats: list[RequestStats] = []
+        for _ in range(n_rounds):
+            all_stats.extend(self.serve_round())
+        lat = np.array([s.latency for s in all_stats])
+        return {
+            "requests": len(all_stats),
+            "mean_latency": float(lat.mean()),
+            "p99_latency": float(np.quantile(lat, 0.99)),
+            "throughput": len(all_stats) / max(self.clock, 1e-9),
+            "final_B": self.plan.n_batches,
+            "stats": all_stats,
+        }

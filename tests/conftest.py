@@ -1,0 +1,12 @@
+import os
+import sys
+
+# smoke tests / benches see ONE device; the dry-run (and only it) forces 512
+# in its own process.  Keep compilation deterministic & quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,72 @@
+"""Small-mesh dry-run integration test: the same lower+compile pipeline as
+launch.dryrun but on an 8-device (2x4) host mesh with REDUCED configs, in a
+subprocess (device count must be set before jax init)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from jax.sharding import NamedSharding
+    from repro.configs import SHAPE_CELLS, get_config, reduced_config
+    from repro.configs.base import ShapeCell
+    from repro.launch.policies import auto_policy
+    from repro.launch.specs import input_specs
+    from repro.launch.steps import make_decode_step, make_train_step
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    arch, kind = os.environ["T_ARCH"], os.environ["T_KIND"]
+    cfg = reduced_config(get_config(arch))
+    if kind == "train":
+        cell = ShapeCell("t", 64, 8, "train")
+        step = None
+    else:
+        cell = ShapeCell("d", 128, 8, "decode")
+    policy = auto_policy(cfg, cell, mesh)
+    args, specs = input_specs(cfg, cell, policy, mesh)
+    step = (make_train_step(cfg, policy, mesh) if kind == "train"
+            else make_decode_step(cfg, policy, mesh))
+    in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    with mesh:
+        compiled = jax.jit(step, in_shardings=in_sh).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+    from repro.roofline.hlo_cost import walk_hlo
+    w = walk_hlo(compiled.as_text(), pod_size=4)
+    assert w.flops > 0
+    print("SMALL_DRYRUN_OK", arch, kind, f"{w.flops:.2e}")
+    """
+)
+
+
+def _run(arch: str, kind: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["T_ARCH"] = arch
+    env["T_KIND"] = kind
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, f"{arch}/{kind}:\n{r.stderr[-3000:]}"
+    assert "SMALL_DRYRUN_OK" in r.stdout
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-0.5b", "olmoe-1b-7b", "zamba2-7b", "whisper-medium"]
+)
+def test_small_mesh_train_lowering(arch):
+    _run(arch, "train")
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "xlstm-350m"])
+def test_small_mesh_decode_lowering(arch):
+    _run(arch, "decode")

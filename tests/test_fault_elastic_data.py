@@ -1,0 +1,147 @@
+"""Fault detection, elastic rescaling, data pipeline invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ShapeCell
+from repro.core import Exponential, ReplicationPlan
+from repro.data import TokenPipeline
+from repro.distributed import (
+    FaultManager,
+    RescaleExecutor,
+    RuntimeTopology,
+    StragglerDetector,
+    allreduce_bytes,
+)
+
+
+def test_straggler_detector_flags_slow_worker():
+    det = StragglerDetector(4, window=10, threshold=3.0, min_history=3)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        t = rng.uniform(0.9, 1.1, 4)
+        t[2] *= 50  # persistent straggler
+        det.observe(t)
+    mask = det.drop_mask()
+    assert mask.tolist() == [True, True, False, True]
+
+
+def test_straggler_detector_needs_history():
+    det = StragglerDetector(4, min_history=5)
+    det.observe(np.array([1.0, 1.0, 100.0, 1.0]))
+    assert det.drop_mask().all()  # not enough history yet
+
+
+def test_fault_manager_mask_vs_replan():
+    plan = ReplicationPlan(n_data=8, n_batches=4)  # r=2: coords (w, w+4) pair
+    fm = FaultManager(plan, heartbeat_misses_fatal=2)
+    alive = np.ones(8, bool)
+    fm.heartbeat(alive)
+    assert fm.decide().kind == "ok"
+    # worker 1 dies (batch 1 still covered by worker 5)
+    dead1 = alive.copy(); dead1[1] = False
+    fm.heartbeat(dead1); fm.heartbeat(dead1)
+    d = fm.decide()
+    assert d.kind == "mask" and not d.needs_restart
+    # both replicas of batch 1 die -> replan
+    dead2 = dead1.copy(); dead2[5] = False
+    fm.heartbeat(dead2); fm.heartbeat(dead2)
+    d = fm.decide()
+    assert d.kind == "replan" and d.lost_batches == (1,)
+
+
+def test_rescale_executor():
+    topo = RuntimeTopology(ReplicationPlan(16, 8), generation=0)
+    ex = RescaleExecutor(topo)
+    t1 = ex.apply_replan(4)
+    assert t1.plan.n_batches == 4 and t1.generation == 1
+    t2 = ex.shrink(4)  # 16 -> 12 workers
+    assert t2.plan.n_data == 12
+    assert 12 % t2.plan.n_batches == 0
+    t3 = ex.shrink(2, dist=Exponential(mu=1.0))
+    assert t3.plan.n_data == 10
+    assert t3.plan.n_batches == 1  # Exp -> full diversity optimal (Thm 2)
+
+
+def test_allreduce_bytes_model():
+    plan = ReplicationPlan(n_data=32, n_batches=16)  # r=2 across 2 pods
+    g = 10 * 2**20
+    plain = allreduce_bytes(g, plan, "plain")
+    rdp = allreduce_bytes(g, plan, "rdp")
+    assert rdp["cross"] == 0.0
+    assert plain["cross"] > 0.0
+    assert rdp["total"] < plain["total"]
+    weighted = allreduce_bytes(g, plan, "weighted")
+    assert weighted["total"] >= rdp["total"]
+
+
+# -- data pipeline ---------------------------------------------------------------
+
+def _pipe(arch="qwen2-0.5b", gb=16, seq=32):
+    cfg = reduced_config(get_config(arch))
+    cell = ShapeCell("t", seq, gb, "train")
+    return TokenPipeline(cfg, cell, seed=3), cfg
+
+
+def test_pipeline_deterministic():
+    p, _ = _pipe()
+    a = p.global_batch(7)
+    b = p.global_batch(7)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = p.global_batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_batches_partition_global_batch():
+    p, _ = _pipe()
+    full = p.global_batch(3)
+    for b_count in (1, 2, 4, 8):
+        rows = 16 // b_count
+        for bid in range(b_count):
+            shard = p.batch_for(3, bid, b_count)
+            np.testing.assert_array_equal(
+                shard["tokens"], full["tokens"][bid * rows : (bid + 1) * rows]
+            )
+
+
+def test_replica_group_members_get_identical_data():
+    p, _ = _pipe()
+    plan = ReplicationPlan(n_data=8, n_batches=4)
+    for w in range(8):
+        partner = (w + 4) % 8  # same batch id (coord % 4)
+        a = p.shard_for_coord(5, w, plan)
+        b = p.shard_for_coord(5, partner, plan)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    p, _ = _pipe()
+    g = p.global_batch(0)
+    np.testing.assert_array_equal(g["labels"][:, :-1], g["tokens"][:, 1:])
+
+
+@settings(deadline=None, max_examples=10)
+@given(step=st.integers(0, 1000), b_count=st.sampled_from([1, 2, 4, 8, 16]))
+def test_pipeline_partition_property(step, b_count):
+    p, _ = _pipe()
+    full = p.global_batch(step)
+    parts = [p.batch_for(step, i, b_count) for i in range(b_count)]
+    recon = np.concatenate([q["tokens"] for q in parts], axis=0)
+    np.testing.assert_array_equal(recon, full["tokens"])
+
+
+def test_vlm_audio_batch_shapes():
+    from repro.data import make_batch_shapes
+
+    vcfg = reduced_config(get_config("internvl2-76b"))
+    cell = ShapeCell("t", 64, 4, "train")
+    sh = make_batch_shapes(vcfg, cell)
+    assert sh["patch_embeds"] == (4, vcfg.n_patches, vcfg.frontend_dim)
+    assert sh["tokens"] == (4, 64 - vcfg.n_patches)
+    acfg = reduced_config(get_config("whisper-medium"))
+    sh = make_batch_shapes(acfg, cell)
+    assert sh["frames"] == (4, 64, acfg.frontend_dim)
+    assert sh["tokens"] == (4, 8)

@@ -1,0 +1,83 @@
+"""Cyclic gradient coding (the cited alternative scheme) — decode
+correctness + order-statistic closed forms + the comparison result."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Exponential, ShiftedExponential
+from repro.core.gradient_coding import (
+    CyclicGradientCode,
+    compare_schemes,
+    expected_coding_time,
+    simulate_gradient_coding,
+)
+
+
+def test_assignment_structure():
+    code = CyclicGradientCode(n_workers=6, s=2)
+    a = code.assignment()
+    assert a.sum(axis=1).tolist() == [3] * 6  # each worker: s+1 batches
+    assert a.sum(axis=0).tolist() == [3] * 6  # each batch: s+1 replicas
+    assert code.overhead == 3
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.sampled_from([4, 6, 8]),
+    s=st.integers(0, 3),
+    seed=st.integers(0, 100),
+)
+def test_decode_any_n_minus_s_workers(n, s, seed):
+    """Tandon Thm 1: ANY N-s workers suffice to decode the batch sum."""
+    if s >= n:
+        return
+    code = CyclicGradientCode(n_workers=n, s=s)
+    rng = np.random.default_rng(seed)
+    alive = np.zeros(n, dtype=bool)
+    alive[rng.choice(n, size=n - s, replace=False)] = True
+    w = code.decode_weights(alive)
+    assert w is not None
+    b = code.coefficients()[alive]
+    np.testing.assert_allclose(b.T @ w, 1.0, atol=1e-6)
+    # decoding a synthetic gradient: sum of batch gradients recovered
+    g_batches = rng.standard_normal((n, 5))
+    worker_msgs = b @ g_batches  # each worker sends its coded sum
+    recovered = w @ worker_msgs
+    np.testing.assert_allclose(recovered, g_batches.sum(0), atol=1e-4)
+
+
+def test_decode_fails_below_threshold():
+    code = CyclicGradientCode(n_workers=6, s=2)
+    alive = np.array([True, True, True, False, False, False])
+    assert alive.sum() < 6 - 2 + 1  # only 3 < 4 alive
+    assert code.decode_weights(alive) is None
+
+
+@pytest.mark.parametrize("s", [0, 1, 3])
+def test_closed_form_matches_mc(s):
+    dist = ShiftedExponential(delta=0.3, mu=2.0)
+    mc = simulate_gradient_coding(dist, 8, s, n_trials=100_000, seed=s)
+    cf = expected_coding_time(dist, 8, s)
+    assert abs(mc.mean - cf) < 5 * mc.stderr + 1e-3
+
+
+def test_replication_beats_coding_iid():
+    """The ablation headline: at equal storage overhead under i.i.d.
+    stragglers, the paper's replication wins every interior point."""
+    cmp = compare_schemes(
+        ShiftedExponential(delta=0.3, mu=2.0), 16, n_trials=20_000
+    )
+    for oh, v in cmp["common"].items():
+        if 1 < oh < 16:
+            assert v["replication"] < v["coding"], (oh, v)
+
+
+def test_s0_equals_full_parallelism():
+    """s=0 coding == B=N replication (both wait for everyone)."""
+    from repro.core import simulate_maxmin
+
+    dist = Exponential(mu=1.0)
+    cod = simulate_gradient_coding(dist, 8, 0, n_trials=50_000, seed=3)
+    rep = simulate_maxmin(dist, 8, 8, n_trials=50_000, seed=4)
+    assert abs(cod.mean - rep.mean) < 4 * (cod.stderr + rep.stderr)

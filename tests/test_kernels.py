@@ -1,0 +1,192 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (deliverable c).
+
+Kernels run in interpret mode (CPU container; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import decode_attention, flash_attention, ssd_scan
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models.ssm import ssd_sequential
+from repro.models.xlstm import mlstm_chunked, mlstm_sequential
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=5e-5, rtol=5e-5
+    )
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,skv,h,kv,d",
+    [
+        (2, 128, 128, 4, 2, 64),
+        (1, 256, 256, 2, 1, 128),
+        (2, 64, 192, 4, 4, 32),  # q shorter than kv (continuation)
+        (1, 130, 130, 2, 2, 64),  # non-multiple of block -> padding path
+    ],
+)
+def test_flash_attention_sweep(b, sq, skv, h, kv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, skv, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, skv, kv, d)).astype(dtype)
+    off = skv - sq
+    out = flash_attention(q, k, v, causal=True, q_offset=off, impl="pallas")
+    kf = jnp.repeat(k, h // kv, axis=2)
+    vf = jnp.repeat(v, h // kv, axis=2)
+    ref = flash_attention_ref(q, kf, vf, causal=True, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    out = flash_attention(q, k, v, causal=False, impl="pallas")
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5,
+                               rtol=5e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    sq=st.sampled_from([64, 128, 256]),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([32, 64, 128]),
+)
+def test_flash_attention_property(sq, h, d):
+    """Softmax rows are convex combinations: output within V's row range."""
+    ks = jax.random.split(jax.random.PRNGKey(sq * h + d), 3)
+    q = jax.random.normal(ks[0], (1, sq, h, d))
+    k = jax.random.normal(ks[1], (1, sq, h, d))
+    v = jax.random.normal(ks[2], (1, sq, h, d))
+    out = flash_attention(q, k, v, causal=True, impl="pallas")
+    assert bool(jnp.isfinite(out).all())
+    assert float(out.max()) <= float(v.max()) + 1e-4
+    assert float(out.min()) >= float(v.min()) - 1e-4
+
+
+# -- ssd scan ------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,g,n,chunk",
+    [
+        (2, 128, 4, 16, 2, 8, 32),
+        (1, 256, 2, 64, 1, 64, 128),
+        (2, 96, 3, 32, 3, 16, 96),  # single chunk
+    ],
+)
+def test_ssd_scan_sweep(b, s, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bb = (jax.random.normal(ks[3], (b, s, g, n)) * 0.3).astype(dtype)
+    cc = (jax.random.normal(ks[4], (b, s, g, n)) * 0.3).astype(dtype)
+    d_skip = jnp.ones((h,)) * 0.5
+    y, st_ = ssd_scan(x, dt, a_log, bb, cc, d_skip, chunk=chunk, impl="pallas")
+    yr, str_ = ssd_sequential(x, dt, a_log, bb, cc, d_skip)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(
+        np.asarray(st_), np.asarray(str_), atol=5e-3, rtol=5e-3
+    )
+
+
+def test_ssd_scan_decay_property():
+    """With strongly negative A (fast decay), the final state magnitude is
+    bounded by the most recent inputs."""
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jnp.ones((b, s, h)) * 5.0  # big dt -> strong decay per step
+    a_log = jnp.ones((h,)) * 2.0  # A = -e^2
+    bb = jax.random.normal(ks[2], (b, s, 1, n)) * 0.1
+    cc = jax.random.normal(ks[3], (b, s, 1, n)) * 0.1
+    y, st_ = ssd_scan(x, dt, a_log, bb, cc, jnp.zeros((h,)), chunk=32,
+                      impl="pallas")
+    # state ~ only the last step's contribution
+    expect = jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt[:, -1],
+        jnp.repeat(bb, h, 2)[:, -1], x[:, -1]
+    )
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(expect), atol=1e-3)
+
+
+# -- decode attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,d,smax,clen,ns",
+    [
+        (2, 4, 2, 64, 1024, 700, 8),
+        (1, 2, 1, 128, 512, 512, 4),
+        (2, 2, 2, 64, 2048, 1, 8),
+        (1, 8, 8, 64, 4096, 3000, 16),
+    ],
+)
+def test_decode_attention_sweep(b, h, kv, d, smax, clen, ns, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d)).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, smax, kv, d)).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, smax, kv, d)).astype(dtype)
+    out = decode_attention(q, kc, vc, jnp.int32(clen), impl="pallas",
+                           n_splits=ns)
+    ref = decode_attention(q, kc, vc, jnp.int32(clen), impl="xla")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_combine_is_associative():
+    """Split-softmax combine equals unsplit softmax for any partition —
+    the property that makes the cross-chip psum combine exact."""
+    from repro.kernels.decode_attention.kernel import combine_splits
+
+    rng = np.random.default_rng(0)
+    s, d = 64, 8
+    logits = rng.standard_normal(s).astype(np.float32)
+    v = rng.standard_normal((s, d)).astype(np.float32)
+    full = (np.exp(logits - logits.max()) / np.exp(logits - logits.max()).sum()) @ v
+    for cut in (1, 7, 32, 63):
+        parts = [(logits[:cut], v[:cut]), (logits[cut:], v[cut:])]
+        ms = np.array([p[0].max() for p in parts])
+        ls = np.array([np.exp(p[0] - p[0].max()).sum() for p in parts])
+        accs = np.stack([np.exp(p[0] - p[0].max()) @ p[1] for p in parts])
+        out = combine_splits(
+            jnp.asarray(ms)[None], jnp.asarray(ls)[None], jnp.asarray(accs)[None]
+        )[0]
+        np.testing.assert_allclose(np.asarray(out), full, atol=1e-5)
+
+
+# -- mLSTM chunked (model-internal kernel twin) ---------------------------------
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunked_vs_sequential(chunk):
+    b, s, h, dk, dv = 2, 64, 3, 8, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    ip = jax.random.normal(ks[3], (b, s, h)) * 2.0
+    fp = jax.random.normal(ks[4], (b, s, h)) * 2.0 + 2.0
+    hs, (c1, n1, m1) = mlstm_sequential(q, k, v, ip, fp)
+    hc, (c2, n2, m2) = mlstm_chunked(q, k, v, ip, fp, chunk)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hc), atol=5e-5,
+                               rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=5e-5,
+                               rtol=5e-5)

@@ -1,0 +1,145 @@
+"""AdamW + schedules + gradient compression + checkpointing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step
+from repro.optim import AdamWConfig, constant, init, state_specs, update, warmup_cosine
+from repro.optim.compression import (
+    compress,
+    compressed_reduce_host,
+    decompress,
+    init_error_state,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip=1e9)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = init(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return update(g, state, params, 0.05, cfg)
+
+    for _ in range(300):
+        params, state, m = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+    assert int(state["step"]) == 300
+
+
+def test_grad_clip():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = update(g, state, params, 0.1, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert float(metrics["clip_scale"]) == pytest.approx(1 / 200.0)
+
+
+def test_state_specs_structure():
+    from jax.sharding import PartitionSpec as P
+
+    params = {"a": jnp.zeros((4, 4)), "b": {"c": jnp.zeros(3)}}
+    pspecs = {"a": P("model", None), "b": {"c": P(None)}}
+    cfg = AdamWConfig(master_fp32=True)
+    st = init(params, cfg)
+    specs = state_specs(pspecs, cfg)
+    assert jax.tree.structure(st) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def test_schedules():
+    sch = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+    assert float(sch(0)) == 0.0
+    assert float(sch(10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(sch(100)) == pytest.approx(0.1, abs=1e-3)
+    assert float(constant(0.3)(57)) == pytest.approx(0.3)
+
+
+def test_compression_error_feedback_converges():
+    """Mean of compressed gradients + error feedback tracks the true mean."""
+    rng = np.random.default_rng(0)
+    n_workers = 4
+    g_true = [
+        {"w": jnp.asarray(rng.standard_normal(128).astype(np.float32))}
+        for _ in range(n_workers)
+    ]
+    errors = [init_error_state(g) for g in g_true]
+    exact = np.mean([np.asarray(g["w"]) for g in g_true], axis=0)
+    total = np.zeros(128, np.float32)
+    total_exact = np.zeros(128, np.float32)
+    for step in range(50):
+        mean, errors = compressed_reduce_host(g_true, errors)
+        total += np.asarray(mean["w"])
+        total_exact += exact
+    # accumulated estimate converges (error feedback: bias -> 0)
+    np.testing.assert_allclose(total / 50, total_exact / 50, atol=1e-3)
+
+
+def test_compress_roundtrip_bounds():
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(64).astype(np.float32))
+    e = jnp.zeros(64)
+    q, scale, new_e = compress(g, e)
+    assert q.dtype == jnp.int8
+    rec = decompress(q, scale)
+    assert float(jnp.abs(rec - g).max()) <= float(scale) * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(rec + new_e), np.asarray(g), atol=1e-6)
+
+
+# -- checkpointing --------------------------------------------------------------
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros(4)}
+    return {"params": params, "opt": init(params)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    ck.save(10, st, {"plan_batches": 4})
+    restored, meta = ck.restore(_state(seed=1))
+    assert meta["plan_batches"] == 4
+    np.testing.assert_allclose(
+        np.asarray(restored["params"]["w"]), np.asarray(st["params"]["w"])
+    )
+    assert latest_step(tmp_path) == 10
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, _state(s), {"s": s})
+    ck.wait()
+    assert latest_step(tmp_path) == 4
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (5, 6):
+        ck.save(s, _state(s), {"s": s})
+    _, meta = ck.restore(_state(), step=5)
+    assert meta["s"] == 5
+
+
+def test_checkpoint_leaf_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ck.restore({"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_checkpoint_missing_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore({"a": jnp.zeros(1)})

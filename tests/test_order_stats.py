@@ -1,0 +1,110 @@
+"""Closed-form order statistics (Thms 2-4) vs Monte-Carlo + properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Exponential,
+    ShiftedExponential,
+    completion_mean,
+    completion_quantile,
+    completion_var,
+    generalized_harmonic,
+    harmonic,
+    simulate_maxmin,
+)
+from repro.core.order_stats import (
+    expected_max_exponential,
+    expected_max_min_groups,
+)
+
+
+def test_harmonic_values():
+    assert harmonic(1) == 1.0
+    assert abs(harmonic(4) - (1 + 0.5 + 1 / 3 + 0.25)) < 1e-12
+    assert abs(generalized_harmonic(3, 2) - (1 + 0.25 + 1 / 9)) < 1e-12
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8, 16])
+def test_thm3_closed_form_vs_mc(b):
+    d = ShiftedExponential(delta=0.5, mu=2.0)
+    n = 16
+    sim = simulate_maxmin(d, n, b, n_trials=100_000, seed=b)
+    cm = completion_mean(d, n, b)
+    assert cm == pytest.approx(n * 0.5 / b + harmonic(b) / 2.0)
+    assert abs(sim.mean - cm) < 5 * sim.stderr + 1e-3
+    cv = completion_var(d, n, b)
+    assert abs(sim.var - cv) < 0.05 * cv + 1e-3
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+def test_thm2_exponential(b):
+    d = Exponential(mu=3.0)
+    n = 8
+    assert completion_mean(d, n, b) == pytest.approx(harmonic(b) / 3.0)
+    assert completion_var(d, n, b) == pytest.approx(
+        generalized_harmonic(b, 2) / 9.0
+    )
+    # Thm 2: both minimized at B=1
+    assert completion_mean(d, n, 1) <= completion_mean(d, n, b)
+    assert completion_var(d, n, 1) <= completion_var(d, n, b)
+
+
+def test_thm4_variance_full_diversity_optimal():
+    d = ShiftedExponential(delta=2.0, mu=0.5)
+    n = 16
+    variances = [completion_var(d, n, b) for b in (1, 2, 4, 8, 16)]
+    assert variances[0] == min(variances)
+    assert all(np.diff(variances) > 0)  # strictly increasing in B
+
+
+def test_quantile_matches_mc():
+    d = ShiftedExponential(delta=0.3, mu=1.5)
+    n, b = 12, 4
+    sim = simulate_maxmin(d, n, b, n_trials=200_000, seed=3)
+    q = completion_quantile(d, n, b, 0.99)
+    assert abs(sim.quantile(0.99) - q) < 0.05 * q
+
+
+def test_expected_max_exponential_inclusion_exclusion():
+    # iid case reduces to H_n / mu
+    assert expected_max_exponential([2.0] * 5) == pytest.approx(
+        harmonic(5) / 2.0
+    )
+    with pytest.raises(ValueError):
+        expected_max_exponential([])
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    mu=st.floats(0.2, 5.0),
+    reps=st.lists(st.integers(1, 5), min_size=2, max_size=4),
+)
+def test_thm1_balanced_optimal_property(mu, reps):
+    """Hypothesis: any unbalanced replication of B equal batches is no better
+    than the balanced one with the same worker count (Thm 1)."""
+    b = len(reps)
+    n = b * max(reps)
+    # make sum(reps)=n by padding the largest group
+    total = sum(reps)
+    if total != n:
+        reps = list(reps)
+        reps[0] += n - total
+        if reps[0] <= 0:
+            return
+    d = Exponential(mu=mu)
+    balanced = expected_max_min_groups(d, n, [n // b] * b)
+    unbalanced = expected_max_min_groups(d, n, reps)
+    assert balanced <= unbalanced + 1e-9
+
+
+@settings(deadline=None, max_examples=20)
+@given(delta=st.floats(0.01, 3.0), mu=st.floats(0.1, 5.0))
+def test_mean_var_positive(delta, mu):
+    d = ShiftedExponential(delta=delta, mu=mu)
+    for b in (1, 2, 4, 8):
+        assert completion_mean(d, 8, b) > 0
+        assert completion_var(d, 8, b) > 0

@@ -1,0 +1,102 @@
+"""Assignment policies + System1 simulator (Thm 1 numerics)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Exponential,
+    FaultEvent,
+    ShiftedExponential,
+    StepTimeSimulator,
+    balanced_nonoverlapping,
+    completion_from_step_times,
+    divisors,
+    overlapping_cyclic,
+    random_assignment,
+    simulate_coverage,
+    simulate_maxmin,
+    unbalanced_nonoverlapping,
+)
+
+
+def test_divisors():
+    assert divisors(16) == [1, 2, 4, 8, 16]
+    assert divisors(1) == [1]
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]
+
+
+def test_balanced_assignment_structure():
+    a = balanced_nonoverlapping(12, 4)
+    assert a.n_batches == 4
+    assert a.batch_sizes == (3, 3, 3, 3)
+    assert a.replication == (3, 3, 3, 3)
+    assert not a.is_overlapping
+    assert a.coverage_matrix().sum() == 12 * 3
+
+
+def test_coverage_equals_maxmin_for_balanced():
+    d = Exponential(mu=1.0)
+    a = balanced_nonoverlapping(8, 4)
+    s1 = simulate_coverage(d, a, n_trials=4000, seed=5)
+    s2 = simulate_maxmin(d, 8, 4, n_trials=4000, seed=5)
+    np.testing.assert_allclose(s1.samples, s2.samples)
+
+
+def test_overlapping_is_worse_thm1():
+    d = Exponential(mu=1.0)
+    bal = simulate_coverage(d, balanced_nonoverlapping(16, 4), 8000, seed=1)
+    ovl = simulate_coverage(d, overlapping_cyclic(16, 4), 8000, seed=1)
+    assert bal.mean < ovl.mean
+
+
+def test_unbalanced_is_worse_thm1():
+    d = ShiftedExponential(delta=0.2, mu=1.0)
+    bal = simulate_coverage(
+        d, balanced_nonoverlapping(8, 4), 20000, seed=2
+    )
+    unb = simulate_coverage(
+        d, unbalanced_nonoverlapping(8, [1, 1, 3, 3]), 20000, seed=2
+    )
+    assert bal.mean < unb.mean
+
+
+def test_random_assignment_no_better_than_balanced():
+    d = Exponential(mu=2.0)
+    bal = simulate_coverage(d, balanced_nonoverlapping(8, 4), 10000, seed=3)
+    rnd = simulate_coverage(d, random_assignment(8, 4, seed=9), 10000, seed=3)
+    assert bal.mean <= rnd.mean + 3 * (bal.stderr + rnd.stderr)
+
+
+def test_completion_from_step_times_uses_fastest_replica():
+    a = balanced_nonoverlapping(4, 2)  # workers 0,1 -> batch 0; 2,3 -> batch 1
+    times = np.array([3.0, 1.0, 9.0, 2.0])
+    t, used = completion_from_step_times(times, a)
+    assert t == 2.0  # max(min(3,1), min(9,2))
+    assert used.tolist() == [False, True, False, True]
+
+
+def test_completion_with_dead_batch_is_inf():
+    a = balanced_nonoverlapping(4, 2)
+    times = np.array([np.inf, np.inf, 1.0, 2.0])
+    t, used = completion_from_step_times(times, a)
+    assert np.isinf(t)
+    assert used.tolist() == [False, False, True, False]
+
+
+def test_step_time_simulator_faults_and_slowdowns():
+    sim = StepTimeSimulator(
+        Exponential(mu=5.0),
+        4,
+        seed=0,
+        slow_workers={1: 100.0},
+        faults=[FaultEvent(worker=2, start_step=1, end_step=3)],
+    )
+    t0 = sim.next_step()
+    assert np.isfinite(t0).all()
+    t1 = sim.next_step()
+    assert np.isinf(t1[2])
+    # persistent slow worker dominates the fleet median over many steps
+    slows = [sim.next_step() for _ in range(50)]
+    med = np.median([s[1] for s in slows])
+    rest = np.median([s[0] for s in slows])
+    assert med > 10 * rest

@@ -1,0 +1,126 @@
+"""Sharded-vs-local numerical equivalence + auto-policy expectations.
+
+The strongest correctness check for the distribution layer: the SAME params
+and batch produce the SAME loss (and gradient norm) on a 2x4 device mesh
+with all sharding constraints active as on one device with none.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import SHAPE_CELLS, get_config
+from repro.launch.policies import auto_policy
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        import numpy as np
+
+        self.devices = np.empty(tuple(shape.values()))
+
+
+def test_auto_policy_expectations():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    cell = SHAPE_CELLS["train_4k"]
+
+    p = auto_policy(get_config("qwen2.5-14b"), cell, mesh)
+    assert p.attn_mode == "heads" and p.attn_pad_heads == 48
+    assert p.fsdp and p.seq_shard and not p.sp_weightgrad_fix
+
+    p = auto_policy(get_config("command-r-plus-104b"), cell, mesh)
+    assert p.attn_pad_heads == 0  # 96 heads divide 16
+    assert p.fsdp and p.seq_shard and p.sp_weightgrad_fix
+
+    p = auto_policy(get_config("qwen2-0.5b"), cell, mesh)
+    assert p.attn_pad_heads == 16 and not p.fsdp and not p.seq_shard
+
+    p = auto_policy(get_config("granite-34b"), cell, mesh)
+    assert not p.shard_kv_heads  # MQA
+    assert p.sp_weightgrad_fix
+
+    dec = SHAPE_CELLS["decode_32k"]
+    p = auto_policy(get_config("granite-34b"), dec, mesh)
+    assert p.kv_seq_shard  # MQA cache shards over seq
+
+    p = auto_policy(get_config("olmoe-1b-7b"), dec, mesh)
+    assert not p.kv_seq_shard  # 16 kv heads shard over model
+
+
+_EQ_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding
+    from repro.configs import get_config, reduced_config
+    from repro.configs.base import ShapeCell, ShardingPolicy
+    from repro.launch.policies import auto_policy
+    from repro.models import Shard, init_params, param_specs, train_loss
+    from repro.optim import global_norm
+
+    arch = os.environ["T_ARCH"]
+    cfg = reduced_config(get_config(arch))
+    if cfg.moe is not None:  # avoid capacity-drop nondeterminism across D
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cell = ShapeCell("t", 64, 8, "train")
+    policy = auto_policy(cfg, cell, mesh)
+    # exercise the interesting paths even on the tiny mesh
+    policy = dataclasses.replace(policy, seq_shard=cfg.family == "dense",
+                                 sp_weightgrad_fix=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (8, 64), 0, cfg.vocab_size)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+
+    def loss_local(p, b):
+        l, _ = train_loss(cfg, Shard.local(), p, b)
+        return l
+
+    def loss_sharded(p, b):
+        l, _ = train_loss(cfg, Shard(mesh, policy), p, b)
+        return l
+
+    l0, g0 = jax.jit(jax.value_and_grad(loss_local))(params, batch)
+    specs = param_specs(cfg, policy)
+    in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+             {"tokens": NamedSharding(mesh, jax.sharding.PartitionSpec("data", None)),
+              "labels": NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))})
+    with mesh:
+        l1, g1 = jax.jit(jax.value_and_grad(loss_sharded),
+                         in_shardings=in_sh)(params, batch)
+    # distributed reductions reassociate fp32 sums (vocab logsumexp over the
+    # model axis, token means over data): equality holds to reduction noise
+    err = abs(float(l0) - float(l1)) / max(abs(float(l0)), 1e-9)
+    gerr = abs(float(global_norm(g0)) - float(global_norm(g1)))
+    rel = gerr / max(float(global_norm(g0)), 1e-9)
+    assert err < 2e-3, (float(l0), float(l1))
+    assert rel < 2e-2, rel
+    print("EQ_OK", arch, float(l0), float(l1), rel)
+    """
+)
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-0.5b", "qwen2.5-14b", "olmoe-1b-7b", "zamba2-7b"]
+)
+def test_sharded_equals_local(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["T_ARCH"] = arch
+    r = subprocess.run(
+        [sys.executable, "-c", _EQ_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"{arch}:\n{r.stderr[-3000:]}"
+    assert "EQ_OK" in r.stdout

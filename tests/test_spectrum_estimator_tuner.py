@@ -1,0 +1,170 @@
+"""Diversity-parallelism spectrum (Thm 3 / Fig 2), MLE estimator, tuner."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Exponential,
+    ReplicationPlan,
+    ShiftedExponential,
+    StragglerTuner,
+    TunerConfig,
+    completion_mean,
+    continuous_optimum,
+    fit_best,
+    fit_exponential,
+    fit_shifted_exponential,
+    optimize,
+    sweep,
+)
+from repro.core.policies import divisors
+
+
+def test_thm2_exponential_full_diversity():
+    res = sweep(Exponential(mu=1.0), 16)
+    assert res.best_mean.n_batches == 1
+    assert res.best_var.n_batches == 1
+    assert not res.tradeoff
+
+
+def test_thm3_interior_optimum_and_fig2_monotonicity():
+    """Larger Delta*mu -> more parallelism (paper Fig. 2)."""
+    n = 64
+    prev_b = 0
+    for delta in (0.01, 0.1, 0.5, 2.0):
+        best = optimize(ShiftedExponential(delta=delta, mu=1.0), n)
+        assert best.n_batches >= prev_b
+        prev_b = best.n_batches
+    assert prev_b == n  # large Delta -> full parallelism
+    assert optimize(ShiftedExponential(delta=1e-4, mu=1.0), n).n_batches == 1
+
+
+def test_thm3_matches_bruteforce():
+    d = ShiftedExponential(delta=0.37, mu=1.7)
+    n = 48
+    best = optimize(d, n)
+    brute = min(divisors(n), key=lambda b: completion_mean(d, n, b))
+    assert best.n_batches == brute
+
+
+def test_mean_variance_tradeoff_exists():
+    res = sweep(ShiftedExponential(delta=0.5, mu=2.0), 16)
+    assert res.best_mean.n_batches > 1
+    assert res.best_var.n_batches == 1  # Thm 4
+    assert res.tradeoff
+    front = res.pareto_front()
+    assert len(front) >= 2
+    means = [p.mean for p in front]
+    assert means == sorted(means)
+
+
+def test_continuous_optimum_anchor():
+    d = ShiftedExponential(delta=0.25, mu=1.0)
+    n = 64
+    b_cont = continuous_optimum(d, n)
+    assert b_cont == pytest.approx(16.0)
+    b_disc = optimize(d, n).n_batches
+    assert b_disc in (8, 16, 32)  # within one divisor step of relaxation
+
+
+@settings(deadline=None, max_examples=25)
+@given(delta=st.floats(0.01, 2.0), mu=st.floats(0.2, 4.0))
+def test_optimize_is_argmin_of_sweep(delta, mu):
+    d = ShiftedExponential(delta=delta, mu=mu)
+    res = sweep(d, 24)
+    assert optimize(d, 24).mean == min(p.mean for p in res.points)
+
+
+# -- estimator ---------------------------------------------------------------
+
+def test_fit_exponential_recovery():
+    rng = np.random.default_rng(0)
+    x = Exponential(mu=3.0).sample(rng, 20_000)
+    fit = fit_exponential(x)
+    assert fit.dist.mu == pytest.approx(3.0, rel=0.05)
+
+
+def test_fit_shifted_exponential_recovery():
+    rng = np.random.default_rng(1)
+    x = ShiftedExponential(delta=0.7, mu=2.0).sample(rng, 20_000)
+    fit = fit_shifted_exponential(x)
+    assert fit.dist.delta == pytest.approx(0.7, abs=0.02)
+    assert fit.dist.mu == pytest.approx(2.0, rel=0.05)
+
+
+def test_fit_censored():
+    rng = np.random.default_rng(2)
+    x = Exponential(mu=1.0).sample(rng, 20_000)
+    cutoff = 1.5
+    censored = x > cutoff
+    x_obs = np.minimum(x, cutoff)
+    fit = fit_exponential(x_obs, censored)
+    assert fit.dist.mu == pytest.approx(1.0, rel=0.08)
+
+
+def test_fit_best_model_selection():
+    rng = np.random.default_rng(3)
+    x_exp = Exponential(mu=2.0).sample(rng, 5_000)
+    assert isinstance(fit_best(x_exp).dist, Exponential)
+    x_sexp = ShiftedExponential(delta=1.0, mu=2.0).sample(rng, 5_000)
+    assert isinstance(fit_best(x_sexp).dist, ShiftedExponential)
+
+
+def test_fit_rejects_bad_input():
+    with pytest.raises(ValueError):
+        fit_exponential([])
+    with pytest.raises(ValueError):
+        fit_exponential([1.0, -2.0])
+    with pytest.raises(ValueError):
+        fit_exponential([1.0], censored=[True])
+
+
+# -- tuner --------------------------------------------------------------------
+
+def _feed(tuner, dist, n, steps, rng):
+    for _ in range(steps):
+        tuner.observe(dist.sample(rng, n))
+
+
+def test_tuner_replans_toward_optimum():
+    n = 16
+    plan = ReplicationPlan(n_data=n, n_batches=16)  # full parallelism
+    # high-variance service: diversity should win
+    dist = ShiftedExponential(delta=0.01, mu=1.0)
+    tuner = StragglerTuner(plan, TunerConfig(min_samples=64, cooldown_steps=0))
+    rng = np.random.default_rng(0)
+    _feed(tuner, dist, n, 20, rng)
+    rp = tuner.maybe_replan()
+    assert rp is not None
+    assert rp.new_batches < 16
+    assert rp.predicted_improvement > 0.1
+    new_plan = tuner.apply(rp)
+    assert new_plan.n_batches == rp.new_batches
+
+
+def test_tuner_respects_cooldown_and_threshold():
+    n = 8
+    plan = ReplicationPlan(n_data=n, n_batches=4)
+    dist = ShiftedExponential(delta=0.5, mu=2.0)
+    opt_b = optimize(dist, n).n_batches
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=n, n_batches=opt_b),
+        TunerConfig(min_samples=32, cooldown_steps=1000),
+    )
+    rng = np.random.default_rng(1)
+    _feed(tuner, dist, n, 30, rng)
+    # already at optimum -> no replan even without cooldown
+    tuner._last_replan = -(10**9)
+    assert tuner.maybe_replan() is None
+
+
+def test_tuner_handles_dead_workers():
+    plan = ReplicationPlan(n_data=4, n_batches=2)
+    tuner = StragglerTuner(plan, TunerConfig(min_samples=8, cooldown_steps=0))
+    t = np.array([1.0, np.inf, 2.0, 1.5])
+    tuner.observe(t)
+    assert tuner.n_samples == 4
+    for _ in range(10):
+        tuner.observe(np.array([1.0, 1.1, 0.9, 1.2]))
+    assert tuner.fit() is not None

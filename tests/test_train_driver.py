@@ -1,0 +1,109 @@
+"""End-to-end virtual-pod trainer: loss decreases, faults handled, tuner
+replans, checkpoint/restart, RDP == plain DP gradients."""
+
+import numpy as np
+import pytest
+
+from repro.core import FaultEvent
+from repro.launch.train import Trainer, TrainerConfig
+
+
+def _tc(**kw):
+    base = dict(
+        arch="qwen2-0.5b",
+        steps=10,
+        seq_len=64,
+        global_batch=16,
+        n_workers=8,
+        n_batches=4,
+        lr=1e-3,
+        seed=0,
+    )
+    base.update(kw)
+    return TrainerConfig(**base)
+
+
+def test_training_loss_decreases():
+    res = Trainer(_tc(steps=40, lr=3e-3)).run()
+    first = np.mean(res.losses[:5])
+    last = np.mean(res.losses[-5:])
+    assert last < first - 0.05, (first, last)
+    assert res.total_sim_time > 0
+
+
+def test_rdp_equals_plain_dp_loss_curve():
+    """Replication changes placement, not semantics: B=8 (no replication)
+    and B=2 (4x replication) produce IDENTICAL loss curves (same global
+    batch, same aggregation result)."""
+    r1 = Trainer(_tc(steps=6, n_batches=8)).run()
+    r2 = Trainer(_tc(steps=6, n_batches=2)).run()
+    # identical up to fp reduction-order noise (mean-of-means vs global mean
+    # group different row subsets; bf16 params amplify slightly over steps)
+    np.testing.assert_allclose(r1.losses, r2.losses, rtol=1e-2)
+    assert abs(r1.losses[0] - r2.losses[0]) < 1e-4  # step 0: same params
+
+
+def test_straggler_drop_does_not_change_gradients():
+    """A dropped straggler replica never biases the estimate."""
+    slow = Trainer(_tc(steps=6, slow_workers={0: 50.0}))
+    clean = Trainer(_tc(steps=6))
+    rs, rc = slow.run(), clean.run()
+    np.testing.assert_allclose(rs.losses, rc.losses, rtol=1e-2)
+    # but the simulated time IS worse without enough history to drop yet
+    assert rs.total_sim_time >= rc.total_sim_time * 0.9
+
+
+def test_fault_masking_keeps_training():
+    faults = (FaultEvent(worker=1, start_step=3, end_step=6),)
+    res = Trainer(_tc(steps=10, faults=faults)).run()
+    assert len(res.losses) == 10
+    assert all(np.isfinite(res.losses))
+    assert any("mask" in e for e in res.events)
+
+
+def test_whole_group_loss_triggers_replan():
+    # r=2: batch 1 replicas are workers 1 and 5 (coord % 4)
+    faults = (
+        FaultEvent(worker=1, start_step=3, end_step=10**9),
+        FaultEvent(worker=5, start_step=3, end_step=10**9),
+    )
+    res = Trainer(_tc(steps=12, faults=faults)).run()
+    assert any("replan" in e for e in res.events)
+    assert res.final_plan.n_data < 8  # shrank after losing the group
+
+
+def test_tuner_replans_during_training():
+    tc = _tc(
+        steps=40,
+        n_batches=8,  # start at full parallelism
+        service="sexp",
+        delta=0.01,  # near-exponential: diversity should win (Thm 2)
+        mu=1.0,
+        tuner=True,
+    )
+    res = Trainer(tc).run()
+    assert any("tuner" in e for e in res.events)
+    assert res.final_plan.n_batches < 8
+
+
+def test_compressed_training_tracks_uncompressed():
+    rc = Trainer(_tc(steps=15, grad_compression=True)).run()
+    ru = Trainer(_tc(steps=15)).run()
+    # int8 error-feedback compression: loss curve within a few percent
+    np.testing.assert_allclose(rc.losses, ru.losses, rtol=0.1, atol=0.05)
+
+
+def test_checkpoint_and_restart(tmp_path):
+    tc = _tc(steps=10, checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    res = Trainer(tc).run()
+    from repro.checkpoint import latest_step
+
+    assert latest_step(tmp_path) == 10
+    # restart: a NEW trainer restores and continues
+    t2 = Trainer(tc)
+    state, meta = t2.ckpt.restore({"params": t2.params, "opt": t2.opt_state})
+    assert meta["step"] == 10
+    t2.params = state["params"]
+    t2.opt_state = state["opt"]
+    loss, completion, decision = t2.step(meta["step"])
+    assert np.isfinite(loss)
