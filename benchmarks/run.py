@@ -12,6 +12,7 @@ def main() -> None:
         bench_gradient_coding,
         bench_roofline,
         bench_serving_latency,
+        bench_sim_engine,
         bench_step_time,
         bench_thm1_assignment,
         bench_thm2_exponential,
@@ -19,6 +20,7 @@ def main() -> None:
     )
 
     modules = [
+        bench_sim_engine,
         bench_thm1_assignment,
         bench_thm2_exponential,
         bench_fig2_spectrum,

@@ -19,6 +19,7 @@ from .order_stats import (
     completion_mean,
     completion_quantile,
     completion_var,
+    expected_completion_rates,
     generalized_harmonic,
     harmonic,
 )
@@ -28,6 +29,7 @@ from .policies import (
     divisors,
     overlapping_cyclic,
     random_assignment,
+    rate_aware_assignment,
     unbalanced_nonoverlapping,
 )
 from .replication import (
@@ -42,11 +44,21 @@ from .simulator import (
     FaultEvent,
     SimResult,
     StepTimeSimulator,
+    SweepSimResult,
     completion_from_step_times,
     simulate_coverage,
+    simulate_coverage_reference,
     simulate_maxmin,
+    sweep_simulate,
 )
-from .spectrum import SpectrumPoint, SpectrumResult, continuous_optimum, optimize, sweep
+from .spectrum import (
+    SpectrumPoint,
+    SpectrumResult,
+    continuous_optimum,
+    optimize,
+    sweep,
+    sweep_simulated,
+)
 from .estimator import FitResult, fit_best, fit_exponential, fit_shifted_exponential
 from .tuner import RescalePlan, StragglerTuner, TunerConfig
 

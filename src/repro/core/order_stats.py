@@ -18,6 +18,11 @@ is ``Exp(r * mu * B / N) = Exp(mu)``, hence
 
 Everything in this module is plain-float math (no jax) so it can be used by
 the control plane (tuner / spectrum optimizer) without touching device state.
+
+Heterogeneous workers (per-worker rate multipliers ``rates[j]``, the
+simulator's slow-node model): :func:`expected_completion_rates` gives E[T]
+for any non-overlapping equal-size-batch assignment via the aggregate rate
+of each batch's replica set.
 """
 
 from __future__ import annotations
@@ -39,6 +44,7 @@ __all__ = [
     "completion_quantile",
     "expected_max_exponential",
     "expected_max_min_groups",
+    "expected_completion_rates",
 ]
 
 
@@ -222,4 +228,48 @@ def expected_max_min_groups(
         # the exponential parts are Exp(g_i * mu * B / N)
         rates = [g * per_batch.mu for g in sizes]
         return per_batch.delta + expected_max_exponential(rates)
+    raise TypeError(f"unsupported distribution {dist!r}")
+
+
+def expected_completion_rates(
+    dist: ServiceDistribution,
+    n: int,
+    worker_batch: Sequence[int],
+    rates: Sequence[float],
+) -> float:
+    """E[T] for equal-size non-overlapping batches with HETEROGENEOUS workers.
+
+    ``worker_batch[j]`` is the batch worker j serves; ``rates[j]`` is worker
+    j's relative service rate (its exponential part runs at ``mu*rates[j]``).
+    A batch of size n/B served by workers S has its fastest replica
+    exponential with aggregate rate ``sum_{j in S} mu*rates[j] * B/n``, so
+    E[T] is the expected max of B independent exponentials (plus the common
+    deterministic shift for SExp).  Closed-form companion of the simulator's
+    heterogeneous paths and the scoring function of
+    ``policies.rate_aware_assignment``.
+    """
+    wb = list(worker_batch)
+    rs = list(rates)
+    if len(wb) != len(rs):
+        raise ValueError("worker_batch and rates must have equal length")
+    if len(wb) != n:
+        raise ValueError(
+            f"worker_batch has {len(wb)} workers but N={n} (the paper "
+            "normalizes the fleet to one worker per data unit)"
+        )
+    if any(r <= 0 for r in rs):
+        raise ValueError(f"rates must be positive: {rs}")
+    b = max(wb) + 1
+    if set(wb) != set(range(b)):
+        raise ValueError("every batch must have at least one worker")
+    if n % b:
+        raise ValueError(f"B={b} must divide N={n}")
+    per_batch = batch_service(dist, n, b)
+    agg = [0.0] * b
+    for j, batch in enumerate(wb):
+        agg[batch] += rs[j] * per_batch.mu
+    if isinstance(dist, Exponential):
+        return expected_max_exponential(agg)
+    if isinstance(dist, ShiftedExponential):
+        return per_batch.delta + expected_max_exponential(agg)
     raise TypeError(f"unsupported distribution {dist!r}")

@@ -10,6 +10,10 @@ A policy produces an :class:`Assignment`:
 Completion semantics (used by core.simulator): the job is done at the first
 time the union of finished workers' batches covers all N data units.  For
 non-overlapping policies this reduces to the paper's ``max_i min_j T_ij``.
+
+Heterogeneous fleets: :func:`rate_aware_assignment` places workers by their
+relative service rates (balancing each batch's AGGREGATE rate, the quantity
+that governs E[T] under exponential service) instead of replica counts.
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ __all__ = [
     "unbalanced_nonoverlapping",
     "overlapping_cyclic",
     "random_assignment",
+    "rate_aware_assignment",
     "divisors",
 ]
 
@@ -96,15 +101,35 @@ class Assignment:
         return np.array([len(self.batches[b]) for b in self.worker_batch], float)
 
 
-def balanced_nonoverlapping(n_workers: int, n_batches: int) -> Assignment:
-    """The paper's optimal policy (Thm 1): B disjoint equal batches, each
-    replicated on exactly N/B workers."""
+def _validate_rates(rates, n: int):
+    """Validate an optional per-worker rate vector: shape (n,), positive,
+    finite.  None passes through (homogeneous).  Shared by the assignment
+    policies and the simulator's sampling paths."""
+    if rates is None:
+        return None
+    r = np.asarray(rates, dtype=float)
+    if r.shape != (n,):
+        raise ValueError(f"rates shape {r.shape} != ({n},)")
+    if np.any(r <= 0) or np.any(~np.isfinite(r)):
+        raise ValueError("rates must be positive and finite")
+    return r
+
+
+def _equal_batches(n_workers: int, n_batches: int) -> tuple[frozenset, ...]:
+    """B disjoint contiguous batches of N/B data units each (B must divide N)."""
     if n_workers % n_batches:
         raise ValueError(f"B={n_batches} must divide N={n_workers}")
     size = n_workers // n_batches
-    batches = tuple(
+    return tuple(
         frozenset(range(i * size, (i + 1) * size)) for i in range(n_batches)
     )
+
+
+def balanced_nonoverlapping(n_workers: int, n_batches: int) -> Assignment:
+    """The paper's optimal policy (Thm 1): B disjoint equal batches, each
+    replicated on exactly N/B workers."""
+    batches = _equal_batches(n_workers, n_batches)
+    size = n_workers // n_batches
     worker_batch = tuple(j // size for j in range(n_workers))
     return Assignment(n_workers, n_workers, batches, worker_batch)
 
@@ -120,10 +145,7 @@ def unbalanced_nonoverlapping(
     if any(r <= 0 for r in reps):
         raise ValueError(f"replication counts must be positive: {reps}")
     b = len(reps)
-    if n_workers % b:
-        raise ValueError(f"B={b} must divide N={n_workers} for equal batch size")
-    size = n_workers // b
-    batches = tuple(frozenset(range(i * size, (i + 1) * size)) for i in range(b))
+    batches = _equal_batches(n_workers, b)
     worker_batch = []
     for i, r in enumerate(reps):
         worker_batch.extend([i] * r)
@@ -166,18 +188,44 @@ def overlapping_cyclic(n_workers: int, n_batches: int) -> Assignment:
     return Assignment(n_workers, n_units, batches, worker_batch)
 
 
+def rate_aware_assignment(
+    n_workers: int, n_batches: int, rates: Sequence[float]
+) -> Assignment:
+    """Greedy heterogeneous-worker policy (Behrouzi-Far & Soljanin 2020 style).
+
+    Workers have relative service rates ``rates[j]`` (higher = faster).  With
+    exponential service the min over a batch's replicas is exponential with
+    the batch's AGGREGATE rate, and E[T] is the expected max over batches —
+    so a good assignment balances aggregate rates, not replica counts.
+
+    Greedy: visit workers from fastest to slowest, assign each to the batch
+    with the smallest aggregate rate so far (ties -> lowest batch index).
+    Since N >= B the first B workers seed every batch, so each batch gets at
+    least one replica.  With all rates equal this reduces to balanced
+    replication counts (Thm 1's optimum).
+    """
+    batches = _equal_batches(n_workers, n_batches)
+    if rates is None:
+        raise ValueError("rates required (use balanced_nonoverlapping instead)")
+    r = _validate_rates(rates, n_workers)
+    # stable sort, descending rate: equal-rate workers keep index order
+    order = np.argsort(-r, kind="stable")
+    agg = np.zeros(n_batches)
+    worker_batch = [0] * n_workers
+    for j in order:
+        target = int(np.argmin(agg))  # argmin ties break to lowest index
+        worker_batch[int(j)] = target
+        agg[target] += r[j]
+    return Assignment(n_workers, n_workers, batches, tuple(worker_batch))
+
+
 def random_assignment(
     n_workers: int, n_batches: int, seed: int = 0
 ) -> Assignment:
     """Disjoint equal batches, workers assigned uniformly at random (with the
     constraint that every batch gets >=1 worker)."""
-    if n_workers % n_batches:
-        raise ValueError(f"B={n_batches} must divide N={n_workers}")
+    batches = _equal_batches(n_workers, n_batches)
     rng = np.random.default_rng(seed)
-    size = n_workers // n_batches
-    batches = tuple(
-        frozenset(range(i * size, (i + 1) * size)) for i in range(n_batches)
-    )
     while True:
         worker_batch = rng.integers(0, n_batches, size=n_workers)
         if len(set(worker_batch.tolist())) == n_batches:

@@ -1,20 +1,38 @@
-"""Monte-Carlo simulator of the paper's System1.
+"""Monte-Carlo simulator of the paper's System1 — batched + vectorized.
 
-Two modes:
+Three public entry points:
 
 * :func:`simulate_maxmin` — the paper's completion rule for non-overlapping
   balanced replication, fully vectorized: ``T = max_i min_j T_ij``.
 * :func:`simulate_coverage` — general rule for ANY :class:`Assignment`
   (overlapping, unbalanced): completion is the first time the union of
-  finished workers' batches covers the dataset.  Vectorized over trials via a
-  sort + running-coverage scan.
+  finished workers' batches covers the dataset.  Vectorized over trials AND
+  workers via a sort + cumulative bitwise-OR prefix-coverage scan (bitmask
+  words, ``argmax`` of the first fully-covered prefix).  The original
+  per-trial Python loop is retained as :func:`simulate_coverage_reference`
+  and shares the exact same draws, so the two are bit-for-bit comparable.
+* :func:`sweep_simulate` — the batched engine: evaluates ALL feasible
+  (B, r) splits of N for one or several service distributions in a single
+  call, from ONE shared matrix of unit-exponential draws (common random
+  numbers, so cross-(B, dist) comparisons are variance-reduced).  Backends:
+  ``"numpy"`` (default) and ``"jax"`` (``jax.vmap`` over splits +
+  distributions, jit-compiled ``segment_min`` reduction).
 
-Service times are drawn per (worker) from the size-dependent model: a worker
-serving ``s`` units draws from ``dist.scaled(s)``.
+Heterogeneous workers: every sampling path accepts an optional ``rates``
+vector of per-worker relative service rates (worker ``j`` runs at rate
+``mu * rates[j]``; ``rates[j] < 1`` is a slow node).  With ``rates`` equal
+to ones the heterogeneous paths reproduce the homogeneous results
+bit-for-bit (same RNG stream, same float ops).
+
+Service times follow the size-dependent model: a worker serving ``s`` units
+of data at rate multiplier ``c`` draws ``s*Delta + E / (mu*c/s)`` with
+``E ~ Exp(1)`` — i.e. ``dist.scaled(s)`` with its exponential part slowed by
+``1/c``.
 
 Also provides :class:`StepTimeSimulator` — the runtime-facing generator of
-per-step, per-worker service times (with optional persistent slow nodes and
-transient failures) used by the fault-tolerance harness and the tuner tests.
+per-step, per-worker service times (with optional persistent slow nodes,
+per-worker base rates, and transient failures) used by the fault-tolerance
+harness and the tuner tests.
 """
 
 from __future__ import annotations
@@ -25,12 +43,15 @@ from typing import Sequence
 import numpy as np
 
 from .order_stats import ServiceDistribution
-from .policies import Assignment, balanced_nonoverlapping
+from .policies import Assignment, _validate_rates, divisors
 
 __all__ = [
     "SimResult",
+    "SweepSimResult",
     "simulate_maxmin",
     "simulate_coverage",
+    "simulate_coverage_reference",
+    "sweep_simulate",
     "StepTimeSimulator",
     "FaultEvent",
 ]
@@ -60,22 +81,121 @@ class SimResult:
         return float(self.samples.std(ddof=1) / np.sqrt(len(self.samples)))
 
 
+# ---------------------------------------------------------------------------
+# shared sampling core
+# ---------------------------------------------------------------------------
+
+
+def _dist_params(dist: ServiceDistribution) -> tuple[float, float]:
+    """(shift, mu) of the unit-load service distribution.
+
+    The engine exploits that Exp/SExp scale affinely with load:
+    ``scaled(s) = s*shift + Exp(1)*s/mu``.  Any distribution exposing ``mu``
+    (and optionally ``delta``) participates; others are rejected.
+    """
+    mu = getattr(dist, "mu", None)
+    if mu is None:
+        raise TypeError(
+            f"{type(dist).__name__} must expose 'mu' (and optional 'delta') "
+            "for the vectorized engine"
+        )
+    return float(getattr(dist, "delta", 0.0)), float(mu)
+
+
+def _unit_times(
+    unit: np.ndarray, dist: ServiceDistribution, rates: np.ndarray | None
+) -> np.ndarray:
+    """Unit-load service times from shared Exp(1) draws: shift + E/(mu*rate).
+
+    ``rates=None`` and ``rates=ones`` are bit-identical (``mu * 1.0 == mu``
+    exactly, so the elementwise divisor is the same float either way).
+    """
+    shift, mu = _dist_params(dist)
+    denom = mu if rates is None else mu * rates
+    return shift + unit / denom
+
+
+def _times_from_unit(
+    unit: np.ndarray,
+    loads: np.ndarray,
+    dist: ServiceDistribution,
+    rates: np.ndarray | None,
+) -> np.ndarray:
+    """Worker service times ``loads_j * (shift + unit_j / (mu * rates_j))``.
+
+    Factored so the batched sweep can hoist the load-independent inner
+    matrix; multiplying by a constant-load vector equals the scalar multiply
+    bit-for-bit, which keeps sweep cells identical to simulate_maxmin.
+    """
+    return _unit_times(unit, dist, rates) * loads
+
+
+def _draw_worker_times(
+    dist: ServiceDistribution,
+    loads: np.ndarray,
+    n_trials: int,
+    seed: int,
+    rates: np.ndarray | None = None,
+) -> np.ndarray:
+    """(n_trials, N) service times; the single RNG touchpoint of the engine."""
+    rng = np.random.default_rng(seed)
+    unit = rng.standard_exponential((n_trials, len(loads)))
+    return _times_from_unit(unit, loads, dist, rates)
+
+
+# ---------------------------------------------------------------------------
+# max-min (balanced non-overlapping) fast path
+# ---------------------------------------------------------------------------
+
+
 def simulate_maxmin(
     dist: ServiceDistribution,
     n_workers: int,
     n_batches: int,
     n_trials: int = 20_000,
     seed: int = 0,
+    rates: Sequence[float] | None = None,
 ) -> SimResult:
-    """Completion time of balanced non-overlapping replication (fast path)."""
+    """Completion time of balanced non-overlapping replication (fast path).
+
+    ``rates`` (optional, length N): per-worker relative service rates; the
+    contiguous worker->batch map of :func:`balanced_nonoverlapping` is used
+    (worker j serves batch j // r).  Shares the RNG stream of
+    :func:`sweep_simulate`, so a single-split sweep is bit-identical.
+    """
     if n_workers % n_batches:
         raise ValueError(f"B={n_batches} must divide N={n_workers}")
     r = n_workers // n_batches
-    per_batch = dist.scaled(n_workers / n_batches)
-    rng = np.random.default_rng(seed)
-    t = per_batch.sample(rng, (n_trials, n_batches, r))
-    completion = t.min(axis=2).max(axis=1)
+    rates_arr = _validate_rates(rates, n_workers)
+    loads = np.full(n_workers, n_workers / n_batches)
+    times = _draw_worker_times(dist, loads, n_trials, seed, rates_arr)
+    completion = times.reshape(n_trials, n_batches, r).min(axis=2).max(axis=1)
     return SimResult(completion)
+
+
+# ---------------------------------------------------------------------------
+# coverage rule (arbitrary assignments)
+# ---------------------------------------------------------------------------
+
+
+def _pack_coverage(assignment: Assignment) -> tuple[np.ndarray, np.ndarray]:
+    """Per-worker coverage bitmasks.
+
+    Returns (masks, full): masks is (N, W) uint64 with W = ceil(units/64);
+    full is the (W,) all-units mask.  Bitwise-OR of masks across workers is
+    the union of their covered units.
+    """
+    cov = assignment.coverage_matrix()  # (N, units) bool
+    n, units = cov.shape
+    words = (units + 63) // 64
+    masks = np.zeros((n, words), dtype=np.uint64)
+    full = np.zeros(words, dtype=np.uint64)
+    for w in range(words):
+        chunk = cov[:, w * 64 : (w + 1) * 64]
+        weights = np.uint64(1) << np.arange(chunk.shape[1], dtype=np.uint64)
+        masks[:, w] = (chunk.astype(np.uint64) * weights).sum(axis=1)
+        full[w] = weights.sum()
+    return masks, full
 
 
 def simulate_coverage(
@@ -83,43 +203,253 @@ def simulate_coverage(
     assignment: Assignment,
     n_trials: int = 20_000,
     seed: int = 0,
+    rates: Sequence[float] | None = None,
 ) -> SimResult:
     """Completion time under the coverage rule for arbitrary assignments.
 
-    Vectorized: draw all worker times, argsort per trial, walk the sorted
-    order accumulating covered units, record the time when coverage hits N.
-    The walk is a python loop over workers (N is small, <=64) but vectorized
-    over trials.
+    Fully vectorized: draw all worker times, argsort per trial, cumulative
+    bitwise-OR of per-worker coverage bitmasks along the sorted-worker axis,
+    ``argmax`` of the first prefix whose union covers every unit.  O(trials*N)
+    numpy ops, no Python loop over trials.
     """
-    rng = np.random.default_rng(seed)
     loads = assignment.worker_load()  # (N,)
-    n = assignment.n_workers
-    # scaled sampling: worker j draws from dist.scaled(load_j)
-    base = dist.scaled(1.0)
-    # sample unit-load times then rescale: for Exp/SExp, scaled(s) is an
-    # affine transform of the unit draw ONLY for Exp (rate mu/s <=> s * unit
-    # draw).  SExp(s*Delta, mu/s) = s * SExp(Delta, mu) likewise.  So we can
-    # draw unit times and multiply by the load.
-    unit = base.sample(rng, (n_trials, n))
-    times = unit * loads[None, :]
+    rates_arr = _validate_rates(rates, assignment.n_workers)
+    times = _draw_worker_times(dist, loads, n_trials, seed, rates_arr)
 
-    cov = assignment.coverage_matrix()  # (N, units) bool
+    masks, full = _pack_coverage(assignment)  # (N, W), (W,)
     order = np.argsort(times, axis=1)  # (trials, N)
     sorted_times = np.take_along_axis(times, order, axis=1)
+    cum = np.bitwise_or.accumulate(masks[order], axis=1)  # (trials, N, W)
+    covered = (cum == full[None, None, :]).all(axis=2)  # (trials, N)
+    first = covered.argmax(axis=1)  # valid: Assignment guarantees full coverage
+    completion = np.take_along_axis(sorted_times, first[:, None], axis=1)[:, 0]
+    return SimResult(completion)
+
+
+def simulate_coverage_reference(
+    dist: ServiceDistribution,
+    assignment: Assignment,
+    n_trials: int = 20_000,
+    seed: int = 0,
+    rates: Sequence[float] | None = None,
+) -> SimResult:
+    """Reference implementation: per-trial Python walk over sorted workers.
+
+    Draws the SAME times as :func:`simulate_coverage` (shared sampling core),
+    so results are bit-for-bit equal; kept as the oracle for property tests
+    and as the benchmark baseline.
+    """
+    loads = assignment.worker_load()
+    rates_arr = _validate_rates(rates, assignment.n_workers)
+    times = _draw_worker_times(dist, loads, n_trials, seed, rates_arr)
+
+    masks, full = _pack_coverage(assignment)
+    n = assignment.n_workers
+    order = np.argsort(times, axis=1)
+    sorted_times = np.take_along_axis(times, order, axis=1)
     completion = np.empty(n_trials, dtype=float)
-    # running coverage via bit-packing for speed
-    packed = np.packbits(cov, axis=1)  # (N, ceil(units/8)) uint8
-    full = np.packbits(np.ones(assignment.n_units, dtype=bool))
     for t in range(n_trials):
         acc = np.zeros_like(full)
         done_time = sorted_times[t, -1]
         for k in range(n):
-            acc |= packed[order[t, k]]
-            if np.array_equal(acc & full, full):
+            acc |= masks[order[t, k]]
+            if np.array_equal(acc, full):
                 done_time = sorted_times[t, k]
                 break
         completion[t] = done_time
     return SimResult(completion)
+
+
+# ---------------------------------------------------------------------------
+# batched sweep over (B, r) splits x distributions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSimResult:
+    """Samples for every (distribution, split) pair of one batched sweep.
+
+    ``samples[d, s]`` holds the completion times for ``dists[d]`` at
+    ``splits[s]`` batches, all generated from the same unit-exponential draw
+    matrix (common random numbers), so differences across cells are pure
+    policy/distribution effects.
+    """
+
+    n_workers: int
+    splits: tuple[int, ...]
+    dists: tuple[ServiceDistribution, ...]
+    samples: np.ndarray  # (n_dists, n_splits, n_trials)
+    backend: str
+
+    def result(self, n_batches: int, dist_index: int = 0) -> SimResult:
+        return SimResult(self.samples[dist_index, self.splits.index(n_batches)])
+
+    def means(self) -> np.ndarray:
+        """(n_dists, n_splits) empirical mean completion times."""
+        return self.samples.mean(axis=2)
+
+    def variances(self) -> np.ndarray:
+        return self.samples.var(axis=2, ddof=1)
+
+    def best_mean(self, dist_index: int = 0) -> tuple[int, float]:
+        """(argmin-B, mean) for one distribution."""
+        m = self.means()[dist_index]
+        k = int(np.argmin(m))
+        return self.splits[k], float(m[k])
+
+    def table(self, dist_index: int = 0) -> dict[int, SimResult]:
+        return {
+            b: SimResult(self.samples[dist_index, i])
+            for i, b in enumerate(self.splits)
+        }
+
+
+def _normalize_dists(
+    dists: ServiceDistribution | Sequence[ServiceDistribution],
+) -> tuple[ServiceDistribution, ...]:
+    if isinstance(dists, ServiceDistribution):
+        return (dists,)
+    out = tuple(dists)
+    if not out:
+        raise ValueError("at least one distribution required")
+    return out
+
+
+def _split_arrays(
+    n_workers: int, splits: Sequence[int]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static per-split arrays: loads (S, N), worker->batch ids (S, N),
+    valid-batch-slot mask (S, N) — fixed shapes so the JAX backend can vmap."""
+    s_count = len(splits)
+    loads = np.empty((s_count, n_workers))
+    wb = np.empty((s_count, n_workers), dtype=np.int32)
+    valid = np.zeros((s_count, n_workers), dtype=bool)
+    for i, b in enumerate(splits):
+        r = n_workers // b
+        loads[i] = n_workers / b
+        wb[i] = np.arange(n_workers) // r
+        valid[i, :b] = True
+    return loads, wb, valid
+
+
+_JAX_KERNEL_CACHE: dict = {}
+
+
+def _sweep_jax(
+    unit: np.ndarray,
+    loads: np.ndarray,
+    wb: np.ndarray,
+    valid: np.ndarray,
+    shifts: np.ndarray,
+    mus: np.ndarray,
+    rates: np.ndarray,
+) -> np.ndarray:
+    """JAX backend: vmap over distributions x splits, jit-compiled.
+
+    Per split the min-over-replicas is a ``segment_min`` keyed by the
+    worker->batch map (padded to N segments, invalid slots masked to -inf
+    before the max), which keeps every split the same shape and therefore
+    vmappable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if "kernel" not in _JAX_KERNEL_CACHE:
+
+        def kernel(unit, loads, wb, valid, shifts, mus, rates):
+            n = unit.shape[1]
+
+            def one_dist(shift, mu):
+                core = shift + unit / (mu * rates)  # load-independent (T, N)
+
+                def one_split(loads_row, wb_row, valid_row):
+                    times = core * loads_row  # (T, N)
+                    bmin = jax.ops.segment_min(
+                        times.T, wb_row, num_segments=n, indices_are_sorted=True
+                    )  # (N, T)
+                    bmin = jnp.where(valid_row[:, None], bmin, -jnp.inf)
+                    return bmin.max(axis=0)  # (T,)
+
+                return jax.vmap(one_split)(loads, wb, valid)
+
+            return jax.vmap(one_dist)(shifts, mus)
+
+        _JAX_KERNEL_CACHE["kernel"] = jax.jit(kernel)
+
+    out = _JAX_KERNEL_CACHE["kernel"](unit, loads, wb, valid, shifts, mus, rates)
+    return np.asarray(out, dtype=float)
+
+
+def sweep_simulate(
+    dists: ServiceDistribution | Sequence[ServiceDistribution],
+    n_workers: int,
+    n_trials: int = 20_000,
+    seed: int = 0,
+    feasible_b: Sequence[int] | None = None,
+    rates: Sequence[float] | None = None,
+    backend: str = "numpy",
+) -> SweepSimResult:
+    """Simulate ALL feasible (B, r) splits x distributions in one batched call.
+
+    One (n_trials, N) matrix of Exp(1) draws is shared by every cell (common
+    random numbers): comparisons across B or across distributions see the
+    same randomness, which collapses the variance of their differences.
+
+    ``backend="jax"`` runs the per-cell reduction as a jit-compiled
+    ``vmap``-ed kernel; ``"numpy"`` loops over the (few) cells with
+    vectorized reductions.  Each cell is bit-identical to
+    ``simulate_maxmin(dist, N, B, n_trials, seed, rates)`` for the numpy
+    backend.
+    """
+    dist_seq = _normalize_dists(dists)
+    splits = list(feasible_b) if feasible_b is not None else divisors(n_workers)
+    if not splits:
+        raise ValueError("no feasible B values")
+    for b in splits:
+        if n_workers % b:
+            raise ValueError(f"B={b} infeasible: must divide N={n_workers}")
+    rates_arr = _validate_rates(rates, n_workers)
+
+    rng = np.random.default_rng(seed)
+    unit = rng.standard_exponential((n_trials, n_workers))
+
+    if backend == "jax":
+        loads, wb, valid = _split_arrays(n_workers, splits)
+        params = np.array([_dist_params(d) for d in dist_seq])
+        samples = _sweep_jax(
+            unit,
+            loads,
+            wb,
+            valid,
+            params[:, 0],
+            params[:, 1],
+            rates_arr if rates_arr is not None else np.ones(n_workers),
+        )
+    elif backend == "numpy":
+        samples = np.empty((len(dist_seq), len(splits), n_trials))
+        for di, dist in enumerate(dist_seq):
+            core = _unit_times(unit, dist, rates_arr)  # load-independent
+            for si, b in enumerate(splits):
+                r = n_workers // b
+                times = core * (n_workers / b)
+                samples[di, si] = (
+                    times.reshape(n_trials, b, r).min(axis=2).max(axis=1)
+                )
+    else:
+        raise ValueError(f"unknown backend {backend!r} (use 'numpy' or 'jax')")
+
+    return SweepSimResult(
+        n_workers=n_workers,
+        splits=tuple(splits),
+        dists=dist_seq,
+        samples=samples,
+        backend=backend,
+    )
+
+
+# ---------------------------------------------------------------------------
+# runtime-facing step-time generator
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,10 +465,12 @@ class FaultEvent:
 class StepTimeSimulator:
     """Per-step service-time generator for the runtime harness.
 
-    Models three straggler phenomena on top of the base distribution:
+    Models four straggler phenomena on top of the base distribution:
 
     * i.i.d. randomness (the paper's model),
     * persistent slow workers (multiplicative slowdown),
+    * heterogeneous per-worker base rates (``rates``; worker j's exponential
+      part runs at rate ``mu * rates[j]``),
     * transient faults (worker produces no result during the event).
 
     Returns, per step, an array of service times (np.inf for dead workers).
@@ -151,6 +483,7 @@ class StepTimeSimulator:
         seed: int = 0,
         slow_workers: dict[int, float] | None = None,
         faults: Sequence[FaultEvent] = (),
+        rates: Sequence[float] | None = None,
     ):
         self._dist = dist
         self._n = n_workers
@@ -159,6 +492,7 @@ class StepTimeSimulator:
         for w in self._slow:
             if not 0 <= w < n_workers:
                 raise ValueError(f"slow worker id {w} out of range")
+        self._rates = _validate_rates(rates, n_workers)
         self._faults = list(faults)
         self.step = 0
 
@@ -173,8 +507,8 @@ class StepTimeSimulator:
         loads = np.asarray(loads, dtype=float)
         if loads.shape != (self._n,):
             raise ValueError(f"loads shape {loads.shape} != ({self._n},)")
-        unit = self._dist.sample(self._rng, (self._n,))
-        times = unit * loads
+        unit = self._rng.standard_exponential(self._n)
+        times = _times_from_unit(unit, loads, self._dist, self._rates)
         for w, factor in self._slow.items():
             times[w] *= factor
         for ev in self._faults:

@@ -11,6 +11,11 @@ interior optimum governed by the product Delta*mu (paper Fig. 2); for Exp the
 optimum is B=1 (Thm 2); the variance is minimized at B=1 for both (Thm 4) —
 so mean-optimal and variance-optimal B generally DIFFER, which is the paper's
 trade-off headline.  :func:`optimize` exposes all of it.
+
+:func:`sweep` is closed-form (homogeneous Exp/SExp); :func:`sweep_simulated`
+is its Monte-Carlo twin on the batched ``simulator.sweep_simulate`` engine —
+one call per re-plan, common random numbers across B, and support for
+heterogeneous per-worker rates.
 """
 
 from __future__ import annotations
@@ -18,6 +23,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Literal, Sequence
+
+import numpy as np
 
 from .order_stats import (
     Exponential,
@@ -29,7 +36,14 @@ from .order_stats import (
 )
 from .policies import divisors
 
-__all__ = ["SpectrumPoint", "SpectrumResult", "sweep", "optimize", "continuous_optimum"]
+__all__ = [
+    "SpectrumPoint",
+    "SpectrumResult",
+    "sweep",
+    "sweep_simulated",
+    "optimize",
+    "continuous_optimum",
+]
 
 Metric = Literal["mean", "var", "p99", "p999"]
 
@@ -91,6 +105,56 @@ def sweep(
                 mean=completion_mean(dist, n_workers, b),
                 var=completion_var(dist, n_workers, b),
                 p99=completion_quantile(dist, n_workers, b, 0.99),
+            )
+        )
+    points = tuple(pts)
+    return SpectrumResult(
+        points=points,
+        best_mean=min(points, key=lambda p: p.mean),
+        best_var=min(points, key=lambda p: p.var),
+        best_p99=min(points, key=lambda p: p.p99),
+    )
+
+
+def sweep_simulated(
+    dist: ServiceDistribution,
+    n_workers: int,
+    feasible_b: Sequence[int] | None = None,
+    n_trials: int = 8_000,
+    seed: int = 0,
+    rates: Sequence[float] | None = None,
+    backend: str = "numpy",
+) -> SpectrumResult:
+    """Monte-Carlo twin of :func:`sweep`, one batched engine call.
+
+    Where the closed forms of :func:`sweep` only cover homogeneous Exp/SExp,
+    this path also handles heterogeneous per-worker ``rates`` — the tuner
+    uses it for online re-planning when the fleet is skewed.  All B cells
+    share one draw matrix (common random numbers via
+    ``simulator.sweep_simulate``), so the argmin across B is far less noisy
+    than independent simulations would be.
+    """
+    from .simulator import sweep_simulate  # local: avoid import cycle
+
+    res = sweep_simulate(
+        dist,
+        n_workers,
+        n_trials=n_trials,
+        seed=seed,
+        feasible_b=feasible_b,
+        rates=rates,
+        backend=backend,
+    )
+    pts = []
+    for i, b in enumerate(res.splits):
+        s = res.samples[0, i]
+        pts.append(
+            SpectrumPoint(
+                n_batches=b,
+                replication=n_workers // b,
+                mean=float(s.mean()),
+                var=float(s.var(ddof=1)),
+                p99=float(np.quantile(s, 0.99)),
             )
         )
     points = tuple(pts)

@@ -3,8 +3,12 @@
 Closes the loop the paper leaves open: *where do Delta and mu come from?*
 The tuner ingests per-step, per-worker service times (censored when the step
 completed before slow workers finished), maintains a sliding window, fits the
-service distribution (core.estimator), and re-solves the spectrum problem
-(core.spectrum).  A re-plan is emitted only when the predicted improvement
+service distribution (core.estimator), and re-solves the spectrum problem in
+ONE batched call — either the closed-form sweep (core.spectrum.sweep) or the
+Monte-Carlo twin (core.spectrum.sweep_simulated, backed by the batched
+simulator.sweep_simulate engine), the latter optionally fed with per-worker
+rate estimates (worker_rates) for heterogeneous fleets.  A re-plan is
+emitted only when the predicted improvement
 clears a hysteresis threshold and a cooldown has elapsed — re-factoring the
 mesh is not free (it flushes compiled executables and reshuffles the data
 pipeline), so we only move for real wins.
@@ -20,7 +24,7 @@ import numpy as np
 
 from .estimator import FitResult, fit_best
 from .replication import ReplicationPlan
-from .spectrum import optimize, sweep
+from .spectrum import SpectrumResult, sweep, sweep_simulated
 
 __all__ = ["TunerConfig", "RescalePlan", "StragglerTuner"]
 
@@ -32,6 +36,14 @@ class TunerConfig:
     improvement_threshold: float = 0.10  # >=10% predicted mean win to move
     cooldown_steps: int = 20  # steps between re-plans
     metric: Literal["mean", "var", "p99"] = "mean"
+    # "analytic": closed-form sweep (homogeneous Exp/SExp only).
+    # "simulate": one batched sweep_simulate call, optionally with the
+    # per-worker rate estimates from the observation window (heterogeneous).
+    mode: Literal["analytic", "simulate"] = "analytic"
+    heterogeneous: bool = False  # feed worker_rates() into the simulated sweep
+    sim_trials: int = 4_000
+    sim_backend: str = "numpy"
+    sim_seed: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,23 +112,69 @@ class StragglerTuner:
         self.last_fit = fit_best(x, c)
         return self.last_fit
 
+    def worker_rates(self) -> Optional[np.ndarray]:
+        """Per-worker relative service rates estimated from the window.
+
+        Censored-exponential MLE per worker: ``rate_j ~ n_uncensored_j /
+        sum(times_j)`` — censored observations still contribute their
+        lower-bound time to the denominator, so a persistently-censored
+        slow worker is estimated SLOW instead of being dropped (discarding
+        censored draws would keep only a straggler's lucky fast ones and
+        bias its rate high).  A worker with zero uncensored observations
+        gets a half pseudo-observation to stay finite-and-slow.  Rates are
+        normalized to mean 1 (the fitted mu carries the absolute scale).
+
+        Returns None on an empty window or while the window holds mixed
+        worker counts (mid-elastic-resize) — callers fall back to the
+        homogeneous plan until a clean window accumulates.
+        """
+        if not self._times:
+            return None
+        if len({t.shape for t in self._times}) != 1:
+            return None
+        t = np.stack(list(self._times))  # (steps, N)
+        c = np.stack(list(self._censored))
+        n_unc = (~c).sum(axis=0).astype(float)
+        total = t.sum(axis=0)
+        if np.any(total <= 0):
+            return None
+        rates = np.maximum(n_unc, 0.5) / total
+        return rates / rates.mean()
+
+    def _solve_spectrum(self, fit: FitResult) -> SpectrumResult:
+        """One batched sweep — closed-form or simulation-backed."""
+        if self.config.mode == "analytic":
+            return sweep(fit.dist, self.plan.n_data)
+        rates = self.worker_rates() if self.config.heterogeneous else None
+        if rates is not None and len(rates) != self.plan.n_data:
+            rates = None  # observed fleet != plan size: homogeneous fallback
+        return sweep_simulated(
+            fit.dist,
+            self.plan.n_data,
+            n_trials=self.config.sim_trials,
+            seed=self.config.sim_seed,
+            rates=rates,
+            backend=self.config.sim_backend,
+        )
+
     def maybe_replan(self) -> Optional[RescalePlan]:
-        """Fit, re-optimize B, and emit a plan if it clears the hysteresis."""
+        """Fit, re-solve the spectrum in ONE batched call, and emit a plan if
+        the predicted win clears the hysteresis."""
         if self._step - self._last_replan < self.config.cooldown_steps:
             return None
         fit = self.fit()
         if fit is None:
             return None
-        res = sweep(fit.dist, self.plan.n_data)
+        res = self._solve_spectrum(fit)
         cur = next(
             p for p in res.points if p.n_batches == self.plan.n_batches
         )
-        best = optimize(fit.dist, self.plan.n_data, metric=self.config.metric)
         metric_of = {
             "mean": lambda p: p.mean,
             "var": lambda p: p.var,
             "p99": lambda p: p.p99,
         }[self.config.metric]
+        best = min(res.points, key=metric_of)
         if best.n_batches == self.plan.n_batches:
             return None
         improvement = 1.0 - metric_of(best) / max(metric_of(cur), 1e-30)

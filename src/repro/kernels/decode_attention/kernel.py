@@ -39,8 +39,9 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, m_ref, l_ref, acc_ref, *,
     def body(kb, carry):
         m, l, acc = carry
         base = kb * block_k
-        k = pl.load(k_ref, (0, pl.dslice(base, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(base, block_k), slice(None)))
+        # slice-not-int leading index: see flash_attention kernel note
+        k = pl.load(k_ref, (slice(0, 1), pl.dslice(base, block_k), slice(None)))[0]
+        v = pl.load(v_ref, (slice(0, 1), pl.dslice(base, block_k), slice(None)))[0]
         s = jnp.dot(k.astype(jnp.float32), q)  # (block_k,)
         pos = si * split_len + base + jax.lax.iota(jnp.int32, block_k)
         s = jnp.where(pos < cache_len, s, NEG_INF)

@@ -53,8 +53,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_kv,
 
     def body(kb, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        # leading index must be a slice: interpret-mode discharge rejects
+        # bare python ints (jax<=0.4.x), so load (1, bk, d) and squeeze
+        k = pl.load(k_ref, (slice(0, 1), pl.dslice(kb * block_k, block_k), slice(None)))[0]
+        v = pl.load(v_ref, (slice(0, 1), pl.dslice(kb * block_k, block_k), slice(None)))[0]
         s = jnp.dot(q, k.astype(jnp.float32).T)  # (bq, bk) fp32 on MXU
         if causal:
             qpos = qi * block_q + jax.lax.broadcasted_iota(

@@ -38,10 +38,11 @@ def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref, y_ref,
 
     def body(ci, state):
         sl = pl.dslice(ci * chunk, chunk)
-        x = pl.load(x_ref, (0, sl, slice(None))).astype(jnp.float32)  # (CL,P)
-        dt = pl.load(dt_ref, (0, sl)).astype(jnp.float32)  # (CL,)
-        bm = pl.load(b_ref, (0, sl, slice(None))).astype(jnp.float32)  # (CL,N)
-        cm = pl.load(c_ref, (0, sl, slice(None))).astype(jnp.float32)
+        # slice-not-int leading index: see flash_attention kernel note
+        x = pl.load(x_ref, (slice(0, 1), sl, slice(None)))[0].astype(jnp.float32)  # (CL,P)
+        dt = pl.load(dt_ref, (slice(0, 1), sl))[0].astype(jnp.float32)  # (CL,)
+        bm = pl.load(b_ref, (slice(0, 1), sl, slice(None)))[0].astype(jnp.float32)  # (CL,N)
+        cm = pl.load(c_ref, (slice(0, 1), sl, slice(None)))[0].astype(jnp.float32)
 
         la = dt * a  # (CL,) log decays
         cum = jnp.cumsum(la)  # inclusive
@@ -59,7 +60,7 @@ def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref, y_ref,
         # inter-chunk: y += exp(cum) * (C @ S_prev)
         y = y + jnp.exp(cum)[:, None] * jnp.dot(cm, state)
         y = y + d_skip * x
-        pl.store(y_ref, (0, sl, slice(None)), y.astype(y_ref.dtype))
+        pl.store(y_ref, (slice(0, 1), sl, slice(None)), y[None].astype(y_ref.dtype))
 
         # state update: S = exp(total) * S + B^T @ (x * exp(total-cum) * dt)
         win = (jnp.exp(total - cum) * dt)[:, None] * x  # (CL,P)

@@ -90,6 +90,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+        cost = cost[0] if cost else None
     print(f"[{tag}] memory_analysis: {mem}")
     flops = cost.get("flops", 0.0) if cost else 0.0
     print(f"[{tag}] cost_analysis: flops={flops:.3e} "

@@ -118,8 +118,18 @@ def _split_instr(line: str):
     return name, type_str, op, rest[sp + 1 :]
 
 
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
 def _operand_names(args_str: str) -> list[str]:
-    names, depth, buf = [], 0, []
+    """Names of the operands inside the instruction's argument parens.
+
+    Handles both operand syntaxes: bare (``dot(%a, %b)``) and typed
+    (``dot(f32[8,8]{1,0} %a, ...)``, jax>=0.4.3x) — commas inside shape
+    brackets make naive splitting wrong, so scan for %name tokens within
+    the depth-0 argument region instead.
+    """
+    depth, buf = 0, []
     for ch in args_str:
         if ch == "(":
             depth += 1
@@ -129,11 +139,7 @@ def _operand_names(args_str: str) -> list[str]:
             depth -= 1
         else:
             buf.append(ch)
-    for part in "".join(buf).split(","):
-        part = part.strip()
-        if part.startswith("%"):
-            names.append(part[1:].split(" ")[0])
-    return names
+    return _OPERAND_NAME_RE.findall("".join(buf))
 
 
 def _replica_group_info(line: str, pod_size: int):

@@ -6,6 +6,8 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make the _prop shim importable regardless of pytest import mode / cwd
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax  # noqa: E402
 

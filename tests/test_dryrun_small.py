@@ -9,6 +9,9 @@ import textwrap
 
 import pytest
 
+# small-mesh lower+compile subprocesses, ~2 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
+
 _SCRIPT = textwrap.dedent(
     """
     import os
@@ -38,6 +41,8 @@ _SCRIPT = textwrap.dedent(
     with mesh:
         compiled = jax.jit(step, in_shardings=in_sh).lower(*args).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax wraps it in a list
+        cost = cost[0] if cost else {}
     assert cost.get("flops", 0) > 0
     from repro.roofline.hlo_cost import walk_hlo
     w = walk_hlo(compiled.as_text(), pod_size=4)

@@ -3,7 +3,7 @@ correctness + order-statistic closed forms + the comparison result."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import Exponential, ShiftedExponential
 from repro.core.gradient_coding import (

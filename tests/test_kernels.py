@@ -6,12 +6,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.kernels import decode_attention, flash_attention, ssd_scan
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.models.ssm import ssd_sequential
 from repro.models.xlstm import mlstm_chunked, mlstm_sequential
+
+# pallas interpret-mode kernels, ~2 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(7)
 

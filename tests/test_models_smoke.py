@@ -24,6 +24,9 @@ from repro.models import (
 from repro.models import layers as L
 from repro.models import lm as LM
 
+# all model archs forward+grad, ~4 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 64
 

@@ -6,11 +6,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.configs import get_config, reduced_config
 from repro.models import Shard, init_params
 from repro.models.moe import apply_moe, init_moe, router_capacity
+
+# MoE dispatch/combine compiles, ~1 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

@@ -5,6 +5,9 @@ import pytest
 
 from repro.serving import ReplicatedServingEngine, ServeEngineConfig
 
+# serving sweeps + compiles, ~6 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
+
 
 def test_engine_serves_requests():
     eng = ReplicatedServingEngine(

@@ -15,6 +15,9 @@ import pytest
 from repro.configs import SHAPE_CELLS, get_config
 from repro.launch.policies import auto_policy
 
+# multi-device subprocess lowering, ~1.5 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
+
 
 class _FakeMesh:
     def __init__(self, shape):

@@ -1,0 +1,241 @@
+"""Batched/vectorized simulation engine: exactness, closed-form agreement,
+heterogeneous-worker regressions (the PR-1 tentpole)."""
+
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core import (
+    Exponential,
+    ShiftedExponential,
+    StepTimeSimulator,
+    balanced_nonoverlapping,
+    completion_mean,
+    completion_var,
+    divisors,
+    expected_completion_rates,
+    overlapping_cyclic,
+    random_assignment,
+    rate_aware_assignment,
+    simulate_coverage,
+    simulate_coverage_reference,
+    simulate_maxmin,
+    sweep_simulate,
+    sweep_simulated,
+    unbalanced_nonoverlapping,
+)
+from repro.core.tuner import StragglerTuner, TunerConfig
+from repro.core.replication import ReplicationPlan
+
+EXP = Exponential(mu=1.7)
+SEXP = ShiftedExponential(delta=0.3, mu=1.2)
+
+
+# -- vectorized coverage == reference loop, bit for bit ----------------------
+
+
+def _assignments(seed):
+    return [
+        balanced_nonoverlapping(8, 4),
+        unbalanced_nonoverlapping(8, [1, 1, 3, 3]),
+        overlapping_cyclic(16, 4),
+        random_assignment(12, 4, seed=seed),
+        rate_aware_assignment(8, 2, 0.5 + np.arange(8) / 4.0),
+    ]
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 1000), mu=st.floats(0.3, 4.0))
+def test_vectorized_coverage_equals_reference(seed, mu):
+    for dist in (Exponential(mu=mu), ShiftedExponential(delta=0.2, mu=mu)):
+        for a in _assignments(seed):
+            fast = simulate_coverage(dist, a, n_trials=300, seed=seed)
+            slow = simulate_coverage_reference(dist, a, n_trials=300, seed=seed)
+            assert np.array_equal(fast.samples, slow.samples)
+
+
+def test_vectorized_coverage_equals_reference_hetero():
+    rng = np.random.default_rng(0)
+    for a in _assignments(3):
+        rates = rng.uniform(0.2, 3.0, a.n_workers)
+        fast = simulate_coverage(SEXP, a, n_trials=300, seed=7, rates=rates)
+        slow = simulate_coverage_reference(
+            SEXP, a, n_trials=300, seed=7, rates=rates
+        )
+        assert np.array_equal(fast.samples, slow.samples)
+
+
+def test_coverage_handles_many_units():
+    # >64 data units exercises the multi-word bitmask path
+    a = balanced_nonoverlapping(96, 8)
+    fast = simulate_coverage(EXP, a, n_trials=200, seed=1)
+    slow = simulate_coverage_reference(EXP, a, n_trials=200, seed=1)
+    assert np.array_equal(fast.samples, slow.samples)
+
+
+# -- simulate_maxmin vs closed forms -----------------------------------------
+
+
+@pytest.mark.parametrize("dist", [EXP, SEXP], ids=["exp", "sexp"])
+@pytest.mark.parametrize("b", divisors(16))
+def test_maxmin_matches_closed_form(dist, b):
+    n = 16
+    sim = simulate_maxmin(dist, n, b, n_trials=30_000, seed=b)
+    mean = completion_mean(dist, n, b)
+    var = completion_var(dist, n, b)
+    assert abs(sim.mean - mean) < 4 * sim.stderr
+    # stderr of a sample variance is ~ var * sqrt(2/(n-1)) for these tails
+    var_stderr = var * np.sqrt(2.0 / (len(sim.samples) - 1))
+    assert abs(sim.var - var) < 8 * var_stderr
+
+
+# -- batched sweep ------------------------------------------------------------
+
+
+def test_sweep_evaluates_all_splits_in_one_call():
+    res = sweep_simulate(SEXP, 64, n_trials=500, seed=0)
+    assert res.splits == tuple(divisors(64))
+    assert res.samples.shape == (1, len(divisors(64)), 500)
+
+
+def test_sweep_cells_share_draws_with_maxmin():
+    # common-random-numbers contract: every (dist, B) cell is bit-identical
+    # to the standalone fast path with the same seed
+    res = sweep_simulate([EXP, SEXP], 16, n_trials=400, seed=9)
+    for di, dist in enumerate((EXP, SEXP)):
+        for b in res.splits:
+            mm = simulate_maxmin(dist, 16, b, n_trials=400, seed=9)
+            assert np.array_equal(res.result(b, di).samples, mm.samples)
+
+
+def test_sweep_jax_backend_matches_numpy():
+    res_np = sweep_simulate([EXP, SEXP], 16, n_trials=2_000, seed=3)
+    res_jx = sweep_simulate([EXP, SEXP], 16, n_trials=2_000, seed=3, backend="jax")
+    # jax runs f32 under the test config; agree to f32 precision
+    np.testing.assert_allclose(res_jx.means(), res_np.means(), rtol=1e-4)
+    np.testing.assert_allclose(res_jx.variances(), res_np.variances(), rtol=1e-3)
+    assert res_jx.best_mean(1)[0] == res_np.best_mean(1)[0]
+
+
+def test_sweep_simulated_finds_analytic_optimum():
+    # clear interior optimum: E[T] gaps >> CRN-paired Monte-Carlo noise
+    d = ShiftedExponential(delta=0.25, mu=1.0)
+    res = sweep_simulated(d, 16, n_trials=20_000, seed=4)
+    analytic = min(divisors(16), key=lambda b: completion_mean(d, 16, b))
+    assert res.best_mean.n_batches == analytic
+    assert res.best_var.n_batches == 1  # Thm 4
+    assert res.tradeoff
+
+
+def test_sweep_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        sweep_simulate(EXP, 16, feasible_b=[3])
+    with pytest.raises(ValueError):
+        sweep_simulate(EXP, 16, backend="torch")
+    with pytest.raises(ValueError):
+        sweep_simulate(EXP, 16, rates=np.ones(5))
+
+
+# -- heterogeneous rates ------------------------------------------------------
+
+
+def test_equal_rates_reproduce_homogeneous_bitwise():
+    ones = np.ones(16)
+    mm0 = simulate_maxmin(SEXP, 16, 4, n_trials=500, seed=5)
+    mm1 = simulate_maxmin(SEXP, 16, 4, n_trials=500, seed=5, rates=ones)
+    assert np.array_equal(mm0.samples, mm1.samples)
+
+    a = overlapping_cyclic(16, 4)
+    c0 = simulate_coverage(SEXP, a, n_trials=500, seed=5)
+    c1 = simulate_coverage(SEXP, a, n_trials=500, seed=5, rates=ones)
+    assert np.array_equal(c0.samples, c1.samples)
+
+    s0 = sweep_simulate(SEXP, 16, n_trials=500, seed=5)
+    s1 = sweep_simulate(SEXP, 16, n_trials=500, seed=5, rates=ones)
+    assert np.array_equal(s0.samples, s1.samples)
+
+    sim0 = StepTimeSimulator(SEXP, 8, seed=2)
+    sim1 = StepTimeSimulator(SEXP, 8, seed=2, rates=np.ones(8))
+    for _ in range(5):
+        assert np.array_equal(sim0.next_step(), sim1.next_step())
+
+
+def test_rate_aware_beats_balanced_with_slow_worker():
+    # one dominant straggler on top of a mildly skewed fleet (think: one bad
+    # host in a rack whose neighbours also vary).  NOTE with a one-hot rate
+    # vector (all others exactly equal) greedy and contiguous layouts yield
+    # the SAME aggregate-rate multiset, so the means provably tie — the win
+    # requires (and reality provides) spread in the rest of the fleet.
+    n, b = 16, 4
+    rates = np.concatenate([[0.05], np.linspace(0.7, 1.3, n - 1)])
+    ra = rate_aware_assignment(n, b, rates)
+    bal = balanced_nonoverlapping(n, b)
+    # analytic: aggregate-rate balancing strictly beats the naive layout
+    e_ra = expected_completion_rates(EXP, n, ra.worker_batch, rates)
+    e_bal = expected_completion_rates(EXP, n, bal.worker_batch, rates)
+    assert e_ra < e_bal
+    # simulated, CRN-paired (same seed -> same draws): same ordering
+    m_ra = simulate_coverage(EXP, ra, n_trials=20_000, seed=6, rates=rates).mean
+    m_bal = simulate_coverage(EXP, bal, n_trials=20_000, seed=6, rates=rates).mean
+    assert m_ra < m_bal
+
+
+def test_rate_aware_equal_rates_is_balanced():
+    ra = rate_aware_assignment(12, 4, np.ones(12))
+    assert ra.replication == (3, 3, 3, 3)
+    assert ra.batch_sizes == balanced_nonoverlapping(12, 4).batch_sizes
+
+
+def test_step_time_simulator_hetero_rates():
+    rates = np.ones(4)
+    rates[3] = 0.1  # 10x slower exponential part
+    sim = StepTimeSimulator(Exponential(mu=2.0), 4, seed=1, rates=rates)
+    draws = np.stack([sim.next_step() for _ in range(400)])
+    assert np.median(draws[:, 3]) > 4 * np.median(draws[:, 0])
+
+
+def test_simulator_rejects_bad_rates():
+    with pytest.raises(ValueError):
+        simulate_maxmin(EXP, 8, 4, n_trials=10, rates=np.zeros(8))
+    with pytest.raises(ValueError):
+        StepTimeSimulator(EXP, 4, rates=np.ones(3))
+
+
+# -- tuner on the batched sweep ----------------------------------------------
+
+
+def test_tuner_simulate_mode_replans():
+    n = 16
+    plan = ReplicationPlan(n_data=n, n_batches=16)
+    dist = ShiftedExponential(delta=0.01, mu=1.0)
+    tuner = StragglerTuner(
+        plan,
+        TunerConfig(
+            min_samples=64, cooldown_steps=0, mode="simulate", sim_trials=4_000
+        ),
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        tuner.observe(dist.sample(rng, n))
+    rp = tuner.maybe_replan()
+    assert rp is not None
+    assert rp.new_batches < 16
+
+
+def test_tuner_worker_rates_estimate():
+    n = 8
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=n, n_batches=4),
+        TunerConfig(mode="simulate", heterogeneous=True),
+    )
+    rng = np.random.default_rng(1)
+    slow = np.ones(n)
+    slow[2] = 10.0  # worker 2 is 10x slower
+    for _ in range(200):
+        tuner.observe(Exponential(mu=1.0).sample(rng, n) * slow)
+    rates = tuner.worker_rates()
+    assert rates is not None
+    assert rates.shape == (n,)
+    assert np.isclose(rates.mean(), 1.0)
+    assert rates[2] == rates.min()
+    assert rates[2] < 0.3 * np.median(rates)

@@ -7,6 +7,9 @@ import pytest
 from repro.core import FaultEvent
 from repro.launch.train import Trainer, TrainerConfig
 
+# end-to-end virtual-pod training, ~3 min; deselected from tier-1 (see pytest.ini), run with -m slow
+pytestmark = pytest.mark.slow
+
 
 def _tc(**kw):
     base = dict(
