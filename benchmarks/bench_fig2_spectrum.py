@@ -5,10 +5,11 @@ products — the interior optimum moves toward parallelism as Delta*mu grows.
 import time
 
 from repro.core import (
+    AnalyticPlanner,
+    ClusterSpec,
     ShiftedExponential,
     completion_mean,
     divisors,
-    optimize,
     simulate_maxmin,
 )
 
@@ -17,11 +18,12 @@ def run(n=64, mu=1.0, trials=20_000):
     rows = []
     curve_desc = []
     prev_best = 0
+    planner = AnalyticPlanner()
     t0 = time.perf_counter()
     for delta in (0.01, 0.05, 0.25, 1.0):
         dist = ShiftedExponential(delta=delta, mu=mu)
         curve = [(b, completion_mean(dist, n, b)) for b in divisors(n)]
-        best = optimize(dist, n).n_batches
+        best = planner.plan(ClusterSpec(n_workers=n, dist=dist)).n_batches
         # MC validation of the curve minimum
         sim = simulate_maxmin(dist, n, best, n_trials=trials, seed=3)
         assert abs(sim.mean - dict(curve)[best]) < 5 * sim.stderr + 1e-3

@@ -1,0 +1,88 @@
+"""Planner overhead per re-plan: analytic vs simulated vs heterogeneous.
+
+A re-plan sits on the control-plane hot path (the tuner may call it every
+``cooldown_steps`` training steps; serving calls it between rounds), so its
+cost bounds how reactive the system can be.  Measures one full
+``Planner.plan(spec, objective)`` — sweep + argmin + placement — for the
+three implementations on an N=64 fleet, plus the skew-aware shrink path
+(``ClusterSpec.drop_slowest`` + re-plan) that the elastic layer runs on
+worker loss.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    AnalyticPlanner,
+    ClusterSpec,
+    HeterogeneousPlanner,
+    Objective,
+    ShiftedExponential,
+    SimulatedPlanner,
+)
+
+N = 64
+DIST = ShiftedExponential(delta=0.25, mu=1.0)
+TRIALS = 20_000
+
+
+def _best_of(f, n=5):
+    best = float("inf")
+    out = None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = f()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run():
+    rows = []
+    obj = Objective(metric="mean")
+    homo = ClusterSpec(n_workers=N, dist=DIST)
+    rates = np.concatenate([[0.1], np.linspace(0.7, 1.3, N - 1)])
+    skew = ClusterSpec(n_workers=N, dist=DIST, rates=tuple(rates))
+
+    s, plan = _best_of(lambda: AnalyticPlanner().plan(homo, obj))
+    rows.append(("planner_analytic", s * 1e6, f"N={N};B*={plan.n_batches}"))
+
+    sim = SimulatedPlanner(n_trials=TRIALS)
+    s, plan = _best_of(lambda: sim.plan(homo, obj), n=3)
+    rows.append(
+        (
+            "planner_simulated",
+            s * 1e6,
+            f"N={N};trials={TRIALS};B*={plan.n_batches}",
+        )
+    )
+
+    het = HeterogeneousPlanner(n_trials=TRIALS)
+    s, plan = _best_of(lambda: het.plan(skew, obj), n=3)
+    rows.append(
+        (
+            "planner_heterogeneous",
+            s * 1e6,
+            f"N={N};trials={TRIALS};B*={plan.n_batches};"
+            f"replication={list(plan.assignment.replication)}",
+        )
+    )
+
+    def shrink():
+        spec, dropped = skew.drop_slowest(4)
+        return het.plan(spec, obj), dropped
+
+    s, (plan, dropped) = _best_of(shrink, n=3)
+    rows.append(
+        (
+            "planner_shrink_skewed",
+            s * 1e6,
+            f"lost=4;dropped={list(dropped)};B*={plan.n_batches}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

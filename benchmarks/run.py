@@ -10,6 +10,7 @@ def main() -> None:
         bench_collectives,
         bench_fig2_spectrum,
         bench_gradient_coding,
+        bench_planner,
         bench_roofline,
         bench_serving_latency,
         bench_sim_engine,
@@ -21,6 +22,7 @@ def main() -> None:
 
     modules = [
         bench_sim_engine,
+        bench_planner,
         bench_thm1_assignment,
         bench_thm2_exponential,
         bench_fig2_spectrum,

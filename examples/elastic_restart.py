@@ -2,12 +2,19 @@
 watch the runtime detect the lost replica group, restore from checkpoint,
 shrink the fleet, re-plan B, and keep training.
 
+Recovery routes through the unified planner: the trainer's FaultManager
+builds a survivors-only ClusterSpec and calls Planner.plan — the same entry
+point the online tuner and the serving engine use.  The second act shows the
+elastic layer's skew-aware shrink directly: with per-worker rates known, the
+executor sheds the SLOWEST workers, not arbitrary ids.
+
 Run: PYTHONPATH=src python examples/elastic_restart.py
 """
 
 import numpy as np
 
-from repro.core import FaultEvent
+from repro.core import FaultEvent, ReplicationPlan, ShiftedExponential
+from repro.distributed import RescaleExecutor, RuntimeTopology
 from repro.launch.train import Trainer, TrainerConfig
 
 
@@ -40,6 +47,16 @@ def main():
     assert np.isfinite(res.losses).all()
     print(f"\nOK: survived a whole-replica-group loss; now on "
           f"N={res.final_plan.n_data}, B={res.final_plan.n_batches}")
+
+    print("\n=== Skew-aware shrink (planner-driven) ===")
+    # a 16-worker fleet with two crippled hosts; preemption takes 2 workers
+    rates = list(np.linspace(1.2, 0.8, 16))
+    rates[4], rates[9] = 0.05, 0.08
+    ex = RescaleExecutor(RuntimeTopology(ReplicationPlan(16, 8), generation=0))
+    topo = ex.shrink(2, dist=ShiftedExponential(delta=0.5, mu=2.0), rates=rates)
+    print(f"dropped workers {topo.dropped_workers} (the crippled hosts), "
+          f"re-planned to N={topo.plan.n_data}, B={topo.plan.n_batches}")
+    assert topo.dropped_workers == (4, 9)
 
 
 if __name__ == "__main__":

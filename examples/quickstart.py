@@ -2,7 +2,9 @@
 
 1. closed-form + Monte-Carlo completion times across the
    diversity-parallelism spectrum (Thms 2-4, Fig. 2);
-2. the spectrum optimizer picking B* from a fitted service distribution;
+2. the unified planner (``ClusterSpec -> Plan``) picking B* — analytic vs
+   simulated vs rate-aware on a skewed fleet — from one entry point,
+   including a B* re-plan from a service distribution fitted on telemetry;
 3. a tiny replicated-data-parallel training run with a straggler, showing
    the fastest-replica rule keeping step time flat.
 
@@ -12,15 +14,14 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.core import (
+    AnalyticPlanner,
+    ClusterSpec,
+    HeterogeneousPlanner,
+    Objective,
     ShiftedExponential,
-    StragglerTuner,
-    TunerConfig,
-    ReplicationPlan,
-    completion_mean,
-    completion_quantile,
+    SimulatedPlanner,
     fit_best,
     simulate_maxmin,
-    sweep,
 )
 from repro.launch.train import Trainer, TrainerConfig
 
@@ -28,28 +29,48 @@ from repro.launch.train import Trainer, TrainerConfig
 def main():
     n = 16
     dist = ShiftedExponential(delta=0.5, mu=2.0)
+    spec = ClusterSpec(n_workers=n, dist=dist)
 
     print("=== Diversity-parallelism spectrum (N=16, SExp(0.5, 2.0)) ===")
     print(f"{'B':>4} {'r':>4} {'E[T] closed':>12} {'E[T] MC':>10} "
           f"{'Var':>8} {'p99':>8}")
-    res = sweep(dist, n)
-    for p in res.points:
+    plan = AnalyticPlanner().plan(spec, Objective(metric="mean"))
+    for p in plan.spectrum.points:
         mc = simulate_maxmin(dist, n, p.n_batches, n_trials=20_000, seed=1)
         print(
             f"{p.n_batches:>4} {p.replication:>4} {p.mean:>12.3f} "
             f"{mc.mean:>10.3f} {p.var:>8.3f} {p.p99:>8.3f}"
         )
-    print(f"mean-optimal B*={res.best_mean.n_batches}, "
-          f"variance-optimal B*={res.best_var.n_batches} "
-          f"(the paper's trade-off: {res.tradeoff})")
+    var_plan = AnalyticPlanner().plan(spec, Objective(metric="var"))
+    print(f"mean-optimal B*={plan.n_batches}, "
+          f"variance-optimal B*={var_plan.n_batches} "
+          f"(the paper's trade-off: {plan.n_batches != var_plan.n_batches})")
+
+    print("\n=== One control plane: Planner.plan(spec, objective) ===")
+    sim_plan = SimulatedPlanner(n_trials=20_000, seed=1).plan(
+        spec, Objective(metric="mean")
+    )
+    print(f"analytic  B*={plan.n_batches}  (predicted E[T]={plan.score:.3f})")
+    print(f"simulated B*={sim_plan.n_batches}  "
+          f"(predicted E[T]={sim_plan.score:.3f}, 20k CRN trials)")
+    # a skewed fleet: one crippled host + natural spread
+    rates = tuple(np.concatenate([[0.1], np.linspace(0.8, 1.2, n - 1)]))
+    het_plan = HeterogeneousPlanner(n_trials=20_000, seed=1).plan(
+        ClusterSpec(n_workers=n, dist=dist, rates=rates),
+        Objective(metric="mean"),
+    )
+    print(f"rate-aware B*={het_plan.n_batches} on a skewed fleet; "
+          f"replicas per batch: {het_plan.assignment.replication} "
+          f"(the 0.1x host is backed by faster peers)")
 
     print("\n=== Fitting the service distribution from step times ===")
     rng = np.random.default_rng(0)
-    samples = dist.sample(rng, 2000)
-    fit = fit_best(samples)
+    fit = fit_best(dist.sample(rng, 2000))
     print(f"fitted: {fit.dist}")
-    print(f"replanned B* for the fit: "
-          f"{sweep(fit.dist, n).best_mean.n_batches}")
+    refit_plan = AnalyticPlanner().plan(
+        ClusterSpec.from_fit(fit, n), Objective(metric="mean")
+    )
+    print(f"replanned B* for the fit: {refit_plan.n_batches}")
 
     print("\n=== RDP training with a 30x straggler (8 workers, B=4) ===")
     tc = TrainerConfig(

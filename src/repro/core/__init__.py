@@ -1,7 +1,9 @@
 """Core library: the paper's data-replication/straggler technique.
 
 Analysis layer (pure python/numpy — control plane):
-    order_stats, policies, simulator, spectrum, estimator, tuner
+    order_stats, policies, simulator, spectrum, estimator, planner, tuner
+    (planner is the unified ClusterSpec -> Plan decision point; spectrum's
+    ``optimize`` and friends remain as compatibility shims on top of it)
 Execution layer (jax — data plane):
     replication (RDP mesh factoring + straggler-drop aggregation)
 """
@@ -30,6 +32,7 @@ from .policies import (
     overlapping_cyclic,
     random_assignment,
     rate_aware_assignment,
+    replica_major_nonoverlapping,
     unbalanced_nonoverlapping,
 )
 from .replication import (
@@ -52,14 +55,27 @@ from .simulator import (
     sweep_simulate,
 )
 from .spectrum import (
+    METRICS,
+    Metric,
     SpectrumPoint,
     SpectrumResult,
     continuous_optimum,
+    metric_value,
     optimize,
     sweep,
     sweep_simulated,
 )
 from .estimator import FitResult, fit_best, fit_exponential, fit_shifted_exponential
+from .planner import (
+    AnalyticPlanner,
+    ClusterSpec,
+    HeterogeneousPlanner,
+    Objective,
+    Plan,
+    Planner,
+    SimulatedPlanner,
+    make_planner,
+)
 from .tuner import RescalePlan, StragglerTuner, TunerConfig
 
 __all__ = [k for k in dir() if not k.startswith("_")]

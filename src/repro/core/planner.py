@@ -1,0 +1,455 @@
+"""Unified planner: one ``ClusterSpec -> Plan`` control plane.
+
+The paper's result is a single decision — factor N workers into (B batches x
+r replicas) under a fitted service distribution — and this module is the ONE
+place that decision is made.  Every runtime layer (online tuner, elastic
+rescale, fault recovery, the training driver, the serving engine) describes
+its fleet as a :class:`ClusterSpec`, states what it cares about as an
+:class:`Objective`, and receives a :class:`Plan`:
+
+    plan = SimulatedPlanner().plan(ClusterSpec(n_workers=16, dist=fit.dist),
+                                   Objective(metric="p99"))
+    plan.n_batches        # the chosen B
+    plan.assignment       # a concrete worker->batch placement
+    plan.predicted        # SpectrumPoint(mean/var/p99/p999) at the chosen B
+    plan.spectrum         # the full sweep (for hysteresis comparisons)
+
+Three implementations of the :class:`Planner` strategy:
+
+* :class:`AnalyticPlanner` — closed-form sweep (Thms 2-4); homogeneous
+  Exp/SExp only, microsecond re-plans.
+* :class:`SimulatedPlanner` — one batched :func:`~repro.core.simulator
+  .sweep_simulate` call with common random numbers across B; works for any
+  distribution the vectorized engine accepts, treats the fleet as
+  homogeneous.
+* :class:`HeterogeneousPlanner` — the rate-aware extension (Behrouzi-Far &
+  Soljanin 2020 style): simulated sweep driven by per-worker ``rates``,
+  :func:`~repro.core.policies.rate_aware_assignment` placement, and the
+  closed-form :func:`~repro.core.order_stats.expected_completion_rates`
+  companion attached when available.  With ``rates`` equal to ones it is
+  bit-identical to :class:`SimulatedPlanner` (same RNG stream, same float
+  ops, same assignment) — the parity contract the tests pin down.
+
+Objective hysteresis (``improvement_threshold``, ``cooldown_steps``) is
+carried on the Objective so re-plan *triggers* (tuner, serving) and re-plan
+*solvers* (planners) share one vocabulary; the planners themselves are pure
+functions of (spec, objective).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .estimator import FitResult
+from .order_stats import (
+    Exponential,
+    ServiceDistribution,
+    ShiftedExponential,
+    expected_completion_rates,
+)
+from .policies import (
+    Assignment,
+    _validate_rates,
+    divisors,
+    rate_aware_assignment,
+    replica_major_nonoverlapping,
+)
+from .replication import ReplicationPlan
+from .spectrum import (
+    METRICS,
+    Metric,
+    SpectrumPoint,
+    SpectrumResult,
+    metric_value,
+    point_from_samples,
+    result_from_points,
+    sweep,
+    sweep_simulated,
+)
+
+__all__ = [
+    "ClusterSpec",
+    "Objective",
+    "Plan",
+    "Planner",
+    "AnalyticPlanner",
+    "SimulatedPlanner",
+    "HeterogeneousPlanner",
+    "make_planner",
+]
+
+# expected_completion_rates runs inclusion-exclusion over B aggregate rates
+# (2^B terms); beyond this B we skip the closed-form companion.
+_CLOSED_FORM_MAX_BATCHES = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Everything the control plane knows about the fleet.
+
+    * ``n_workers``     — the paper's N.
+    * ``dist``          — fitted service distribution of ONE unit of data on
+                          one nominal worker (from :mod:`repro.core.estimator`
+                          or ground truth).
+    * ``rates``         — optional per-worker relative service rates (higher
+                          = faster; None = homogeneous fleet).
+    * ``feasible_b``    — explicit candidate B values (default: all divisors
+                          of N).
+    * ``batch_divisor`` — if set, B must also divide it (e.g. the global
+                          batch size, so every data batch has integer rows).
+    * ``max_batches``   — if set, B may not exceed it (e.g. "never exceed the
+                          pre-fault B" during recovery).
+    """
+
+    n_workers: int
+    dist: ServiceDistribution
+    rates: Optional[tuple[float, ...]] = None
+    feasible_b: Optional[tuple[int, ...]] = None
+    batch_divisor: Optional[int] = None
+    max_batches: Optional[int] = None
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.rates is not None:
+            r = _validate_rates(self.rates, self.n_workers)
+            object.__setattr__(self, "rates", tuple(float(x) for x in r))
+        if self.feasible_b is not None:
+            object.__setattr__(
+                self, "feasible_b", tuple(int(b) for b in self.feasible_b)
+            )
+        if not self.feasible_batches():
+            raise ValueError(
+                f"no feasible B for N={self.n_workers} under "
+                f"feasible_b={self.feasible_b} batch_divisor={self.batch_divisor} "
+                f"max_batches={self.max_batches}"
+            )
+
+    @classmethod
+    def from_fit(
+        cls,
+        fit: FitResult,
+        n_workers: int,
+        rates: Optional[Sequence[float]] = None,
+        **constraints,
+    ) -> "ClusterSpec":
+        """Spec from an estimator fit + optional per-worker rate estimates."""
+        return cls(
+            n_workers=n_workers,
+            dist=fit.dist,
+            rates=tuple(float(r) for r in rates) if rates is not None else None,
+            **constraints,
+        )
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when per-worker rates are present AND actually skewed."""
+        return self.rates is not None and any(
+            r != self.rates[0] for r in self.rates
+        )
+
+    def feasible_batches(self) -> tuple[int, ...]:
+        """Candidate B values after applying every constraint."""
+        base = self.feasible_b if self.feasible_b is not None else tuple(
+            divisors(self.n_workers)
+        )
+        return tuple(
+            b
+            for b in base
+            if b >= 1
+            and self.n_workers % b == 0
+            and (self.batch_divisor is None or self.batch_divisor % b == 0)
+            and (self.max_batches is None or b <= self.max_batches)
+        )
+
+    def drop_slowest(self, n_lost: int) -> tuple["ClusterSpec", tuple[int, ...]]:
+        """The surviving fleet after shedding ``n_lost`` workers.
+
+        With known ``rates`` the n_lost SLOWEST (lowest-rate) workers are
+        dropped — shrinking should shed stragglers, not arbitrary ids — and
+        their indices are returned.  Without rates the fleet just shrinks
+        (ids unknowable, empty tuple returned).  Surviving rates keep their
+        original values: they are multipliers on ``dist``'s rate, so
+        renormalizing would silently re-scale every prediction.  Explicit
+        ``feasible_b`` is reset (its entries need not divide the new N).
+        """
+        if not 0 <= n_lost < self.n_workers:
+            raise ValueError(
+                f"n_lost={n_lost} out of range for N={self.n_workers}"
+            )
+        if n_lost == 0:
+            return self, ()
+        n_new = self.n_workers - n_lost
+        if self.rates is None:
+            return (
+                dataclasses.replace(self, n_workers=n_new, feasible_b=None),
+                (),
+            )
+        order = np.argsort(np.asarray(self.rates), kind="stable")
+        dropped = tuple(sorted(int(j) for j in order[:n_lost]))
+        survivors = [j for j in range(self.n_workers) if j not in set(dropped)]
+        new_rates = tuple(self.rates[j] for j in survivors)
+        return (
+            dataclasses.replace(
+                self, n_workers=n_new, rates=new_rates, feasible_b=None
+            ),
+            dropped,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """What to optimize, plus the re-plan trigger's hysteresis knobs.
+
+    ``metric`` uses the ONE shared :data:`~repro.core.spectrum.Metric`
+    vocabulary.  ``improvement_threshold`` (fraction in [0, 1)) and
+    ``cooldown_steps`` are read by re-plan triggers (tuner, serving engine):
+    moving B is not free — it flushes compiled executables and reshuffles
+    the data pipeline — so only move for real wins.
+    """
+
+    metric: Metric = "mean"
+    improvement_threshold: float = 0.0
+    cooldown_steps: int = 0
+
+    def __post_init__(self):
+        if self.metric not in METRICS:
+            raise ValueError(
+                f"unknown metric {self.metric!r} (expected one of {METRICS})"
+            )
+        if not 0.0 <= self.improvement_threshold < 1.0:
+            raise ValueError(
+                f"improvement_threshold must be in [0, 1), got "
+                f"{self.improvement_threshold}"
+            )
+        if self.cooldown_steps < 0:
+            raise ValueError(
+                f"cooldown_steps must be >= 0, got {self.cooldown_steps}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The planner's decision: factoring + placement + predicted metrics."""
+
+    spec: ClusterSpec
+    objective: Objective
+    replication: ReplicationPlan
+    assignment: Assignment
+    predicted: SpectrumPoint
+    spectrum: SpectrumResult
+    planner: str  # name of the Planner that produced this
+    closed_form_mean: Optional[float] = None  # hetero closed-form companion
+
+    @property
+    def n_workers(self) -> int:
+        return self.replication.n_data
+
+    @property
+    def n_batches(self) -> int:
+        return self.replication.n_batches
+
+    @property
+    def score(self) -> float:
+        """Predicted value of the objective metric at the chosen B."""
+        return metric_value(self.predicted, self.objective.metric)
+
+    def predicted_at(self, n_batches: int) -> Optional[float]:
+        """Objective-metric prediction at another B (None if not swept)."""
+        try:
+            point = self.spectrum.at(n_batches)
+        except KeyError:
+            return None
+        return metric_value(point, self.objective.metric)
+
+    def improvement_over(self, n_batches: int) -> float:
+        """Predicted fractional win of this plan vs staying at ``n_batches``."""
+        cur = self.predicted_at(n_batches)
+        if cur is None:
+            return math.inf
+        return 1.0 - self.score / max(cur, 1e-30)
+
+
+class Planner:
+    """Strategy interface: ``plan(spec, objective) -> Plan``.
+
+    Subclasses implement :meth:`sweep_spectrum`; selection (argmin of the
+    objective metric over feasible B) and placement are shared here.
+    """
+
+    name = "planner"
+    # capability flag: does this planner feed per-worker rates into its
+    # predictions?  Callers assembling specs (e.g. the tuner) use it to
+    # decide whether collecting rate estimates is worthwhile.
+    consumes_rates = False
+
+    def sweep_spectrum(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> SpectrumResult:
+        raise NotImplementedError
+
+    def assignment_for(self, spec: ClusterSpec, n_batches: int) -> Assignment:
+        """Placement for the chosen B: rate-aware on skewed fleets, the
+        runtime's replica-major balanced layout otherwise."""
+        if spec.heterogeneous:
+            return rate_aware_assignment(spec.n_workers, n_batches, spec.rates)
+        return replica_major_nonoverlapping(spec.n_workers, n_batches)
+
+    def _closed_form_mean(
+        self, spec: ClusterSpec, assignment: Assignment
+    ) -> Optional[float]:
+        """Exact E[T] of the emitted placement, when tractable."""
+        if spec.rates is None:
+            return None
+        if assignment.n_batches > _CLOSED_FORM_MAX_BATCHES:
+            return None
+        if not isinstance(spec.dist, (Exponential, ShiftedExponential)):
+            return None
+        return expected_completion_rates(
+            spec.dist, spec.n_workers, assignment.worker_batch, spec.rates
+        )
+
+    def plan(
+        self, spec: ClusterSpec, objective: Optional[Objective] = None
+    ) -> Plan:
+        objective = objective if objective is not None else Objective()
+        spectrum = self.sweep_spectrum(spec, objective)
+        best = spectrum.best(objective.metric)
+        assignment = self.assignment_for(spec, best.n_batches)
+        return Plan(
+            spec=spec,
+            objective=objective,
+            replication=ReplicationPlan(
+                n_data=spec.n_workers, n_batches=best.n_batches
+            ),
+            assignment=assignment,
+            predicted=best,
+            spectrum=spectrum,
+            planner=self.name,
+            closed_form_mean=self._closed_form_mean(spec, assignment),
+        )
+
+
+class AnalyticPlanner(Planner):
+    """Closed-form sweep (Thms 2-4): homogeneous Exp/SExp fleets only."""
+
+    name = "analytic"
+
+    def sweep_spectrum(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> SpectrumResult:
+        if spec.heterogeneous:
+            raise ValueError(
+                "AnalyticPlanner covers homogeneous fleets only (closed "
+                "forms); use HeterogeneousPlanner for skewed rates"
+            )
+        return sweep(spec.dist, spec.n_workers, spec.feasible_batches())
+
+
+@dataclasses.dataclass
+class SimulatedPlanner(Planner):
+    """Monte-Carlo sweep on the batched CRN engine (homogeneous view).
+
+    One ``sweep_simulate`` call evaluates every feasible B from a shared
+    unit-exponential draw matrix, so the argmin across B is far less noisy
+    than independent simulations.  Per-worker ``rates`` on the spec are NOT
+    fed into the prediction (that is :class:`HeterogeneousPlanner`'s job);
+    placement still honours them via the shared ``assignment_for``.
+    """
+
+    n_trials: int = 20_000
+    seed: int = 0
+    backend: str = "numpy"
+
+    name = "simulated"
+
+    def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
+        return None
+
+    def sweep_spectrum(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> SpectrumResult:
+        return sweep_simulated(
+            spec.dist,
+            spec.n_workers,
+            feasible_b=spec.feasible_batches(),
+            n_trials=self.n_trials,
+            seed=self.seed,
+            rates=self._sweep_rates(spec),
+            backend=self.backend,
+        )
+
+
+@dataclasses.dataclass
+class HeterogeneousPlanner(SimulatedPlanner):
+    """Rate-aware planning for skewed fleets.
+
+    Every candidate B is scored under the PLACEMENT THE PLAN ACTUALLY EMITS:
+    ``rate_aware_assignment`` (balance aggregate batch rates, not replica
+    counts) simulated with per-worker ``rates`` via the coverage engine.
+    Scoring the generic contiguous layout instead would mis-rank B whenever
+    slow hosts cluster — the contiguous grouping piles them into one batch,
+    making mid-size B look artificially bad.  All candidate-B simulations
+    share one seed, so the engine's shared sampling core gives every cell
+    the same unit-exponential draw matrix (common random numbers), exactly
+    like the batched sweep.  ``Plan.closed_form_mean`` carries the exact
+    ``expected_completion_rates`` prediction for the emitted placement when
+    B is small enough for inclusion-exclusion.
+
+    Parity contract: with ``rates=None`` or all-equal rates this class is
+    bit-identical to :class:`SimulatedPlanner` — it takes the identical
+    batched-sweep path (``mu * 1.0 == mu`` exactly in the engine) and the
+    placement falls back to the same replica-major balanced layout.  The
+    skewed path is numpy-only (``backend`` applies to the homogeneous path).
+    """
+
+    name = "heterogeneous"
+    consumes_rates = True
+
+    def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
+        return np.asarray(spec.rates) if spec.rates is not None else None
+
+    def sweep_spectrum(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> SpectrumResult:
+        if not spec.heterogeneous:
+            return super().sweep_spectrum(spec, objective)
+        from .simulator import simulate_coverage  # local: avoid import cycle
+
+        pts = []
+        for b in spec.feasible_batches():
+            assignment = rate_aware_assignment(spec.n_workers, b, spec.rates)
+            sim = simulate_coverage(
+                spec.dist,
+                assignment,
+                n_trials=self.n_trials,
+                seed=self.seed,
+                rates=spec.rates,
+            )
+            pts.append(point_from_samples(b, spec.n_workers // b, sim.samples))
+        return result_from_points(pts)
+
+
+def make_planner(
+    mode: str = "analytic",
+    heterogeneous: bool = False,
+    n_trials: int = 20_000,
+    seed: int = 0,
+    backend: str = "numpy",
+) -> Planner:
+    """Map the legacy tuner knobs (mode / heterogeneous / sim_*) to a Planner."""
+    if mode == "analytic":
+        if heterogeneous:
+            raise ValueError(
+                "heterogeneous (rate-aware) planning needs mode='simulate' — "
+                "the analytic closed forms cover homogeneous fleets only"
+            )
+        return AnalyticPlanner()
+    if mode == "simulate":
+        cls = HeterogeneousPlanner if heterogeneous else SimulatedPlanner
+        return cls(n_trials=n_trials, seed=seed, backend=backend)
+    raise ValueError(f"unknown planner mode {mode!r} (use 'analytic'|'simulate')")

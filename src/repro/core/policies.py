@@ -26,6 +26,7 @@ import numpy as np
 __all__ = [
     "Assignment",
     "balanced_nonoverlapping",
+    "replica_major_nonoverlapping",
     "unbalanced_nonoverlapping",
     "overlapping_cyclic",
     "random_assignment",
@@ -131,6 +132,22 @@ def balanced_nonoverlapping(n_workers: int, n_batches: int) -> Assignment:
     batches = _equal_batches(n_workers, n_batches)
     size = n_workers // n_batches
     worker_batch = tuple(j // size for j in range(n_workers))
+    return Assignment(n_workers, n_workers, batches, worker_batch)
+
+
+def replica_major_nonoverlapping(n_workers: int, n_batches: int) -> Assignment:
+    """Thm 1's balanced policy in the RUNTIME's coordinate layout.
+
+    Same batches and replication counts as :func:`balanced_nonoverlapping`,
+    but worker j serves batch ``j % B`` — the replica-major enumeration of the
+    (replica, batch) grid used by ``make_rdp_mesh`` /
+    ``batch_index_for_data_coord`` (replicas outermost, so replicas of one
+    batch land in different pods).  This is the layout the training/serving
+    control planes hand out, keeping the completion rule, the data feed, and
+    the gradient aggregation on ONE worker->batch map.
+    """
+    batches = _equal_batches(n_workers, n_batches)
+    worker_batch = tuple(j % n_batches for j in range(n_workers))
     return Assignment(n_workers, n_workers, batches, worker_batch)
 
 

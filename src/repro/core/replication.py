@@ -206,6 +206,7 @@ def aggregate_host(
     grads_per_worker: list,
     alive: np.ndarray,
     plan: ReplicationPlan,
+    worker_batch=None,
 ):
     """Host-side (driver-level) reference aggregation for the virtual-pod
     runtime and for tests: numpy pytrees, same semantics as
@@ -213,17 +214,26 @@ def aggregate_host(
 
     ``grads_per_worker[w]`` is the gradient pytree computed by flat data
     coordinate ``w`` (or None if it produced nothing); ``alive[w]`` marks
-    contribution.  Returns (mean over surviving batches, n_batches_used).
+    contribution.  ``worker_batch`` optionally supplies the active
+    worker->batch map (rate-aware placements differ from the replica-major
+    coordinate map used by default).  Returns (mean over surviving batches,
+    n_batches_used).
     """
     if len(grads_per_worker) != plan.n_data:
         raise ValueError("need one (possibly None) gradient per data coord")
+    if worker_batch is None:
+        worker_batch = [
+            batch_index_for_data_coord(plan, w) for w in range(plan.n_data)
+        ]
+    elif len(worker_batch) != plan.n_data:
+        raise ValueError("worker_batch must map every data coord")
     alive = np.asarray(alive, dtype=bool)
     batch_grads = []
     for b in range(plan.n_batches):
         members = [
             w
             for w in range(plan.n_data)
-            if batch_index_for_data_coord(plan, w) == b and alive[w]
+            if worker_batch[w] == b and alive[w]
             and grads_per_worker[w] is not None
         ]
         if not members:

@@ -37,6 +37,11 @@ from .order_stats import (
 from .policies import divisors
 
 __all__ = [
+    "Metric",
+    "METRICS",
+    "metric_value",
+    "point_from_samples",
+    "result_from_points",
     "SpectrumPoint",
     "SpectrumResult",
     "sweep",
@@ -45,7 +50,11 @@ __all__ = [
     "continuous_optimum",
 ]
 
+# THE shared metric vocabulary of the control plane.  Every layer that picks
+# a B (planner, tuner, elastic rescale, fault recovery, serving) accepts the
+# same four literals; ``metric_value`` is the one place they are interpreted.
 Metric = Literal["mean", "var", "p99", "p999"]
+METRICS: tuple[str, ...] = ("mean", "var", "p99", "p999")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,10 +64,53 @@ class SpectrumPoint:
     mean: float
     var: float
     p99: float
+    p999: float = math.nan
 
     @property
     def std(self) -> float:
         return math.sqrt(self.var)
+
+
+def metric_value(point: SpectrumPoint, metric: Metric) -> float:
+    """Read the requested objective metric off a spectrum point."""
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r} (expected one of {METRICS})")
+    v = float(getattr(point, metric))
+    if math.isnan(v):
+        # a hand-built point left p999 at its default — NaN would silently
+        # poison any argmin (all NaN comparisons are False), so fail loudly
+        raise ValueError(f"metric {metric!r} is NaN on {point!r}")
+    return v
+
+
+def point_from_samples(
+    n_batches: int, replication: int, samples: np.ndarray
+) -> SpectrumPoint:
+    """Empirical SpectrumPoint from Monte-Carlo completion-time samples —
+    the ONE place the sample statistics are defined (shared by
+    :func:`sweep_simulated` and the planner's rate-aware sweep)."""
+    s = np.asarray(samples)
+    return SpectrumPoint(
+        n_batches=n_batches,
+        replication=replication,
+        mean=float(s.mean()),
+        var=float(s.var(ddof=1)),
+        p99=float(np.quantile(s, 0.99)),
+        p999=float(np.quantile(s, 0.999)),
+    )
+
+
+def result_from_points(points: Sequence[SpectrumPoint]) -> SpectrumResult:
+    """Assemble a SpectrumResult (argmin fields included) from points."""
+    pts = tuple(points)
+    if not pts:
+        raise ValueError("at least one spectrum point required")
+    return SpectrumResult(
+        points=pts,
+        best_mean=min(pts, key=lambda p: p.mean),
+        best_var=min(pts, key=lambda p: p.var),
+        best_p99=min(pts, key=lambda p: p.p99),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +136,17 @@ class SpectrumResult:
                 best_var = p.var
         return tuple(front)
 
+    def best(self, metric: Metric) -> SpectrumPoint:
+        """argmin over the sweep for ANY shared metric (incl. p999)."""
+        return min(self.points, key=lambda p: metric_value(p, metric))
+
+    def at(self, n_batches: int) -> SpectrumPoint:
+        """The point for a specific B (raises KeyError if not swept)."""
+        for p in self.points:
+            if p.n_batches == n_batches:
+                return p
+        raise KeyError(f"B={n_batches} not in sweep {[p.n_batches for p in self.points]}")
+
 
 def sweep(
     dist: ServiceDistribution,
@@ -105,15 +168,10 @@ def sweep(
                 mean=completion_mean(dist, n_workers, b),
                 var=completion_var(dist, n_workers, b),
                 p99=completion_quantile(dist, n_workers, b, 0.99),
+                p999=completion_quantile(dist, n_workers, b, 0.999),
             )
         )
-    points = tuple(pts)
-    return SpectrumResult(
-        points=points,
-        best_mean=min(points, key=lambda p: p.mean),
-        best_var=min(points, key=lambda p: p.var),
-        best_p99=min(points, key=lambda p: p.p99),
-    )
+    return result_from_points(pts)
 
 
 def sweep_simulated(
@@ -145,24 +203,9 @@ def sweep_simulated(
         rates=rates,
         backend=backend,
     )
-    pts = []
-    for i, b in enumerate(res.splits):
-        s = res.samples[0, i]
-        pts.append(
-            SpectrumPoint(
-                n_batches=b,
-                replication=n_workers // b,
-                mean=float(s.mean()),
-                var=float(s.var(ddof=1)),
-                p99=float(np.quantile(s, 0.99)),
-            )
-        )
-    points = tuple(pts)
-    return SpectrumResult(
-        points=points,
-        best_mean=min(points, key=lambda p: p.mean),
-        best_var=min(points, key=lambda p: p.var),
-        best_p99=min(points, key=lambda p: p.p99),
+    return result_from_points(
+        point_from_samples(b, n_workers // b, res.samples[0, i])
+        for i, b in enumerate(res.splits)
     )
 
 
@@ -172,20 +215,17 @@ def optimize(
     metric: Metric = "mean",
     feasible_b: Sequence[int] | None = None,
 ) -> SpectrumPoint:
-    """argmin_B of the requested metric over feasible B (Thm 3 Eq. (4))."""
-    res = sweep(dist, n_workers, feasible_b)
-    if metric == "mean":
-        return res.best_mean
-    if metric == "var":
-        return res.best_var
-    if metric == "p99":
-        return res.best_p99
-    if metric == "p999":
-        return min(
-            res.points,
-            key=lambda p: completion_quantile(dist, n_workers, p.n_batches, 0.999),
-        )
-    raise ValueError(f"unknown metric {metric!r}")
+    """argmin_B of the requested metric over feasible B (Thm 3 Eq. (4)).
+
+    .. deprecated::
+        Legacy single-shot entry point, kept as a compatibility shim.  New
+        code should go through the unified control plane:
+        ``AnalyticPlanner().plan(ClusterSpec(n_workers, dist), Objective(metric))``
+        (see :mod:`repro.core.planner`), which returns the full
+        :class:`~repro.core.planner.Plan` (assignment + predicted metrics)
+        instead of a bare point.
+    """
+    return sweep(dist, n_workers, feasible_b).best(metric)
 
 
 def continuous_optimum(dist: ShiftedExponential, n_workers: int) -> float:

@@ -1,30 +1,39 @@
-"""Online diversity–parallelism tuner.
+"""Online diversity–parallelism tuner: observe -> fit -> ``Planner.plan``.
 
 Closes the loop the paper leaves open: *where do Delta and mu come from?*
 The tuner ingests per-step, per-worker service times (censored when the step
 completed before slow workers finished), maintains a sliding window, fits the
-service distribution (core.estimator), and re-solves the spectrum problem in
-ONE batched call — either the closed-form sweep (core.spectrum.sweep) or the
-Monte-Carlo twin (core.spectrum.sweep_simulated, backed by the batched
-simulator.sweep_simulate engine), the latter optionally fed with per-worker
-rate estimates (worker_rates) for heterogeneous fleets.  A re-plan is
-emitted only when the predicted improvement
-clears a hysteresis threshold and a cooldown has elapsed — re-factoring the
-mesh is not free (it flushes compiled executables and reshuffles the data
-pipeline), so we only move for real wins.
+service distribution (core.estimator), and estimates per-worker rates.  The
+actual B decision is NOT made here: the tuner assembles a
+:class:`~repro.core.planner.ClusterSpec` from its window and delegates to a
+:class:`~repro.core.planner.Planner` — analytic, simulated, or heterogeneous
+(see :func:`~repro.core.planner.make_planner`).  A re-plan is emitted only
+when the predicted improvement clears the Objective's hysteresis threshold
+and a cooldown has elapsed — re-factoring the mesh is not free (it flushes
+compiled executables and reshuffles the data pipeline), so we only move for
+real wins.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from collections import deque
 from typing import Literal, Optional
 
 import numpy as np
 
 from .estimator import FitResult, fit_best
+from .planner import (
+    ClusterSpec,
+    Objective,
+    Plan,
+    Planner,
+    make_planner,
+)
 from .replication import ReplicationPlan
-from .spectrum import SpectrumResult, sweep, sweep_simulated
+from .spectrum import Metric
 
 __all__ = ["TunerConfig", "RescalePlan", "StragglerTuner"]
 
@@ -33,9 +42,9 @@ __all__ = ["TunerConfig", "RescalePlan", "StragglerTuner"]
 class TunerConfig:
     window_steps: int = 50  # sliding window of step observations
     min_samples: int = 64  # don't fit with fewer points
-    improvement_threshold: float = 0.10  # >=10% predicted mean win to move
+    improvement_threshold: float = 0.10  # >=10% predicted win to move
     cooldown_steps: int = 20  # steps between re-plans
-    metric: Literal["mean", "var", "p99"] = "mean"
+    metric: Metric = "mean"  # the ONE shared Metric literal (incl. p999)
     # "analytic": closed-form sweep (homogeneous Exp/SExp only).
     # "simulate": one batched sweep_simulate call, optionally with the
     # per-worker rate estimates from the observation window (heterogeneous).
@@ -44,6 +53,40 @@ class TunerConfig:
     sim_trials: int = 4_000
     sim_backend: str = "numpy"
     sim_seed: int = 0
+
+    def objective(self) -> Objective:
+        """The planner Objective this config describes."""
+        return Objective(
+            metric=self.metric,
+            improvement_threshold=self.improvement_threshold,
+            cooldown_steps=self.cooldown_steps,
+        )
+
+    def planner(self) -> Planner:
+        """The Planner this config describes (legacy-knob mapping).
+
+        ``heterogeneous=True`` with the default ``mode='analytic'`` was
+        legal-but-inert before the planner API; the legacy mapping keeps
+        that behavior (warn + ignore the flag) where the strict
+        :func:`make_planner` would raise.
+        """
+        heterogeneous = self.heterogeneous
+        if self.mode == "analytic" and heterogeneous:
+            warnings.warn(
+                "TunerConfig(heterogeneous=True) has no effect with "
+                "mode='analytic'; use mode='simulate' for rate-aware "
+                "re-plans",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            heterogeneous = False
+        return make_planner(
+            mode=self.mode,
+            heterogeneous=heterogeneous,
+            n_trials=self.sim_trials,
+            seed=self.sim_seed,
+            backend=self.sim_backend,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +97,7 @@ class RescalePlan:
     predicted_new: float
     fit: FitResult
     step: int
+    plan: Optional[Plan] = None  # the full planner decision (assignment etc.)
 
     @property
     def predicted_improvement(self) -> float:
@@ -63,14 +107,28 @@ class RescalePlan:
 
 
 class StragglerTuner:
-    def __init__(self, plan: ReplicationPlan, config: TunerConfig | None = None):
+    """Observe-window + re-plan trigger around a :class:`Planner`."""
+
+    def __init__(
+        self,
+        plan: ReplicationPlan,
+        config: TunerConfig | None = None,
+        planner: Planner | None = None,
+        batch_divisor: int | None = None,
+    ):
         self.plan = plan
         self.config = config or TunerConfig()
+        self.planner = planner if planner is not None else self.config.planner()
+        # extra feasibility constraint carried into every ClusterSpec: B must
+        # divide this (e.g. the global batch size, so re-plans never pick a B
+        # the data pipeline cannot shard)
+        self.batch_divisor = batch_divisor
         self._times: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
         self._censored: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
         self._step = 0
         self._last_replan = -(10**9)
         self.last_fit: Optional[FitResult] = None
+        self.last_plan: Optional[Plan] = None
 
     def observe(
         self, step_times: np.ndarray, censored: np.ndarray | None = None
@@ -141,53 +199,50 @@ class StragglerTuner:
         rates = np.maximum(n_unc, 0.5) / total
         return rates / rates.mean()
 
-    def _solve_spectrum(self, fit: FitResult) -> SpectrumResult:
-        """One batched sweep — closed-form or simulation-backed."""
-        if self.config.mode == "analytic":
-            return sweep(fit.dist, self.plan.n_data)
-        rates = self.worker_rates() if self.config.heterogeneous else None
-        if rates is not None and len(rates) != self.plan.n_data:
-            rates = None  # observed fleet != plan size: homogeneous fallback
-        return sweep_simulated(
-            fit.dist,
-            self.plan.n_data,
-            n_trials=self.config.sim_trials,
-            seed=self.config.sim_seed,
-            rates=rates,
-            backend=self.config.sim_backend,
+    def cluster_spec(self, fit: FitResult) -> ClusterSpec:
+        """The fleet as currently observed: fitted dist + (optional) rates.
+
+        Rates are only attached when the planner can consume them (a
+        rate-incapable planner would otherwise reject the spec outright).
+        """
+        rates = None
+        if self.planner.consumes_rates:
+            rates = self.worker_rates()
+            if rates is not None and len(rates) != self.plan.n_data:
+                rates = None  # observed fleet != plan size: homogeneous fallback
+        return ClusterSpec.from_fit(
+            fit, self.plan.n_data, rates=rates,
+            batch_divisor=self.batch_divisor,
         )
 
     def maybe_replan(self) -> Optional[RescalePlan]:
-        """Fit, re-solve the spectrum in ONE batched call, and emit a plan if
-        the predicted win clears the hysteresis."""
+        """Fit, delegate the B decision to the Planner, and emit a rescale
+        plan if the predicted win clears the Objective's hysteresis."""
         if self._step - self._last_replan < self.config.cooldown_steps:
             return None
         fit = self.fit()
         if fit is None:
             return None
-        res = self._solve_spectrum(fit)
-        cur = next(
-            p for p in res.points if p.n_batches == self.plan.n_batches
-        )
-        metric_of = {
-            "mean": lambda p: p.mean,
-            "var": lambda p: p.var,
-            "p99": lambda p: p.p99,
-        }[self.config.metric]
-        best = min(res.points, key=metric_of)
-        if best.n_batches == self.plan.n_batches:
+        plan = self.planner.plan(self.cluster_spec(fit), self.config.objective())
+        self.last_plan = plan
+        if plan.n_batches == self.plan.n_batches:
             return None
-        improvement = 1.0 - metric_of(best) / max(metric_of(cur), 1e-30)
+        # current B absent from the sweep means it is no longer feasible
+        # (e.g. a new batch_divisor constraint): the move is FORCED, so it
+        # bypasses hysteresis and reports an infinite predicted win.
+        cur = plan.predicted_at(self.plan.n_batches)
+        improvement = plan.improvement_over(self.plan.n_batches)
         if improvement < self.config.improvement_threshold:
             return None
         self._last_replan = self._step
         return RescalePlan(
             old_batches=self.plan.n_batches,
-            new_batches=best.n_batches,
-            predicted_old=metric_of(cur),
-            predicted_new=metric_of(best),
+            new_batches=plan.n_batches,
+            predicted_old=cur if cur is not None else math.inf,
+            predicted_new=plan.score,
             fit=fit,
             step=self._step,
+            plan=plan,
         )
 
     def apply(self, plan: RescalePlan) -> ReplicationPlan:

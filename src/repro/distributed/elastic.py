@@ -1,20 +1,33 @@
-"""Elastic rescaling: apply a RescalePlan (tuner) or a FaultDecision
-(fault manager) to produce the next runtime configuration.
+"""Elastic rescaling: apply a RescalePlan (tuner), a recovery Plan (fault
+manager), or a shrink event to produce the next runtime configuration.
 
 The state that survives a rescale is exactly (params, opt_state, data step)
 — all placement-agnostic — so the executor's job is bookkeeping: pick the
 new (N', B'), validate divisibility, and describe the new mesh factoring.
+All B decisions are delegated to the unified
+:class:`~repro.core.planner.Planner` control plane; in particular
+:meth:`RescaleExecutor.shrink` on a skewed fleet drops the n_lost SLOWEST
+workers (via ``ClusterSpec.drop_slowest``) and re-plans from the surviving
+rates — not arbitrary ids.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.core.policies import divisors
-from repro.core.replication import ReplicationPlan
-from repro.core.spectrum import optimize
 from repro.core.order_stats import ServiceDistribution
+from repro.core.planner import (
+    AnalyticPlanner,
+    ClusterSpec,
+    HeterogeneousPlanner,
+    Objective,
+    Plan,
+    Planner,
+)
+from repro.core.policies import Assignment, divisors
+from repro.core.replication import ReplicationPlan
+from repro.core.spectrum import Metric
 
 __all__ = ["RescaleExecutor", "RuntimeTopology"]
 
@@ -23,6 +36,8 @@ __all__ = ["RescaleExecutor", "RuntimeTopology"]
 class RuntimeTopology:
     plan: ReplicationPlan
     generation: int  # bumped on every rescale (invalidates compiled steps)
+    assignment: Optional[Assignment] = None  # planner placement, if any
+    dropped_workers: tuple[int, ...] = ()  # ids shed by the last shrink
 
     @property
     def n_workers(self) -> int:
@@ -32,6 +47,12 @@ class RuntimeTopology:
 @dataclasses.dataclass
 class RescaleExecutor:
     topology: RuntimeTopology
+    planner: Optional[Planner] = None  # default: analytic / rate-aware
+
+    def _planner_for(self, spec: ClusterSpec) -> Planner:
+        if self.planner is not None:
+            return self.planner
+        return HeterogeneousPlanner() if spec.rates is not None else AnalyticPlanner()
 
     def apply_replan(self, new_batches: int) -> RuntimeTopology:
         plan = ReplicationPlan(
@@ -40,23 +61,59 @@ class RescaleExecutor:
         self.topology = RuntimeTopology(plan, self.topology.generation + 1)
         return self.topology
 
+    def apply_plan(self, plan: Plan) -> RuntimeTopology:
+        """Adopt a full planner decision (factoring + placement)."""
+        self.topology = RuntimeTopology(
+            plan.replication,
+            self.topology.generation + 1,
+            assignment=plan.assignment,
+        )
+        return self.topology
+
     def shrink(
         self,
         n_lost: int,
         dist: Optional[ServiceDistribution] = None,
+        rates: Optional[Sequence[float]] = None,
+        metric: Metric = "mean",
     ) -> RuntimeTopology:
-        """Lose ``n_lost`` workers: choose the largest feasible N' <= N-lost
-        and re-optimize B for it (falling back to the old B if infeasible)."""
+        """Lose ``n_lost`` workers and re-plan B for the survivors.
+
+        * ``dist`` + ``rates``: the n_lost SLOWEST workers are shed and the
+          planner re-plans from the surviving rates (rate-aware placement);
+          the dropped ids are recorded on the topology.
+        * ``dist`` only: homogeneous re-plan through the planner.
+        * neither: no service model available — keep the largest feasible
+          B <= the old B (pure bookkeeping fallback).
+        """
         old = self.topology.plan
         n_new = old.n_data - n_lost
         if n_new < 1:
             raise RuntimeError("no workers left")
-        # keep it simple: require N' to retain at least one feasible B
-        feas = divisors(n_new)
-        if dist is not None:
-            b_new = optimize(dist, n_new, metric="mean").n_batches
-        else:
-            b_new = max(b for b in feas if b <= old.n_batches)
-        plan = ReplicationPlan(n_data=n_new, n_batches=b_new)
-        self.topology = RuntimeTopology(plan, self.topology.generation + 1)
+        if dist is None:
+            if rates is not None:
+                raise ValueError("rates require a service distribution (dist)")
+            b_new = max(b for b in divisors(n_new) if b <= old.n_batches)
+            self.topology = RuntimeTopology(
+                ReplicationPlan(n_data=n_new, n_batches=b_new),
+                self.topology.generation + 1,
+            )
+            return self.topology
+        spec = ClusterSpec(
+            n_workers=old.n_data,
+            dist=dist,
+            rates=tuple(float(r) for r in rates) if rates is not None else None,
+            # shrinking never increases parallelism past the operator's
+            # pre-shrink choice (same policy as FaultManager.plan_recovery
+            # and the no-model fallback above)
+            max_batches=old.n_batches,
+        )
+        spec, dropped = spec.drop_slowest(n_lost)
+        plan = self._planner_for(spec).plan(spec, Objective(metric=metric))
+        self.topology = RuntimeTopology(
+            plan.replication,
+            self.topology.generation + 1,
+            assignment=plan.assignment,
+            dropped_workers=dropped,
+        )
         return self.topology

@@ -9,18 +9,32 @@ so every policy is CPU-testable.
   fleet, emits the ``alive`` mask consumed by the weighted psum.
 * :class:`FaultManager` — tracks hard failures (missed heartbeats), decides
   between *mask* (batch still covered by surviving replicas) and *elastic
-  restart* (a whole replica group lost -> re-plan B from checkpoint).
+  restart* (a whole replica group lost).  Recovery B is NOT chosen here:
+  :meth:`FaultManager.plan_recovery` builds a survivors-only
+  :class:`~repro.core.planner.ClusterSpec` and delegates to the unified
+  :class:`~repro.core.planner.Planner` control plane.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.order_stats import ServiceDistribution
+from repro.core.planner import (
+    AnalyticPlanner,
+    ClusterSpec,
+    HeterogeneousPlanner,
+    Objective,
+    Plan,
+    Planner,
+)
+from repro.core.policies import Assignment
 from repro.core.replication import ReplicationPlan, batch_index_for_data_coord
+from repro.core.spectrum import Metric
 
 __all__ = ["StragglerDetector", "FaultManager", "FaultDecision"]
 
@@ -71,6 +85,7 @@ class FaultDecision:
 class FaultManager:
     plan: ReplicationPlan
     heartbeat_misses_fatal: int = 3
+    planner: Optional[Planner] = None  # recovery solver (default: analytic)
 
     def __post_init__(self):
         self._missed = np.zeros(self.plan.n_data, dtype=int)
@@ -83,19 +98,85 @@ class FaultManager:
         """True = dead."""
         return self._missed >= self.heartbeat_misses_fatal
 
-    def decide(self, straggler_keep: Optional[np.ndarray] = None) -> FaultDecision:
-        """Combine hard faults + straggler drops into the step decision."""
+    def decide(
+        self,
+        straggler_keep: Optional[np.ndarray] = None,
+        assignment: Optional[Assignment] = None,
+    ) -> FaultDecision:
+        """Combine hard faults + straggler drops into the step decision.
+
+        ``assignment`` supplies the active worker->batch map (rate-aware
+        placements differ from the canonical replica-major layout); without
+        it the plan's replica-major coordinate map is used.
+        """
         alive = ~self.dead_mask()
         if straggler_keep is not None:
             alive = alive & np.asarray(straggler_keep, dtype=bool)
+        if assignment is not None:
+            if assignment.n_workers != self.plan.n_data:
+                raise ValueError(
+                    f"assignment covers {assignment.n_workers} workers but "
+                    f"plan has {self.plan.n_data} — stale placement?"
+                )
+            n_batches = assignment.n_batches
+            batch_of = assignment.worker_batch
+        else:
+            n_batches = self.plan.n_batches
+            batch_of = [
+                batch_index_for_data_coord(self.plan, w)
+                for w in range(self.plan.n_data)
+            ]
         # which batches still have at least one live replica?
-        covered = np.zeros(self.plan.n_batches, dtype=bool)
+        covered = np.zeros(n_batches, dtype=bool)
         for w in range(self.plan.n_data):
             if alive[w]:
-                covered[batch_index_for_data_coord(self.plan, w)] = True
+                covered[batch_of[w]] = True
         lost = tuple(int(b) for b in np.nonzero(~covered)[0])
         if lost:
             return FaultDecision("replan", alive, lost)
         if not alive.all():
             return FaultDecision("mask", alive)
         return FaultDecision("ok", alive)
+
+    def plan_recovery(
+        self,
+        dist: ServiceDistribution,
+        rates: Optional[Sequence[float]] = None,
+        batch_divisor: Optional[int] = None,
+        metric: Metric = "mean",
+    ) -> Plan:
+        """Re-plan for the surviving fleet through the unified planner.
+
+        Builds a ClusterSpec of the heartbeat-alive workers (keeping their
+        per-worker ``rates`` if known), constrains B to at most the
+        pre-fault value (recovery never increases parallelism past what the
+        operator chose) and to divide ``batch_divisor`` when given (e.g. the
+        global batch size), then delegates to the Planner.
+        """
+        alive = ~self.dead_mask()
+        n_alive = int(alive.sum())
+        if n_alive < 1:
+            raise RuntimeError("no workers left")
+        surviving_rates = None
+        if rates is not None:
+            r = np.asarray(rates, dtype=float)
+            if r.shape != (self.plan.n_data,):
+                raise ValueError(
+                    f"rates shape {r.shape} != ({self.plan.n_data},)"
+                )
+            surviving_rates = tuple(float(x) for x in r[alive])
+        spec = ClusterSpec(
+            n_workers=n_alive,
+            dist=dist,
+            rates=surviving_rates,
+            batch_divisor=batch_divisor,
+            max_batches=self.plan.n_batches,
+        )
+        planner = self.planner
+        if planner is None:
+            planner = (
+                HeterogeneousPlanner()
+                if surviving_rates is not None
+                else AnalyticPlanner()
+            )
+        return planner.plan(spec, Objective(metric=metric))

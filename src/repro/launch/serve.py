@@ -27,7 +27,7 @@ from repro.configs import get_config, reduced_config
 from repro.core import (
     ReplicationPlan,
     ShiftedExponential,
-    simulate_maxmin,
+    sweep_simulated,
 )
 from repro.models import Shard, decode_step, init_params, prefill
 
@@ -82,14 +82,11 @@ def run_serving(sc: ServeConfig):
     decode_s = time.time() - t0
     generated = jnp.concatenate(out_tokens, axis=1)
 
-    # latency simulation across the diversity-parallelism spectrum
+    # latency across the diversity-parallelism spectrum: ONE batched
+    # CRN sweep (each cell bit-identical to a standalone simulate_maxmin)
     dist = ShiftedExponential(delta=sc.delta, mu=sc.mu)
-    lat = {}
-    from repro.core.policies import divisors
-
-    for b in divisors(sc.n_servers):
-        sim = simulate_maxmin(dist, sc.n_servers, b, n_trials=20_000, seed=7)
-        lat[b] = {"mean": sim.mean, "p99": sim.quantile(0.99)}
+    res = sweep_simulated(dist, sc.n_servers, n_trials=20_000, seed=7)
+    lat = {p.n_batches: {"mean": p.mean, "p99": p.p99} for p in res.points}
     return {
         "generated": np.asarray(generated),
         "prefill_s": prefill_s,

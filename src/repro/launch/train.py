@@ -13,7 +13,11 @@ faults, and checkpoints.
 
 This gives real loss curves against simulated time — exactly what is needed
 to reproduce Fig. 2 style results on an actual training workload, and it is
-the same control plane that would drive pods on real hardware.
+the same control plane that would drive pods on real hardware.  Every B
+decision (online tuning, fault recovery, elastic restarts) routes through
+ONE ``repro.core.planner.Planner`` built from the TrainerConfig; the active
+``Plan.assignment`` is the single worker->batch map used by the completion
+rule, the data feed, fault coverage, and gradient aggregation.
 
 Run:  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
           --steps 100 --workers 8 --batches 4
@@ -34,6 +38,7 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.core import (
+    ClusterSpec,
     Exponential,
     FaultEvent,
     ReplicationPlan,
@@ -42,9 +47,9 @@ from repro.core import (
     StragglerTuner,
     TunerConfig,
     aggregate_host,
-    balanced_nonoverlapping,
-    batch_index_for_data_coord,
     completion_from_step_times,
+    make_planner,
+    replica_major_nonoverlapping,
 )
 from repro.data import TokenPipeline
 from repro.distributed import FaultManager, StragglerDetector
@@ -74,9 +79,12 @@ class TrainerConfig:
     mu: float = 2.0
     slow_workers: Optional[dict[int, float]] = None
     faults: tuple[FaultEvent, ...] = ()
-    # control plane
+    # control plane — every B decision routes through ONE Planner built from
+    # these knobs (see repro.core.planner.make_planner)
     tuner: bool = False
     tuner_metric: str = "mean"
+    planner_mode: str = "analytic"  # 'analytic' | 'simulate'
+    planner_heterogeneous: bool = False  # rate-aware simulated re-plans
     drop_stragglers: bool = True
     grad_compression: bool = False
     checkpoint_dir: Optional[str] = None
@@ -124,11 +132,26 @@ class Trainer:
             slow_workers=tc.slow_workers,
             faults=tc.faults,
         )
+        # ONE ClusterSpec + ONE Planner drive the whole control plane:
+        # the online tuner, fault recovery, and elastic re-plans all call
+        # Planner.plan on (descendants of) this spec.
+        self.cluster_spec = ClusterSpec(
+            n_workers=tc.n_workers, dist=self.dist,
+            batch_divisor=tc.global_batch,
+        )
+        self.planner = make_planner(
+            mode=tc.planner_mode, heterogeneous=tc.planner_heterogeneous,
+        )
+        self.assignment = replica_major_nonoverlapping(
+            tc.n_workers, tc.n_batches
+        )
         self.tuner = StragglerTuner(
-            self.plan, TunerConfig(metric=tc.tuner_metric)
+            self.plan, TunerConfig(metric=tc.tuner_metric),
+            planner=self.planner,
+            batch_divisor=self.cluster_spec.batch_divisor,
         )
         self.detector = StragglerDetector(tc.n_workers)
-        self.faultmgr = FaultManager(self.plan)
+        self.faultmgr = FaultManager(self.plan, planner=self.planner)
         self.ckpt = (
             Checkpointer(tc.checkpoint_dir) if tc.checkpoint_dir else None
         )
@@ -156,7 +179,9 @@ class Trainer:
     def step(self, step_idx: int):
         tc = self.tc
         plan = self.plan
-        assignment = balanced_nonoverlapping(plan.n_data, plan.n_batches)
+        # ONE worker->batch map (the active Plan's assignment) drives the
+        # completion rule, the data feed, fault coverage, and aggregation.
+        assignment = self.assignment
         loads = assignment.worker_load() / plan.replication  # data units
         times = self.sim.next_step(loads=loads)
 
@@ -165,7 +190,7 @@ class Trainer:
             self.detector.drop_mask() if tc.drop_stragglers else None
         )
         self.faultmgr.heartbeat(np.isfinite(times))
-        decision = self.faultmgr.decide(keep)
+        decision = self.faultmgr.decide(keep, assignment=assignment)
 
         # apply the paper's completion rule on the surviving workers
         eff_times = times.copy()
@@ -178,7 +203,7 @@ class Trainer:
         for w in range(plan.n_data):
             if not used[w]:
                 continue
-            b = batch_index_for_data_coord(plan, w)
+            b = assignment.worker_batch[w]
             if b not in batch_grads:
                 data = self.pipeline.batch_for(step_idx, b, plan.n_batches)
                 batch = {k: jnp.asarray(v) for k, v in data.items()}
@@ -189,6 +214,8 @@ class Trainer:
 
         alive_used = np.array([g is not None for g in grads_per_worker])
         if self.error_state is not None:
+            # `used` marks exactly ONE worker per covered batch (the fastest
+            # finite replica), so this mean is already a mean over batches
             trees = [g for g in grads_per_worker if g is not None]
             errs = [
                 self.error_state[w]
@@ -201,7 +228,10 @@ class Trainer:
                 if grads_per_worker[w] is not None:
                     self.error_state[w] = next(it)
         else:
-            grad, _ = aggregate_host(grads_per_worker, alive_used, plan)
+            grad, _ = aggregate_host(
+                grads_per_worker, alive_used, plan,
+                worker_batch=assignment.worker_batch,
+            )
 
         lr = self.schedule(step_idx)
         self.params, self.opt_state, om = self._opt_fn(
@@ -243,7 +273,12 @@ class Trainer:
                         f"{rp.new_batches} (pred {rp.predicted_improvement:.1%})"
                     )
                     self.plan = self.tuner.apply(rp)
-                    self.faultmgr = FaultManager(self.plan)
+                    self._adopt_assignment(
+                        rp.plan.assignment if rp.plan is not None else None
+                    )
+                    self.faultmgr = FaultManager(
+                        self.plan, planner=self.planner
+                    )
                     plan_history.append((step_idx, self.plan.n_batches))
             if self.ckpt and (step_idx + 1) % tc.checkpoint_every == 0:
                 self.ckpt.save_async(
@@ -263,20 +298,28 @@ class Trainer:
             final_plan=self.plan,
         )
 
-    def _elastic_replan(self, decision):
-        """Restore from checkpoint (if any) and choose a feasible B given the
-        dead workers."""
-        from repro.core.policies import divisors
+    def _adopt_assignment(self, assignment=None):
+        """Install the active worker->batch placement (from a planner Plan
+        when its fleet size matches, replica-major balanced otherwise)."""
+        if (
+            assignment is not None
+            and assignment.n_workers == self.plan.n_data
+            and assignment.n_batches == self.plan.n_batches
+        ):
+            self.assignment = assignment
+        else:
+            self.assignment = replica_major_nonoverlapping(
+                self.plan.n_data, self.plan.n_batches
+            )
 
-        dead = self.faultmgr.dead_mask()
-        n_alive = int((~dead).sum())
-        # feasible B: divides both the worker count and the global batch
-        gb = self.tc.global_batch
-        feas = [
-            b for b in divisors(max(n_alive, 1))
-            if gb % b == 0 and b <= self.plan.n_batches
-        ]
-        new_b = max(feas) if feas else 1
+    def _elastic_replan(self, decision):
+        """Restore from checkpoint (if any) and re-plan B for the surviving
+        fleet through the unified planner (FaultManager.plan_recovery)."""
+        recovery = self.faultmgr.plan_recovery(
+            self.cluster_spec.dist,
+            batch_divisor=self.cluster_spec.batch_divisor,
+        )
+        n_alive = recovery.n_workers
         if self.ckpt is not None:
             try:
                 state, meta = self.ckpt.restore(
@@ -285,9 +328,14 @@ class Trainer:
                 self.params, self.opt_state = state["params"], state["opt"]
             except FileNotFoundError:
                 pass
-        self.plan = ReplicationPlan(n_data=n_alive, n_batches=new_b)
-        self.tuner = StragglerTuner(self.plan, self.tuner.config)
-        self.faultmgr = FaultManager(self.plan)
+        self.plan = recovery.replication
+        self.cluster_spec = recovery.spec  # the survivors are the fleet now
+        self._adopt_assignment(recovery.assignment)
+        self.tuner = StragglerTuner(
+            self.plan, self.tuner.config, planner=self.planner,
+            batch_divisor=self.cluster_spec.batch_divisor,
+        )
+        self.faultmgr = FaultManager(self.plan, planner=self.planner)
         self.detector = StragglerDetector(n_alive)
         self.sim = StepTimeSimulator(
             self.dist, n_alive, seed=self.tc.seed + 17
@@ -308,6 +356,10 @@ def main():
     ap.add_argument("--delta", type=float, default=1.0)
     ap.add_argument("--mu", type=float, default=2.0)
     ap.add_argument("--tuner", action="store_true")
+    ap.add_argument("--planner-mode", default="analytic",
+                    choices=["analytic", "simulate"])
+    ap.add_argument("--rate-aware", action="store_true",
+                    help="heterogeneous (rate-aware) simulated re-plans")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -322,6 +374,8 @@ def main():
         delta=args.delta,
         mu=args.mu,
         tuner=args.tuner,
+        planner_mode=args.planner_mode,
+        planner_heterogeneous=args.rate_aware,
         grad_compression=args.compress,
         checkpoint_dir=args.ckpt_dir,
     )

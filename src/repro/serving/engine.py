@@ -26,11 +26,15 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core import (
+    ClusterSpec,
+    Metric,
+    Objective,
     ReplicationPlan,
     ServiceDistribution,
     ShiftedExponential,
     StragglerTuner,
     TunerConfig,
+    make_planner,
 )
 from repro.models import Shard, decode_step, init_params, prefill
 
@@ -50,7 +54,13 @@ class ServeEngineConfig:
     delta: float = 0.02
     mu: float = 50.0
     seed: int = 0
+    # control plane: the ONE shared Metric literal + planner mode; B adapts
+    # online through Planner.plan when ``tuner`` is on, and ``plan_initial``
+    # lets the planner also pick the STARTING B from the ClusterSpec.
     tuner: bool = False
+    metric: Metric = "mean"
+    planner_mode: str = "analytic"  # 'analytic' | 'simulate'
+    plan_initial: bool = False
 
 
 @dataclasses.dataclass
@@ -69,17 +79,31 @@ class ReplicatedServingEngine:
     def __init__(self, sc: ServeEngineConfig):
         self.sc = sc
         self.cfg = reduced_config(get_config(sc.arch))
-        self.plan = ReplicationPlan(
-            n_data=sc.n_server_groups, n_batches=sc.n_batches
-        )
-        self.params = init_params(jax.random.PRNGKey(sc.seed), self.cfg)
-        self.shard = Shard.local()
         self.dist: ServiceDistribution = ShiftedExponential(
             delta=sc.delta, mu=sc.mu
         )
+        # the serving control plane hangs off ONE ClusterSpec + Planner
+        self.cluster_spec = ClusterSpec(
+            n_workers=sc.n_server_groups, dist=self.dist
+        )
+        self.objective = Objective(metric=sc.metric)
+        self.planner = make_planner(mode=sc.planner_mode, seed=sc.seed)
+        if sc.plan_initial:
+            n_batches = self.planner.plan(
+                self.cluster_spec, self.objective
+            ).n_batches
+        else:
+            n_batches = sc.n_batches
+        self.plan = ReplicationPlan(
+            n_data=sc.n_server_groups, n_batches=n_batches
+        )
+        self.params = init_params(jax.random.PRNGKey(sc.seed), self.cfg)
+        self.shard = Shard.local()
         self.rng = np.random.default_rng(sc.seed + 1)
         self.tuner = StragglerTuner(
-            self.plan, TunerConfig(min_samples=16, cooldown_steps=4)
+            self.plan,
+            TunerConfig(min_samples=16, cooldown_steps=4, metric=sc.metric),
+            planner=self.planner,
         )
         self.clock = 0.0
         self._next_id = 0

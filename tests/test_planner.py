@@ -1,0 +1,423 @@
+"""Unified planner control plane: ClusterSpec -> Plan parity + migration.
+
+Pins down the PR-2 tentpole contracts:
+
+* AnalyticPlanner and SimulatedPlanner (20k trials, CRN) agree on B* across
+  the paper's Fig. 2 regimes on homogeneous Exp/SExp fleets;
+* HeterogeneousPlanner with rates=ones is bit-identical to SimulatedPlanner;
+* elastic shrink sheds the SLOWEST workers on skewed fleets;
+* fault recovery routes through Planner.plan with the survivors' spec;
+* the legacy entry points (optimize / sweep / tuner knobs) still import from
+  repro.core and agree with the planner — the deprecation-shim contract;
+* no production decision site calls spectrum.optimize directly any more.
+"""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticPlanner,
+    ClusterSpec,
+    Exponential,
+    HeterogeneousPlanner,
+    METRICS,
+    Objective,
+    Plan,
+    Planner,
+    ReplicationPlan,
+    ShiftedExponential,
+    SimulatedPlanner,
+    StragglerTuner,
+    TunerConfig,
+    expected_completion_rates,
+    make_planner,
+    metric_value,
+    optimize,
+    rate_aware_assignment,
+    replica_major_nonoverlapping,
+    sweep,
+    sweep_simulated,
+)
+from repro.distributed import FaultManager, RescaleExecutor, RuntimeTopology
+
+N = 16
+FIG2_DISTS = [
+    Exponential(mu=1.0),  # Thm 2: B* = 1
+    ShiftedExponential(delta=0.01, mu=1.0),  # near-Exp: diversity
+    ShiftedExponential(delta=0.25, mu=1.0),  # interior optimum
+    ShiftedExponential(delta=1.0, mu=1.0),  # full parallelism
+]
+
+
+# -- parity: analytic == simulated on homogeneous fleets ----------------------
+
+
+@pytest.mark.parametrize("dist", FIG2_DISTS, ids=["exp", "d.01", "d.25", "d1"])
+def test_analytic_equals_simulated_fig2_regimes(dist):
+    spec = ClusterSpec(n_workers=N, dist=dist)
+    a = AnalyticPlanner().plan(spec, Objective(metric="mean"))
+    s = SimulatedPlanner(n_trials=20_000, seed=0).plan(
+        spec, Objective(metric="mean")
+    )
+    assert a.n_batches == s.n_batches
+    # both emit the runtime's replica-major balanced placement
+    assert a.assignment == s.assignment
+    # variance objective: B* = 1 for both families (Thm 4)
+    a_var = AnalyticPlanner().plan(spec, Objective(metric="var"))
+    s_var = SimulatedPlanner(n_trials=20_000, seed=0).plan(
+        spec, Objective(metric="var")
+    )
+    assert a_var.n_batches == 1 and s_var.n_batches == 1
+
+
+def test_heterogeneous_rates_ones_bit_identical_to_simulated():
+    dist = ShiftedExponential(delta=0.25, mu=1.0)
+    hom = ClusterSpec(n_workers=N, dist=dist)
+    ones = ClusterSpec(n_workers=N, dist=dist, rates=(1.0,) * N)
+    obj = Objective(metric="mean")
+    s = SimulatedPlanner(n_trials=20_000, seed=4).plan(hom, obj)
+    h = HeterogeneousPlanner(n_trials=20_000, seed=4).plan(ones, obj)
+    assert h.n_batches == s.n_batches
+    assert h.assignment == s.assignment
+    # SpectrumPoints are frozen dataclasses of floats: == means bit-identical
+    assert h.predicted == s.predicted
+    assert h.spectrum.points == s.spectrum.points
+
+
+def test_heterogeneous_planner_scores_the_placement_it_emits():
+    """Clustered slow hosts: the generic contiguous layout piles all four
+    crippled workers into one batch, which mis-ranks mid-size B.  The
+    planner must rank candidates under the rate-aware placement it actually
+    returns, and its prediction must describe that placement."""
+    rates = (0.12,) * 4 + (1.3,) * 12
+    spec = ClusterSpec(
+        n_workers=16, dist=ShiftedExponential(delta=1.0, mu=1.0), rates=rates
+    )
+    plan = HeterogeneousPlanner(n_trials=20_000, seed=0).plan(spec)
+    # exact ranking of the emitted placements (closed form, Exp part):
+    best_closed = min(
+        spec.feasible_batches(),
+        key=lambda b: expected_completion_rates(
+            spec.dist, 16, rate_aware_assignment(16, b, rates).worker_batch, rates
+        ),
+    )
+    assert plan.n_batches == best_closed  # contiguous scoring picked B=2 here
+    assert plan.closed_form_mean == pytest.approx(
+        expected_completion_rates(
+            spec.dist, 16, plan.assignment.worker_batch, rates
+        )
+    )
+    # the simulated prediction describes the emitted placement, not the
+    # contiguous layout: it agrees with the closed form to MC accuracy
+    assert plan.predicted.mean == pytest.approx(plan.closed_form_mean, rel=0.05)
+
+
+def test_heterogeneous_planner_rate_aware_placement():
+    rng = np.random.default_rng(0)
+    rates = tuple(float(r) for r in rng.uniform(0.3, 2.0, N))
+    spec = ClusterSpec(
+        n_workers=N, dist=ShiftedExponential(delta=0.25, mu=1.0), rates=rates
+    )
+    plan = HeterogeneousPlanner(n_trials=8_000, seed=1).plan(spec)
+    assert plan.n_batches > 1  # interior optimum: placement is non-trivial
+    assert plan.assignment == rate_aware_assignment(N, plan.n_batches, rates)
+    # closed-form companion matches expected_completion_rates exactly
+    assert plan.closed_form_mean == pytest.approx(
+        expected_completion_rates(
+            spec.dist, N, plan.assignment.worker_batch, rates
+        )
+    )
+
+
+# -- ClusterSpec / Objective --------------------------------------------------
+
+
+def test_cluster_spec_constraints():
+    d = Exponential(mu=1.0)
+    spec = ClusterSpec(n_workers=12, dist=d, batch_divisor=8, max_batches=4)
+    # divisors of 12 = 1,2,3,4,6,12; dividing 8: 1,2,4; <=4: 1,2,4
+    assert spec.feasible_batches() == (1, 2, 4)
+    assert ClusterSpec(n_workers=12, dist=d, feasible_b=(2, 6)).feasible_batches() == (2, 6)
+    with pytest.raises(ValueError):
+        ClusterSpec(n_workers=12, dist=d, feasible_b=(5,))  # 5 does not divide 12
+    with pytest.raises(ValueError):
+        ClusterSpec(n_workers=8, dist=d, rates=(1.0,) * 4)  # wrong shape
+
+
+def test_cluster_spec_drop_slowest():
+    d = Exponential(mu=1.0)
+    rates = (0.4, 1.0, 0.1, 1.2, 0.9, 1.1)
+    spec = ClusterSpec(n_workers=6, dist=d, rates=rates)
+    survived, dropped = spec.drop_slowest(2)
+    assert dropped == (0, 2)  # the two lowest rates
+    assert survived.n_workers == 4
+    assert survived.rates == (1.0, 1.2, 0.9, 1.1)
+    # homogeneous: ids unknowable
+    survived, dropped = ClusterSpec(n_workers=6, dist=d).drop_slowest(2)
+    assert survived.n_workers == 4 and dropped == ()
+    with pytest.raises(ValueError):
+        spec.drop_slowest(6)
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        Objective(metric="p50")
+    with pytest.raises(ValueError):
+        Objective(improvement_threshold=1.5)
+    with pytest.raises(ValueError):
+        Objective(cooldown_steps=-1)
+
+
+def test_shared_metric_vocabulary_everywhere():
+    """One Metric literal: p999 accepted by sweep points, optimize, the
+    planner, and TunerConfig (previously three divergent literals)."""
+    d = ShiftedExponential(delta=0.25, mu=1.0)
+    res = sweep(d, N)
+    for m in METRICS:
+        assert np.isfinite(metric_value(res.points[0], m))
+        assert optimize(d, N, metric=m).n_batches == AnalyticPlanner().plan(
+            ClusterSpec(n_workers=N, dist=d), Objective(metric=m)
+        ).n_batches
+    assert TunerConfig(metric="p999").objective().metric == "p999"
+    sim = sweep_simulated(d, N, n_trials=2_000)
+    assert np.isfinite(sim.points[0].p999)
+    assert sim.points[0].p999 >= sim.points[0].p99
+
+
+# -- elastic shrink: shed the slowest, not arbitrary ids ----------------------
+
+
+def test_shrink_drops_slowest_workers_on_skewed_fleet():
+    rates = list(np.linspace(1.3, 0.7, 16))
+    rates[3], rates[11] = 0.05, 0.08  # two crippled hosts
+    ex = RescaleExecutor(RuntimeTopology(ReplicationPlan(16, 8), generation=0))
+    topo = ex.shrink(2, dist=Exponential(mu=1.0), rates=rates)
+    assert topo.dropped_workers == (3, 11)
+    assert topo.plan.n_data == 14
+    assert topo.generation == 1
+    assert topo.assignment is not None
+    assert topo.assignment.n_workers == 14
+    with pytest.raises(ValueError):
+        ex.shrink(1, rates=rates)  # rates without a service model
+
+
+def test_shrink_homogeneous_still_plans_through_planner():
+    ex = RescaleExecutor(RuntimeTopology(ReplicationPlan(16, 8), generation=0))
+    topo = ex.shrink(6, dist=Exponential(mu=1.0))
+    assert topo.plan.n_data == 10
+    assert topo.plan.n_batches == 1  # Thm 2: Exp -> full diversity
+    # no service model at all: bookkeeping fallback (largest feasible B)
+    ex2 = RescaleExecutor(RuntimeTopology(ReplicationPlan(16, 8), generation=0))
+    assert ex2.shrink(4).plan.n_batches == 6
+
+
+def test_shrink_never_increases_parallelism():
+    """Same policy as plan_recovery and the no-model fallback: a shrink
+    keeps B <= the operator's pre-shrink choice even when the service model
+    (large Delta*mu) would prefer full parallelism."""
+    ex = RescaleExecutor(RuntimeTopology(ReplicationPlan(16, 2), generation=0))
+    topo = ex.shrink(2, dist=ShiftedExponential(delta=2.0, mu=1.0))
+    assert topo.plan.n_data == 14
+    assert topo.plan.n_batches <= 2
+
+
+def test_apply_plan_adopts_planner_decision():
+    plan = HeterogeneousPlanner(n_trials=4_000, seed=2).plan(
+        ClusterSpec(
+            n_workers=12,
+            dist=Exponential(mu=1.0),
+            rates=tuple(np.linspace(0.5, 1.5, 12)),
+        )
+    )
+    ex = RescaleExecutor(RuntimeTopology(ReplicationPlan(12, 6), generation=3))
+    topo = ex.apply_plan(plan)
+    assert topo.plan == plan.replication
+    assert topo.assignment == plan.assignment
+    assert topo.generation == 4
+
+
+# -- fault recovery through the planner ---------------------------------------
+
+
+def test_fault_manager_plan_recovery():
+    fm = FaultManager(ReplicationPlan(8, 4), heartbeat_misses_fatal=1)
+    responded = np.ones(8, bool)
+    responded[[1, 5]] = False
+    fm.heartbeat(responded)
+    rec = fm.plan_recovery(
+        ShiftedExponential(delta=1.0, mu=2.0), batch_divisor=16
+    )
+    assert rec.n_workers == 6
+    # feasible: divisors of 6 that divide 16 and <= old B=4 -> {1, 2}
+    assert rec.n_batches == 2  # argmin mean: 6/2 + H_2/2 beats 6 + 1/2
+    assert rec.planner == "analytic"
+
+
+def test_fault_manager_plan_recovery_keeps_survivor_rates():
+    fm = FaultManager(ReplicationPlan(8, 4), heartbeat_misses_fatal=1)
+    responded = np.ones(8, bool)
+    responded[2] = False
+    fm.heartbeat(responded)
+    rates = np.linspace(0.5, 1.9, 8)
+    rec = fm.plan_recovery(Exponential(mu=1.0), rates=rates)
+    assert rec.n_workers == 7
+    assert rec.spec.rates == tuple(rates[np.arange(8) != 2])
+    assert rec.planner == "heterogeneous"
+
+
+# -- tuner is a thin trigger around the planner -------------------------------
+
+
+class _CountingPlanner(AnalyticPlanner):
+    def __init__(self):
+        self.calls = 0
+
+    def plan(self, spec, objective=None):
+        self.calls += 1
+        return super().plan(spec, objective)
+
+
+def test_tuner_delegates_to_injected_planner():
+    counting = _CountingPlanner()
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=N, n_batches=N),
+        TunerConfig(min_samples=32, cooldown_steps=0),
+        planner=counting,
+    )
+    rng = np.random.default_rng(0)
+    dist = ShiftedExponential(delta=0.01, mu=1.0)
+    for _ in range(10):
+        tuner.observe(dist.sample(rng, N))
+    rp = tuner.maybe_replan()
+    assert counting.calls == 1
+    assert rp is not None and rp.new_batches < N
+    assert isinstance(rp.plan, Plan)
+    assert rp.plan.n_batches == rp.new_batches
+    assert tuner.last_plan is rp.plan
+
+
+def test_tuner_config_legacy_knobs_map_to_planners():
+    assert isinstance(TunerConfig().planner(), AnalyticPlanner)
+    assert isinstance(TunerConfig(mode="simulate").planner(), SimulatedPlanner)
+    het = TunerConfig(mode="simulate", heterogeneous=True, sim_trials=123).planner()
+    assert isinstance(het, HeterogeneousPlanner)
+    assert het.n_trials == 123
+    with pytest.raises(ValueError):
+        make_planner("newton")
+    # the contradictory combo fails LOUDLY instead of silently dropping the
+    # rate-aware knob (analytic closed forms are homogeneous-only)...
+    with pytest.raises(ValueError):
+        make_planner("analytic", heterogeneous=True)
+    # ...but the LEGACY knob mapping keeps the pre-planner behavior
+    # (inert flag) with a deprecation warning instead of crashing old code
+    with pytest.warns(DeprecationWarning):
+        legacy = TunerConfig(heterogeneous=True).planner()
+    assert isinstance(legacy, AnalyticPlanner)
+
+
+def test_tuner_rates_only_reach_rate_capable_planners():
+    """An injected homogeneous planner never sees estimated worker rates
+    (AnalyticPlanner would reject a heterogeneous spec mid-run)."""
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=8, n_batches=8),
+        TunerConfig(min_samples=16, cooldown_steps=0),
+        planner=AnalyticPlanner(),
+    )
+    rng = np.random.default_rng(3)
+    slow = np.ones(8)
+    slow[2] = 10.0  # genuinely skewed observations
+    dist = ShiftedExponential(delta=0.01, mu=1.0)
+    for _ in range(10):
+        tuner.observe(dist.sample(rng, 8) * slow)
+    rp = tuner.maybe_replan()  # must not raise
+    assert tuner.last_plan is not None
+    assert tuner.last_plan.spec.rates is None
+    assert rp is None or rp.new_batches < 8
+
+
+def test_tuner_batch_divisor_constrains_replans():
+    """Re-plans never pick a B the data pipeline cannot shard: with N=12 and
+    a global batch of 32, B in {3, 6, 12} is infeasible."""
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=12, n_batches=2),
+        TunerConfig(min_samples=16, cooldown_steps=0),
+        batch_divisor=32,
+    )
+    rng = np.random.default_rng(0)
+    # strong parallelism pressure: unconstrained optimum would be B=12
+    dist = ShiftedExponential(delta=2.0, mu=2.0)
+    for _ in range(10):
+        tuner.observe(dist.sample(rng, 12))
+    rp = tuner.maybe_replan()
+    assert rp is not None
+    assert rp.new_batches == 4  # best feasible (divides 12 AND 32) is 4
+    assert tuner.last_plan.spec.feasible_batches() == (1, 2, 4)
+
+
+def test_tuner_forced_move_off_infeasible_current_b():
+    """Current B=3 is not feasible under batch_divisor=32: the move is
+    forced (bypasses hysteresis) and reported as an infinite win, not a
+    fabricated predicted_old=0."""
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=12, n_batches=3),
+        TunerConfig(min_samples=16, cooldown_steps=0,
+                    improvement_threshold=0.99),
+        batch_divisor=32,
+    )
+    rng = np.random.default_rng(1)
+    dist = ShiftedExponential(delta=0.5, mu=1.0)
+    for _ in range(10):
+        tuner.observe(dist.sample(rng, 12))
+    rp = tuner.maybe_replan()
+    assert rp is not None
+    assert rp.new_batches in (1, 2, 4)
+    assert rp.predicted_old == np.inf
+    assert rp.predicted_improvement == 1.0
+
+
+def test_fault_decide_rejects_stale_assignment():
+    fm = FaultManager(ReplicationPlan(6, 2))
+    fm.heartbeat(np.ones(6, bool))
+    with pytest.raises(ValueError):
+        fm.decide(assignment=replica_major_nonoverlapping(8, 4))
+
+
+# -- deprecation shims --------------------------------------------------------
+
+
+def test_legacy_entry_points_still_work():
+    """The pre-planner API keeps importing from repro.core and agrees with
+    the unified control plane (the seed tests exercise behavior in depth;
+    this is the migration-contract smoke check)."""
+    from repro.core import (  # noqa: F401  (import-ability IS the contract)
+        RescalePlan,
+        SpectrumPoint,
+        SpectrumResult,
+        sweep,
+        sweep_simulated,
+    )
+
+    d = ShiftedExponential(delta=0.5, mu=2.0)
+    legacy = optimize(d, N, metric="mean")
+    unified = AnalyticPlanner().plan(ClusterSpec(n_workers=N, dist=d))
+    assert legacy == unified.predicted
+    # legacy positional tuner construction still works
+    tuner = StragglerTuner(ReplicationPlan(n_data=8, n_batches=4))
+    assert isinstance(tuner.planner, Planner)
+
+
+def test_no_direct_optimize_callsites_outside_planner():
+    """Acceptance grep: every decision site routes through Planner.plan —
+    no `optimize(` calls in src/ outside spectrum.py (the shim itself)."""
+    src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    offenders = []
+    for path in src.rglob("*.py"):
+        if path.name == "spectrum.py":
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            code = line.split("#", 1)[0]
+            if "optimize(" in code and "def optimize" not in code:
+                offenders.append(f"{path.relative_to(src)}:{i}: {line.strip()}")
+    assert not offenders, offenders
