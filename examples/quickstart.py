@@ -5,7 +5,11 @@
 2. the unified planner (``ClusterSpec -> Plan``) picking B* — analytic vs
    simulated vs rate-aware on a skewed fleet — from one entry point,
    including a B* re-plan from a service distribution fitted on telemetry;
-3. a tiny replicated-data-parallel training run with a straggler, showing
+3. serving under load: the SAME planner with a load-aware objective scores
+   candidate B by per-request sojourn (queue wait + service) under Poisson
+   arrivals, and the discrete-event serving engine measures it live — the
+   latency-optimal B moves once traffic queues;
+4. a tiny replicated-data-parallel training run with a straggler, showing
    the fastest-replica rule keeping step time flat.
 
 Run: PYTHONPATH=src python examples/quickstart.py
@@ -24,6 +28,7 @@ from repro.core import (
     simulate_maxmin,
 )
 from repro.launch.train import Trainer, TrainerConfig
+from repro.serving import ReplicatedServingEngine, ServeEngineConfig
 
 
 def main():
@@ -71,6 +76,28 @@ def main():
         ClusterSpec.from_fit(fit, n), Objective(metric="mean")
     )
     print(f"replanned B* for the fit: {refit_plan.n_batches}")
+
+    print("\n=== Serving under load: sojourn-optimal B (N=16, u=0.7) ===")
+    serve_dist = ShiftedExponential(delta=0.02, mu=2.0)
+    serve_spec = ClusterSpec(n_workers=16, dist=serve_dist)
+    batch_plan = SimulatedPlanner(n_trials=6_000, seed=1).plan(
+        serve_spec, Objective(metric="p99")
+    )
+    load_plan = SimulatedPlanner(n_trials=6_000, seed=1).plan(
+        serve_spec, Objective(metric="p99", utilization=0.7)
+    )
+    print(f"batch-completion p99-optimal B*={batch_plan.n_batches}, "
+          f"load-aware (sojourn) p99-optimal B*={load_plan.n_batches}")
+    # measure both in the discrete-event engine (Poisson arrivals, queueing,
+    # first-replica-wins cancellation; model execution off for speed)
+    for b in (batch_plan.n_batches, load_plan.n_batches):
+        eng = ReplicatedServingEngine(ServeEngineConfig(
+            n_server_groups=16, n_batches=b, batch_size=4, delta=0.02, mu=2.0,
+            utilization=0.7, execute_model=False, seed=1,
+        ))
+        out = eng.run_load(n_requests=2_000)
+        print(f"  event-driven engine @B={b}: p99 sojourn = "
+              f"{out['p99_sojourn']:.2f}s (p50 {out['p50_sojourn']:.2f}s)")
 
     print("\n=== RDP training with a 30x straggler (8 workers, B=4) ===")
     tc = TrainerConfig(

@@ -48,11 +48,14 @@ from .simulator import (
     SimResult,
     StepTimeSimulator,
     SweepSimResult,
+    censored_observations,
     completion_from_step_times,
     simulate_coverage,
     simulate_coverage_reference,
     simulate_maxmin,
+    simulate_sojourn,
     sweep_simulate,
+    sweep_sojourn,
 )
 from .spectrum import (
     METRICS,

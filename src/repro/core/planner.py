@@ -34,6 +34,14 @@ Objective hysteresis (``improvement_threshold``, ``cooldown_steps``) is
 carried on the Objective so re-plan *triggers* (tuner, serving) and re-plan
 *solvers* (planners) share one vocabulary; the planners themselves are pure
 functions of (spec, objective).
+
+Load-aware objectives: an Objective carrying ``arrival_rate`` or
+``utilization`` switches the simulated planners into the queueing-aware mode
+(:func:`~repro.core.simulator.sweep_sojourn`) — candidate B is scored by
+per-request SOJOURN quantiles under Poisson arrivals rather than
+batch-completion time, so the serving control plane optimizes the latency
+users actually feel.  The closed forms have no queueing twin, so
+:class:`AnalyticPlanner` rejects load-aware objectives.
 """
 
 from __future__ import annotations
@@ -210,11 +218,24 @@ class Objective:
     ``cooldown_steps`` are read by re-plan triggers (tuner, serving engine):
     moving B is not free — it flushes compiled executables and reshuffles
     the data pipeline — so only move for real wins.
+
+    **Load-aware objectives.**  With ``arrival_rate`` (batch-jobs per unit
+    time) or ``utilization`` (offered load as a fraction of the fleet's
+    no-replication capacity) set, the metric is evaluated on per-request
+    SOJOURN time (queue wait + service) under Poisson arrivals instead of
+    batch-completion time — redundancy decisions flip sign under queueing
+    load (Aktaş et al.; Peng et al.), and this is where the planner sees it.
+    ``job_load`` is the units of data one batch-job carries (constant in B:
+    a serving batch is ``max_batch_size`` requests no matter how the fleet
+    is factored).  Only simulated planners can score load-aware objectives.
     """
 
     metric: Metric = "mean"
     improvement_threshold: float = 0.0
     cooldown_steps: int = 0
+    arrival_rate: Optional[float] = None
+    utilization: Optional[float] = None
+    job_load: float = 1.0
 
     def __post_init__(self):
         if self.metric not in METRICS:
@@ -230,6 +251,41 @@ class Objective:
             raise ValueError(
                 f"cooldown_steps must be >= 0, got {self.cooldown_steps}"
             )
+        if self.arrival_rate is not None and self.utilization is not None:
+            raise ValueError(
+                "give arrival_rate OR utilization, not both (utilization is "
+                "converted to an arrival rate against the spec's capacity)"
+            )
+        if self.arrival_rate is not None and not self.arrival_rate > 0:
+            raise ValueError(
+                f"arrival_rate must be positive, got {self.arrival_rate}"
+            )
+        if self.utilization is not None and not 0.0 < self.utilization < 1.0:
+            raise ValueError(
+                f"utilization must be in (0, 1), got {self.utilization}"
+            )
+        if not self.job_load > 0:
+            raise ValueError(f"job_load must be positive, got {self.job_load}")
+
+    @property
+    def load_aware(self) -> bool:
+        """True when the metric applies to sojourn under queueing load."""
+        return self.arrival_rate is not None or self.utilization is not None
+
+    def offered_rate(self, spec: "ClusterSpec") -> float:
+        """The batch-job arrival rate this objective describes.
+
+        ``utilization`` is anchored to the NO-REPLICATION capacity — N
+        server groups each serving one ``job_load``-sized batch at a time —
+        so a single utilization number compares fairly across candidate B
+        (replication trades that capacity for lighter service tails).
+        """
+        if self.arrival_rate is not None:
+            return self.arrival_rate
+        if self.utilization is None:
+            raise ValueError("objective has no load (arrival_rate/utilization)")
+        mean_service = spec.dist.scaled(self.job_load).mean()
+        return self.utilization * spec.n_workers / mean_service
 
 
 @dataclasses.dataclass(frozen=True)
@@ -286,6 +342,10 @@ class Planner:
     # predictions?  Callers assembling specs (e.g. the tuner) use it to
     # decide whether collecting rate estimates is worthwhile.
     consumes_rates = False
+    # capability flag: can this planner score load-aware objectives
+    # (sojourn under an arrival process)?  Re-plan triggers use it to decide
+    # whether observed-load telemetry should flow into the Objective.
+    consumes_load = False
 
     def sweep_spectrum(
         self, spec: ClusterSpec, objective: Objective
@@ -347,6 +407,11 @@ class AnalyticPlanner(Planner):
                 "AnalyticPlanner covers homogeneous fleets only (closed "
                 "forms); use HeterogeneousPlanner for skewed rates"
             )
+        if objective.load_aware:
+            raise ValueError(
+                "load-aware objectives (arrival_rate/utilization) have no "
+                "closed form; use SimulatedPlanner / HeterogeneousPlanner"
+            )
         return sweep(spec.dist, spec.n_workers, spec.feasible_batches())
 
 
@@ -366,13 +431,39 @@ class SimulatedPlanner(Planner):
     backend: str = "numpy"
 
     name = "simulated"
+    consumes_load = True
 
     def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
         return None
 
+    def _sweep_sojourn(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> SpectrumResult:
+        """Queueing-aware mode: score every candidate B by simulated sojourn
+        (queue wait + service) at the objective's offered load, from ONE
+        shared CRN draw matrix + arrival sequence (simulator.sweep_sojourn)."""
+        from .simulator import sweep_sojourn  # local: avoid import cycle
+
+        res = sweep_sojourn(
+            spec.dist,
+            spec.n_workers,
+            arrival_rate=objective.offered_rate(spec),
+            n_jobs=self.n_trials,
+            seed=self.seed,
+            feasible_b=spec.feasible_batches(),
+            rates=self._sweep_rates(spec),
+            job_load=objective.job_load,
+        )
+        return result_from_points(
+            point_from_samples(b, spec.n_workers // b, res.samples[0, i])
+            for i, b in enumerate(res.splits)
+        )
+
     def sweep_spectrum(
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
+        if objective.load_aware:
+            return self._sweep_sojourn(spec, objective)
         return sweep_simulated(
             spec.dist,
             spec.n_workers,
@@ -418,6 +509,34 @@ class HeterogeneousPlanner(SimulatedPlanner):
     ) -> SpectrumResult:
         if not spec.heterogeneous:
             return super().sweep_spectrum(spec, objective)
+        if objective.load_aware:
+            # skewed + load-aware: sojourn-simulate each candidate B under
+            # the placement the plan actually emits (rate-aware replica
+            # sets); the shared seed keeps the arrival sequence and draw
+            # matrix common across B, exactly like the batched sweeps
+            from .simulator import simulate_sojourn  # local: avoid cycle
+
+            rate = objective.offered_rate(spec)
+            pts = []
+            for b in spec.feasible_batches():
+                assignment = rate_aware_assignment(
+                    spec.n_workers, b, spec.rates
+                )
+                sim = simulate_sojourn(
+                    spec.dist,
+                    spec.n_workers,
+                    b,
+                    arrival_rate=rate,
+                    n_jobs=self.n_trials,
+                    seed=self.seed,
+                    rates=spec.rates,
+                    job_load=objective.job_load,
+                    worker_batch=assignment.worker_batch,
+                )
+                pts.append(
+                    point_from_samples(b, spec.n_workers // b, sim.samples)
+                )
+            return result_from_points(pts)
         from .simulator import simulate_coverage  # local: avoid import cycle
 
         pts = []

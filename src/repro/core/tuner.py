@@ -12,6 +12,13 @@ when the predicted improvement clears the Objective's hysteresis threshold
 and a cooldown has elapsed — re-factoring the mesh is not free (it flushes
 compiled executables and reshuffles the data pipeline), so we only move for
 real wins.
+
+Serving feeds two extra telemetry streams: :meth:`StragglerTuner.observe_load`
+(measured batch-job arrival rate) and :meth:`StragglerTuner.observe_sojourn`
+(per-request queue wait + service).  With a load-capable planner the re-plan
+Objective then carries the observed arrival rate — candidate B is scored by
+simulated sojourn quantiles — and hysteresis measures the predicted win
+against the sojourn requests ACTUALLY experienced at the current B.
 """
 
 from __future__ import annotations
@@ -115,6 +122,7 @@ class StragglerTuner:
         config: TunerConfig | None = None,
         planner: Planner | None = None,
         batch_divisor: int | None = None,
+        job_load: float = 1.0,
     ):
         self.plan = plan
         self.config = config or TunerConfig()
@@ -123,10 +131,18 @@ class StragglerTuner:
         # divide this (e.g. the global batch size, so re-plans never pick a B
         # the data pipeline cannot shard)
         self.batch_divisor = batch_divisor
+        # units of data one batch-job carries (serving: batch tokens / unit);
+        # scales the load-aware objective's service model
+        self.job_load = job_load
         self._times: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
         self._censored: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
+        self._load: deque[float] = deque(maxlen=self.config.window_steps)
+        self._sojourns: deque[np.ndarray] = deque(
+            maxlen=self.config.window_steps
+        )
         self._step = 0
         self._last_replan = -(10**9)
+        self._last_attempt = -(10**9)
         self.last_fit: Optional[FitResult] = None
         self.last_plan: Optional[Plan] = None
 
@@ -155,6 +171,53 @@ class StragglerTuner:
         self._times.append(t)
         self._censored.append(c)
         self._step += 1
+
+    def observe_load(self, arrival_rate: float) -> None:
+        """Record one observation of the batch-job arrival rate.
+
+        The serving engine feeds its measured formation rate here; the
+        windowed mean becomes the ``arrival_rate`` of the re-plan Objective
+        when the planner can consume load, closing the loop on real traffic
+        instead of an operator-guessed constant.
+        """
+        if np.isfinite(arrival_rate) and arrival_rate > 0:
+            self._load.append(float(arrival_rate))
+
+    @property
+    def observed_arrival_rate(self) -> Optional[float]:
+        """Windowed mean of the observed batch-job arrival rate."""
+        if not self._load:
+            return None
+        return float(np.mean(self._load))
+
+    def observe_sojourn(self, sojourns: np.ndarray) -> None:
+        """Record per-request sojourn times (queue wait + service).
+
+        Used as the OBSERVED baseline in load-aware hysteresis: a predicted
+        win is measured against the latency requests actually experienced at
+        the current B, not against the model's own prediction of it.
+        """
+        s = np.asarray(sojourns, dtype=float).ravel()
+        s = s[np.isfinite(s)]
+        if s.size:
+            self._sojourns.append(s)
+
+    def observed_sojourn(self, metric: Metric) -> Optional[float]:
+        """The objective metric evaluated on the observed sojourn window."""
+        if not self._sojourns:
+            return None
+        s = np.concatenate(list(self._sojourns))
+        if s.size < 2:
+            return None
+        if metric == "mean":
+            return float(s.mean())
+        if metric == "var":
+            return float(s.var(ddof=1))
+        if metric == "p99":
+            return float(np.quantile(s, 0.99))
+        if metric == "p999":
+            return float(np.quantile(s, 0.999))
+        raise ValueError(f"unknown metric {metric!r}")
 
     @property
     def n_samples(self) -> int:
@@ -215,23 +278,74 @@ class StragglerTuner:
             batch_divisor=self.batch_divisor,
         )
 
+    def objective(self) -> Objective:
+        """The re-plan Objective: the config's, upgraded with observed load.
+
+        When the planner can score load-aware objectives and the engine has
+        fed arrival-rate telemetry (:meth:`observe_load`), the objective
+        carries the OBSERVED offered load — the planner then optimizes
+        sojourn under real traffic rather than batch completion.
+        """
+        objective = self.config.objective()
+        rate = self.observed_arrival_rate
+        if self.planner.consumes_load and rate is not None:
+            objective = dataclasses.replace(
+                objective,
+                arrival_rate=rate,
+                utilization=None,
+                job_load=self.job_load,
+            )
+        return objective
+
     def maybe_replan(self) -> Optional[RescalePlan]:
         """Fit, delegate the B decision to the Planner, and emit a rescale
         plan if the predicted win clears the Objective's hysteresis."""
         if self._step - self._last_replan < self.config.cooldown_steps:
             return None
+        # the cooldown also paces plan EVALUATIONS that did not move B: a
+        # load-aware sweep is ~10^2 slower than the closed forms, and
+        # re-scoring the whole spectrum after every observation would make
+        # telemetry ingestion O(sweep).  Attempts that bailed for lack of
+        # data (no fit yet) do not count.
+        if self._step - self._last_attempt < self.config.cooldown_steps:
+            return None
         fit = self.fit()
         if fit is None:
             return None
-        plan = self.planner.plan(self.cluster_spec(fit), self.config.objective())
+        objective = self.objective()
+        plan = self.planner.plan(self.cluster_spec(fit), objective)
         self.last_plan = plan
+        self._last_attempt = self._step
         if plan.n_batches == self.plan.n_batches:
             return None
         # current B absent from the sweep means it is no longer feasible
         # (e.g. a new batch_divisor constraint): the move is FORCED, so it
-        # bypasses hysteresis and reports an infinite predicted win.
+        # bypasses hysteresis — including any observed-sojourn baseline —
+        # and reports an infinite predicted win.
         cur = plan.predicted_at(self.plan.n_batches)
-        improvement = plan.improvement_over(self.plan.n_batches)
+        if cur is None:
+            improvement = math.inf
+        else:
+            baselines = [cur]
+            if objective.load_aware:
+                # sojourn telemetry is the ground truth for what the current
+                # B costs.  The predicted win must clear hysteresis against
+                # BOTH the model's CRN-consistent estimate of the current B
+                # (which kills ping-pong between near-tied candidates) and
+                # the latency requests actually experienced (which kills
+                # moves justified only by model optimism).  The window is
+                # cleared on apply() — it must describe the CURRENT
+                # configuration, not the drain transient of the last move —
+                # so require a refilled window before trusting its quantiles.
+                observed = self.observed_sojourn(objective.metric)
+                n_observed = sum(s.size for s in self._sojourns)
+                if (
+                    observed is not None
+                    and n_observed >= self.config.min_samples
+                ):
+                    baselines.append(observed)
+            cur = min(baselines)
+            improvement = 1.0 - plan.score / max(cur, 1e-30)
         if improvement < self.config.improvement_threshold:
             return None
         self._last_replan = self._step
@@ -250,4 +364,8 @@ class StragglerTuner:
         self.plan = ReplicationPlan(
             n_data=self.plan.n_data, n_batches=plan.new_batches
         )
+        # sojourn telemetry describes the configuration it was measured
+        # under; keeping the old B's (and the move's drain-transient)
+        # sojourns would let every move justify the next one
+        self._sojourns.clear()
         return self.plan

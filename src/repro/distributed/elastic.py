@@ -76,6 +76,7 @@ class RescaleExecutor:
         dist: Optional[ServiceDistribution] = None,
         rates: Optional[Sequence[float]] = None,
         metric: Metric = "mean",
+        batch_divisor: Optional[int] = None,
     ) -> RuntimeTopology:
         """Lose ``n_lost`` workers and re-plan B for the survivors.
 
@@ -85,6 +86,9 @@ class RescaleExecutor:
         * ``dist`` only: homogeneous re-plan through the planner.
         * neither: no service model available — keep the largest feasible
           B <= the old B (pure bookkeeping fallback).
+
+        ``batch_divisor`` carries the caller's data-sharding constraint
+        (e.g. the global batch size) into the survivors' ClusterSpec.
         """
         old = self.topology.plan
         n_new = old.n_data - n_lost
@@ -93,7 +97,11 @@ class RescaleExecutor:
         if dist is None:
             if rates is not None:
                 raise ValueError("rates require a service distribution (dist)")
-            b_new = max(b for b in divisors(n_new) if b <= old.n_batches)
+            b_new = max(
+                b for b in divisors(n_new)
+                if b <= old.n_batches
+                and (batch_divisor is None or batch_divisor % b == 0)
+            )
             self.topology = RuntimeTopology(
                 ReplicationPlan(n_data=n_new, n_batches=b_new),
                 self.topology.generation + 1,
@@ -103,6 +111,7 @@ class RescaleExecutor:
             n_workers=old.n_data,
             dist=dist,
             rates=tuple(float(r) for r in rates) if rates is not None else None,
+            batch_divisor=batch_divisor,
             # shrinking never increases parallelism past the operator's
             # pre-shrink choice (same policy as FaultManager.plan_recovery
             # and the no-model fallback above)

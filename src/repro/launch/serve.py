@@ -7,8 +7,11 @@ paper's max-min completion applied to tail latency ('the tail at scale').
 
 The driver (a) actually runs prefill + decode on a small model to produce
 tokens, and (b) simulates the latency of a fleet of N server groups under
-the calibrated straggler model to measure mean/p99 batch-completion latency
-as a function of B — the serving twin of Fig. 2.
+the calibrated straggler model, BOTH as per-round batch-completion time
+(the serving twin of Fig. 2) and as per-request SOJOURN under Poisson
+arrivals at the configured utilization (the queueing-aware mode of
+core.simulator) — showing how the latency-optimal B moves once real
+traffic queues.
 
 Run: PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tokens 16
 """
@@ -25,8 +28,11 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core import (
+    ClusterSpec,
+    Objective,
     ReplicationPlan,
     ShiftedExponential,
+    SimulatedPlanner,
     sweep_simulated,
 )
 from repro.models import Shard, decode_step, init_params, prefill
@@ -47,6 +53,8 @@ class ServeConfig:
     n_batches: int = 4
     delta: float = 0.05
     mu: float = 20.0
+    # offered load for the queueing-aware (sojourn) sweep
+    utilization: float = 0.7
 
 
 def run_serving(sc: ServeConfig):
@@ -87,11 +95,23 @@ def run_serving(sc: ServeConfig):
     dist = ShiftedExponential(delta=sc.delta, mu=sc.mu)
     res = sweep_simulated(dist, sc.n_servers, n_trials=20_000, seed=7)
     lat = {p.n_batches: {"mean": p.mean, "p99": p.p99} for p in res.points}
+    # ... and the queueing twin: per-request sojourn under Poisson arrivals
+    # at the configured utilization, scored through the load-aware planner
+    spec = ClusterSpec(n_workers=sc.n_servers, dist=dist)
+    plan = SimulatedPlanner(n_trials=20_000, seed=7).plan(
+        spec, Objective(metric="p99", utilization=sc.utilization)
+    )
+    sojourn = {
+        p.n_batches: {"mean": p.mean, "p99": p.p99, "p999": p.p999}
+        for p in plan.spectrum.points
+    }
     return {
         "generated": np.asarray(generated),
         "prefill_s": prefill_s,
         "decode_s": decode_s,
         "latency_by_B": lat,
+        "sojourn_by_B": sojourn,
+        "sojourn_best_B": plan.n_batches,
     }
 
 
@@ -109,6 +129,11 @@ def main():
     print("batch-latency vs B (simulated fleet):")
     for b, d in out["latency_by_B"].items():
         print(f"  B={b:3d}  mean={d['mean']*1e3:7.2f}ms  p99={d['p99']*1e3:7.2f}ms")
+    print("request sojourn vs B (Poisson arrivals, queueing):")
+    for b, d in out["sojourn_by_B"].items():
+        print(f"  B={b:3d}  mean={d['mean']*1e3:7.2f}ms  p99={d['p99']*1e3:7.2f}ms"
+              f"  p999={d['p999']*1e3:7.2f}ms")
+    print(f"load-aware p99-optimal B* = {out['sojourn_best_B']}")
 
 
 if __name__ == "__main__":

@@ -47,12 +47,18 @@ from repro.core import (
     StragglerTuner,
     TunerConfig,
     aggregate_host,
+    censored_observations,
     completion_from_step_times,
     make_planner,
     replica_major_nonoverlapping,
 )
 from repro.data import TokenPipeline
-from repro.distributed import FaultManager, StragglerDetector
+from repro.distributed import (
+    FaultManager,
+    RescaleExecutor,
+    RuntimeTopology,
+    StragglerDetector,
+)
 from repro.models import Shard, init_params, train_loss
 from repro.optim import AdamWConfig, init as opt_init, update as opt_update
 from repro.optim import warmup_cosine
@@ -151,7 +157,15 @@ class Trainer:
             batch_divisor=self.cluster_spec.batch_divisor,
         )
         self.detector = StragglerDetector(tc.n_workers)
-        self.faultmgr = FaultManager(self.plan, planner=self.planner)
+        self.faultmgr = self._make_faultmgr()
+        # topology bookkeeper for every rescale (fault recovery + operator
+        # shrink).  planner=None on a rate-incapable planner lets the
+        # executor upgrade to a rate-aware one when live rates are present.
+        self.rescaler = RescaleExecutor(
+            RuntimeTopology(self.plan, generation=0,
+                            assignment=self.assignment),
+            planner=self.planner if self.planner.consumes_rates else None,
+        )
         self.ckpt = (
             Checkpointer(tc.checkpoint_dir) if tc.checkpoint_dir else None
         )
@@ -238,10 +252,15 @@ class Trainer:
             grad, self.opt_state, self.params, lr
         )
 
-        # telemetry (normalized per unit of data), censored at completion
+        # telemetry (normalized per unit of data): unused replicas are
+        # cancelled at their batch's first response, so their times are
+        # right-censored AT the cancellation point (core.censored_observations).
+        # eff_times, not raw draws: the master only sees responses from
+        # workers it still listens to, so cancellation clocks run on them.
         finite = np.isfinite(times)
-        unit_times = np.where(finite, times, completion) / np.maximum(loads, 1e-9)
-        censored = (~used) | (~finite)
+        observed, censored = censored_observations(eff_times, assignment, used)
+        observed = np.where(np.isfinite(observed), observed, completion)
+        unit_times = observed / np.maximum(loads, 1e-9)
         self.detector.observe(np.where(finite, times, np.nan))
         self.tuner.observe(unit_times, censored)
         return float(np.mean(losses)), completion, decision
@@ -276,9 +295,7 @@ class Trainer:
                     self._adopt_assignment(
                         rp.plan.assignment if rp.plan is not None else None
                     )
-                    self.faultmgr = FaultManager(
-                        self.plan, planner=self.planner
-                    )
+                    self.faultmgr = self._make_faultmgr()
                     plan_history.append((step_idx, self.plan.n_batches))
             if self.ckpt and (step_idx + 1) % tc.checkpoint_every == 0:
                 self.ckpt.save_async(
@@ -298,6 +315,66 @@ class Trainer:
             final_plan=self.plan,
         )
 
+    def _make_faultmgr(self) -> FaultManager:
+        """A FaultManager whose recovery solver matches the trainer's planner.
+
+        A rate-incapable planner is NOT pinned (planner=None): plan_recovery
+        then upgrades to a rate-aware solver whenever live worker rates are
+        available, falling back to the analytic one otherwise.
+        """
+        return FaultManager(
+            self.plan,
+            planner=self.planner if self.planner.consumes_rates else None,
+        )
+
+    def _live_rates(self):
+        """Live per-worker rate estimates from the tuner's telemetry window.
+
+        None until a clean window spanning the CURRENT fleet size exists —
+        callers then recover homogeneously from the ground-truth dist.
+        """
+        rates = self.tuner.worker_rates()
+        if rates is None or len(rates) != self.plan.n_data:
+            return None
+        return rates
+
+    def shrink(self, n_lost: int) -> RuntimeTopology:
+        """Operator-initiated elastic shrink: shed ``n_lost`` workers.
+
+        Live tuner telemetry makes the shed RATE-AWARE: the n_lost slowest
+        workers (by observed rates) are dropped and B re-planned for the
+        survivors through the unified planner; without telemetry the fleet
+        shrinks homogeneously.  Rebuilds the runtime state around the new
+        topology (same path as fault recovery).
+        """
+        topo = self.rescaler.shrink(
+            n_lost, self.dist, rates=self._live_rates(),
+            metric=self.tc.tuner_metric,
+            batch_divisor=self.cluster_spec.batch_divisor,
+        )
+        self.plan = topo.plan
+        self.cluster_spec = dataclasses.replace(
+            self.cluster_spec, n_workers=topo.n_workers,
+            rates=None, feasible_b=None,
+        )
+        self._adopt_assignment(topo.assignment)
+        self._rebuild_runtime(topo.n_workers)
+        return topo
+
+    def _rebuild_runtime(self, n_alive: int) -> None:
+        """Re-create the per-fleet-size runtime companions after a rescale."""
+        self.tuner = StragglerTuner(
+            self.plan, self.tuner.config, planner=self.planner,
+            batch_divisor=self.cluster_spec.batch_divisor,
+        )
+        self.faultmgr = self._make_faultmgr()
+        self.detector = StragglerDetector(n_alive)
+        self.sim = StepTimeSimulator(
+            self.dist, n_alive, seed=self.tc.seed + 17
+        )
+        if self.error_state is not None:
+            self.error_state = self.error_state[:n_alive]
+
     def _adopt_assignment(self, assignment=None):
         """Install the active worker->batch placement (from a planner Plan
         when its fleet size matches, replica-major balanced otherwise)."""
@@ -314,9 +391,16 @@ class Trainer:
 
     def _elastic_replan(self, decision):
         """Restore from checkpoint (if any) and re-plan B for the surviving
-        fleet through the unified planner (FaultManager.plan_recovery)."""
+        fleet through the unified planner (FaultManager.plan_recovery).
+
+        Live per-worker rates from the tuner's telemetry window flow into
+        the recovery spec, so a skew-aware solver places the survivors by
+        their OBSERVED speeds instead of recovering homogeneously from the
+        ground-truth dist.
+        """
         recovery = self.faultmgr.plan_recovery(
             self.cluster_spec.dist,
+            rates=self._live_rates(),
             batch_divisor=self.cluster_spec.batch_divisor,
         )
         n_alive = recovery.n_workers
@@ -330,18 +414,9 @@ class Trainer:
                 pass
         self.plan = recovery.replication
         self.cluster_spec = recovery.spec  # the survivors are the fleet now
+        self.rescaler.apply_plan(recovery)  # topology generation bump
         self._adopt_assignment(recovery.assignment)
-        self.tuner = StragglerTuner(
-            self.plan, self.tuner.config, planner=self.planner,
-            batch_divisor=self.cluster_spec.batch_divisor,
-        )
-        self.faultmgr = FaultManager(self.plan, planner=self.planner)
-        self.detector = StragglerDetector(n_alive)
-        self.sim = StepTimeSimulator(
-            self.dist, n_alive, seed=self.tc.seed + 17
-        )
-        if self.error_state is not None:
-            self.error_state = self.error_state[:n_alive]
+        self._rebuild_runtime(n_alive)
 
 
 def main():

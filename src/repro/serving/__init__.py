@@ -1,7 +1,39 @@
+"""Discrete-event replicated serving: arrivals -> queueing master -> engine."""
+
+from repro.serving.arrivals import (
+    ArrivalProcess,
+    DeterministicArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    make_arrivals,
+)
 from repro.serving.engine import (
     ReplicatedServingEngine,
     RequestStats,
     ServeEngineConfig,
 )
+from repro.serving.queueing import (
+    BatchJob,
+    EventDrivenMaster,
+    QueuePolicy,
+    Request,
+    partition_requests,
+)
 
-__all__ = ["ReplicatedServingEngine", "RequestStats", "ServeEngineConfig"]
+__all__ = [
+    "ArrivalProcess",
+    "BatchJob",
+    "DeterministicArrivals",
+    "EventDrivenMaster",
+    "MMPPArrivals",
+    "PoissonArrivals",
+    "QueuePolicy",
+    "ReplicatedServingEngine",
+    "Request",
+    "RequestStats",
+    "ServeEngineConfig",
+    "TraceArrivals",
+    "make_arrivals",
+    "partition_requests",
+]

@@ -1,0 +1,221 @@
+"""Request arrival processes for the discrete-event serving subsystem.
+
+The lock-step ``serve_round`` world has no notion of WHEN requests show up —
+every round starts with a full batch already waiting.  Under real traffic the
+metric users feel is sojourn time (queue wait + service), and both the Aktaş
+et al. clone-attack analysis and the Peng et al. diversity/parallelism
+trade-off show the optimal replication level depends on the arrival process,
+not just the service distribution.  This module supplies the arrival side:
+
+* :class:`PoissonArrivals`        — memoryless traffic (the M in M/G/B);
+* :class:`MMPPArrivals`           — 2-state Markov-modulated Poisson process,
+                                    the standard bursty-traffic model: a slow
+                                    state and a ``burstiness``-times-faster
+                                    state, exponential dwell times, long-run
+                                    mean pinned to ``rate``;
+* :class:`DeterministicArrivals`  — fixed inter-arrival gap (D/G/B), the
+                                    zero-variance anchor;
+* :class:`TraceArrivals`          — replay of recorded arrival offsets, for
+                                    production traces and regression pinning.
+
+Every process implements ``sample(rng, n, start) -> (n,) ascending absolute
+times``; randomness comes only from the caller's ``numpy`` Generator so runs
+are reproducible and common-random-number friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "ArrivalProcess",
+    "PoissonArrivals",
+    "MMPPArrivals",
+    "DeterministicArrivals",
+    "TraceArrivals",
+    "make_arrivals",
+]
+
+
+def _validate_rate(rate: float) -> float:
+    if not np.isfinite(rate) or rate <= 0:
+        raise ValueError(f"arrival rate must be positive and finite, got {rate}")
+    return float(rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Base class: a stochastic (or replayed) stream of request arrival times."""
+
+    def sample(self, rng: np.random.Generator, n: int, start: float = 0.0) -> np.ndarray:
+        """Draw ``n`` ascending absolute arrival times, the first >= ``start``."""
+        raise NotImplementedError
+
+    def mean_rate(self) -> float:
+        """Long-run arrivals per unit time (for utilization accounting)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson process: i.i.d. Exp(rate) inter-arrival gaps."""
+
+    rate: float
+
+    def __post_init__(self):
+        _validate_rate(self.rate)
+
+    def sample(self, rng, n, start=0.0):
+        gaps = rng.standard_exponential(n) / self.rate
+        return start + np.cumsum(gaps)
+
+    def mean_rate(self) -> float:
+        return self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicArrivals(ArrivalProcess):
+    """Evenly spaced arrivals at exactly ``rate`` per unit time."""
+
+    rate: float
+
+    def __post_init__(self):
+        _validate_rate(self.rate)
+
+    def sample(self, rng, n, start=0.0):
+        return start + (1.0 + np.arange(n)) / self.rate
+
+    def mean_rate(self) -> float:
+        return self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class MMPPArrivals(ArrivalProcess):
+    """2-state Markov-modulated Poisson process (bursty traffic).
+
+    The modulating chain alternates between a slow state and a fast state
+    with exponential dwell times; within a state, arrivals are Poisson at
+    the state's rate.  The fast rate is ``burstiness`` times the slow rate
+    and the chain spends ``burst_fraction`` of its time in the fast state,
+    with the two state rates solved so the LONG-RUN mean is exactly
+    ``rate`` — so an MMPP plugs into utilization accounting wherever a
+    Poisson process of the same ``rate`` does, differing only in variance.
+    ``mean_cycle`` is the expected slow+fast dwell per cycle, in time units.
+    """
+
+    rate: float
+    burstiness: float = 4.0
+    burst_fraction: float = 0.25
+    mean_cycle: float = 10.0
+
+    def __post_init__(self):
+        _validate_rate(self.rate)
+        if self.burstiness <= 1.0:
+            raise ValueError(f"burstiness must exceed 1, got {self.burstiness}")
+        if not 0.0 < self.burst_fraction < 1.0:
+            raise ValueError(
+                f"burst_fraction must be in (0, 1), got {self.burst_fraction}"
+            )
+        if self.mean_cycle <= 0:
+            raise ValueError(f"mean_cycle must be positive, got {self.mean_cycle}")
+
+    @property
+    def state_rates(self) -> tuple[float, float]:
+        """(slow, fast) Poisson rates with the long-run mean pinned to rate."""
+        f, k = self.burst_fraction, self.burstiness
+        slow = self.rate / (1.0 - f + f * k)
+        return slow, k * slow
+
+    @property
+    def dwell_means(self) -> tuple[float, float]:
+        """(slow, fast) expected dwell times per visit."""
+        f = self.burst_fraction
+        return (1.0 - f) * self.mean_cycle, f * self.mean_cycle
+
+    def sample(self, rng, n, start=0.0):
+        rates = self.state_rates
+        dwells = self.dwell_means
+        times = np.empty(n)
+        t, state, filled = float(start), 0, 0
+        while filled < n:
+            dwell = rng.standard_exponential() * dwells[state]
+            end = t + dwell
+            # Poisson arrivals within this dwell, sequentially
+            while filled < n:
+                t += rng.standard_exponential() / rates[state]
+                if t >= end:
+                    t = end  # unused partial gap; memorylessness makes this exact
+                    break
+                times[filled] = t
+                filled += 1
+            state = 1 - state
+        return times
+
+    def mean_rate(self) -> float:
+        return self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceArrivals(ArrivalProcess):
+    """Replay recorded arrival offsets (relative to the trace start).
+
+    ``sample`` shifts the trace so its first arrival lands at ``start`` and
+    cycles it (each lap offset by the trace span) when ``n`` exceeds the
+    trace length — a finite production trace drives arbitrarily long runs.
+    """
+
+    offsets: tuple[float, ...]
+
+    def __post_init__(self):
+        if not self.offsets:
+            raise ValueError("trace must contain at least one arrival")
+        o = np.asarray(self.offsets, dtype=float)
+        if np.any(~np.isfinite(o)) or np.any(np.diff(o) < 0):
+            raise ValueError("trace offsets must be finite and non-decreasing")
+        object.__setattr__(self, "offsets", tuple(float(x) for x in o))
+
+    @classmethod
+    def from_times(cls, times: Sequence[float]) -> "TraceArrivals":
+        t = np.asarray(times, dtype=float)
+        return cls(offsets=tuple(t - t[0]))
+
+    def sample(self, rng, n, start=0.0):
+        o = np.asarray(self.offsets)
+        span = float(o[-1] - o[0])
+        # one mean gap between laps keeps the replay strictly ordered; a
+        # degenerate (single-point or zero-span) trace falls back to unit laps
+        lap = span + span / (len(o) - 1) if span > 0 else 1.0
+        reps = -(-n // len(o))  # ceil
+        tiled = np.concatenate([o + k * lap for k in range(reps)])[:n]
+        return start + tiled
+
+    def mean_rate(self) -> float:
+        o = np.asarray(self.offsets)
+        if len(o) < 2 or o[-1] <= o[0]:
+            return 1.0
+        return (len(o) - 1) / float(o[-1] - o[0])
+
+
+def make_arrivals(kind: str, rate: float, **kwargs) -> ArrivalProcess:
+    """Factory keyed by the serving-config literal.
+
+    ``kind``: 'poisson' | 'mmpp' | 'deterministic' | 'trace' (trace requires
+    ``offsets=...``).  Extra kwargs go to the process constructor.
+    """
+    if kind == "poisson":
+        return PoissonArrivals(rate=rate, **kwargs)
+    if kind == "mmpp":
+        return MMPPArrivals(rate=rate, **kwargs)
+    if kind == "deterministic":
+        return DeterministicArrivals(rate=rate, **kwargs)
+    if kind == "trace":
+        if "offsets" not in kwargs:
+            raise ValueError("trace arrivals need offsets=...")
+        return TraceArrivals(**kwargs)
+    raise ValueError(
+        f"unknown arrival kind {kind!r} "
+        "(use 'poisson'|'mmpp'|'deterministic'|'trace')"
+    )

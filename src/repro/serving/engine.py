@@ -1,30 +1,45 @@
-"""Replicated batched-serving engine — the paper's System1 as a request
-runtime.
+"""Replicated serving engine — the paper's System1 as a discrete-event
+request runtime.
 
-Requests arrive at a master, are grouped into batches (the batching unit),
-and each batch is dispatched to r = N/B server groups (the assignment
-unit).  A batch completes when its FASTEST replica responds; a request's
-latency is its batch's completion time plus queueing.  The engine
+Requests arrive under a configurable :mod:`~repro.serving.arrivals` process
+(Poisson / MMPP-bursty / deterministic / replayed trace), queue at the
+:class:`~repro.serving.queueing.EventDrivenMaster` (FIFO or priority
+admission, batch formation under a max-wait + max-size policy), and each
+formed batch is dispatched to a replica-set of r = N/B server groups — the
+FASTEST replica's response completes the batch and the rest are cancelled
+(the paper's rule).  A request's reported latency is its SOJOURN: queue
+wait + service, the metric users actually feel under heavy traffic.
 
-* actually executes prefill + decode on a (small) model for the batch the
-  simulated-fastest replica serves (outputs are real tokens),
-* draws per-(batch, replica) service times from the calibrated straggler
-  model and advances a discrete-event clock,
-* feeds observed service times to the spectrum tuner so B adapts online —
-  the serving twin of the training runtime in launch/train.py.
+The engine
+
+* actually executes prefill + decode on a (small) model for each completed
+  batch (outputs are real tokens), driven off the event clock;
+* draws per-replica service times from the calibrated straggler model;
+* feeds the spectrum tuner three telemetry streams — per-replica service
+  times (censored for cancelled replicas), the measured batch-formation
+  rate, and per-request sojourns — so B adapts online through the
+  load-aware ``ClusterSpec -> Plan`` control plane: re-plans are scored by
+  simulated sojourn at the OBSERVED arrival rate and applied at a
+  drain-then-swap quiesce point.
+
+The lock-step API survives as a thin compatibility shim:
+:meth:`ReplicatedServingEngine.serve_round` drives the event loop for one
+synchronized round (every request pre-arrived, one pre-formed batch per
+idle replica-set) and reproduces the legacy engine's latencies draw-for-draw
+— while also fixing the legacy remainder bug (``n_requests % B != 0``
+silently dropped the tail; see :func:`~repro.serving.queueing
+.partition_requests`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
+import math
+from collections import deque
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, reduced_config
 from repro.core import (
     ClusterSpec,
     Metric,
@@ -36,9 +51,18 @@ from repro.core import (
     TunerConfig,
     make_planner,
 )
-from repro.models import Shard, decode_step, init_params, prefill
+from repro.serving.arrivals import ArrivalProcess, make_arrivals
+from repro.serving.queueing import (
+    BatchJob,
+    EventDrivenMaster,
+    QueuePolicy,
+    Request,
+    partition_requests,
+)
 
 __all__ = ["ServeEngineConfig", "RequestStats", "ReplicatedServingEngine"]
+
+_NO_TOKENS = np.empty(0, dtype=np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +70,7 @@ class ServeEngineConfig:
     arch: str = "qwen2-0.5b"
     n_server_groups: int = 8  # the paper's N
     n_batches: int = 4  # the paper's B (replication r = N/B)
-    batch_size: int = 4  # requests per batch
+    batch_size: int = 4  # requests per batch (queueing: max batch size)
     prompt_len: int = 16
     gen_tokens: int = 8
     max_len: int = 64
@@ -61,6 +85,17 @@ class ServeEngineConfig:
     metric: Metric = "mean"
     planner_mode: str = "analytic"  # 'analytic' | 'simulate'
     plan_initial: bool = False
+    # --- discrete-event serving (arrival + queue knobs) ---------------------
+    # offered load, either as REQUESTS per unit sim-time or as a fraction of
+    # the fleet's no-replication capacity; either one makes the planner
+    # objective load-aware (scored on sojourn, needs planner_mode='simulate')
+    arrival_rate: Optional[float] = None
+    utilization: Optional[float] = None
+    arrival_kind: str = "poisson"  # 'poisson'|'mmpp'|'deterministic'|'trace'
+    max_wait: float = math.inf  # batch-formation deadline (sim-time units)
+    queue_discipline: str = "fifo"  # 'fifo' | 'priority'
+    # skip real prefill/decode (latency-only experiments, fast tests)
+    execute_model: bool = True
 
 
 @dataclasses.dataclass
@@ -69,16 +104,25 @@ class RequestStats:
     arrival: float
     completion: float
     tokens: np.ndarray
+    dispatched: float = math.nan
 
     @property
     def latency(self) -> float:
+        """Sojourn: queue wait + service (== completion - arrival)."""
         return self.completion - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.dispatched - self.arrival
+
+    @property
+    def service(self) -> float:
+        return self.completion - self.dispatched
 
 
 class ReplicatedServingEngine:
     def __init__(self, sc: ServeEngineConfig):
         self.sc = sc
-        self.cfg = reduced_config(get_config(sc.arch))
         self.dist: ServiceDistribution = ShiftedExponential(
             delta=sc.delta, mu=sc.mu
         )
@@ -86,8 +130,13 @@ class ReplicatedServingEngine:
         self.cluster_spec = ClusterSpec(
             n_workers=sc.n_server_groups, dist=self.dist
         )
-        self.objective = Objective(metric=sc.metric)
-        self.planner = make_planner(mode=sc.planner_mode, seed=sc.seed)
+        self.objective = self._build_objective()
+        # online re-plans re-score the whole sweep (sojourn-simulated when
+        # the objective is load-aware), so size it like the tuner's default
+        # sim budget rather than the offline 20k-trial analysis default
+        self.planner = make_planner(
+            mode=sc.planner_mode, n_trials=4_000, seed=sc.seed
+        )
         if sc.plan_initial:
             n_batches = self.planner.plan(
                 self.cluster_spec, self.objective
@@ -97,24 +146,87 @@ class ReplicatedServingEngine:
         self.plan = ReplicationPlan(
             n_data=sc.n_server_groups, n_batches=n_batches
         )
-        self.params = init_params(jax.random.PRNGKey(sc.seed), self.cfg)
-        self.shard = Shard.local()
         self.rng = np.random.default_rng(sc.seed + 1)
+        self._arrival_rng = np.random.default_rng(sc.seed + 2)
+        # one observe() per completed batch: re-plan from >= 64 service
+        # samples and at most every 16 batches — load-aware sweeps are
+        # ~10^2 slower than the analytic closed form, and a fit from fewer
+        # samples makes B oscillate under bursty formation telemetry
         self.tuner = StragglerTuner(
             self.plan,
-            TunerConfig(min_samples=16, cooldown_steps=4, metric=sc.metric),
+            TunerConfig(
+                window_steps=256, min_samples=64, cooldown_steps=16,
+                metric=sc.metric,
+            ),
             planner=self.planner,
+            job_load=self._work(sc.batch_size),
         )
         self.clock = 0.0
         self._next_id = 0
-        self._decode = jax.jit(
-            lambda p, s, t, c: decode_step(self.cfg, self.shard, p, s, t, c)
+        self._tokens: dict[int, np.ndarray] = {}
+        self._formations: deque[float] = deque(maxlen=32)
+        if sc.execute_model:
+            import jax
+
+            from repro.configs import get_config, reduced_config
+            from repro.models import Shard, decode_step, init_params, prefill
+
+            self.cfg = reduced_config(get_config(sc.arch))
+            self.params = init_params(jax.random.PRNGKey(sc.seed), self.cfg)
+            self.shard = Shard.local()
+            self._prefill = prefill
+            self._decode = jax.jit(
+                lambda p, s, t, c: decode_step(self.cfg, self.shard, p, s, t, c)
+            )
+            self._prompt_key = jax.random.PRNGKey(sc.seed + 3)
+        else:
+            self.cfg = None
+            self.params = None
+
+    # -- objective / arrivals ------------------------------------------------
+    def _work(self, n_reqs: int) -> float:
+        """Units of data one batch of ``n_reqs`` requests carries."""
+        return n_reqs * (self.sc.prompt_len + self.sc.gen_tokens) / 100.0
+
+    def _build_objective(self) -> Objective:
+        sc = self.sc
+        if sc.arrival_rate is not None and sc.utilization is not None:
+            raise ValueError(
+                "give ServeEngineConfig.arrival_rate OR .utilization, not "
+                "both (same rule as Objective)"
+            )
+        return Objective(
+            metric=sc.metric,
+            arrival_rate=(
+                sc.arrival_rate / sc.batch_size
+                if sc.arrival_rate is not None
+                else None
+            ),
+            utilization=sc.utilization,
+            job_load=self._work(sc.batch_size),
         )
 
-    # -- real model work -----------------------------------------------------
-    def _generate(self, prompts: jnp.ndarray) -> np.ndarray:
+    def _request_rate(self) -> float:
+        """Offered REQUEST arrival rate implied by the config."""
         sc = self.sc
-        logits, state = prefill(
+        if sc.arrival_rate is not None:
+            return sc.arrival_rate
+        if sc.utilization is not None:
+            return self.objective.offered_rate(self.cluster_spec) * sc.batch_size
+        raise ValueError(
+            "event-driven serving needs ServeEngineConfig.arrival_rate or "
+            ".utilization (or pass an ArrivalProcess to serve())"
+        )
+
+    def _default_arrivals(self) -> ArrivalProcess:
+        return make_arrivals(self.sc.arrival_kind, rate=self._request_rate())
+
+    # -- real model work -----------------------------------------------------
+    def _generate(self, prompts) -> np.ndarray:
+        import jax.numpy as jnp
+
+        sc = self.sc
+        logits, state = self._prefill(
             self.cfg, self.shard, self.params, {"tokens": prompts},
             max_len=sc.max_len,
         )
@@ -128,52 +240,217 @@ class ReplicatedServingEngine:
             out.append(tok)
         return np.asarray(jnp.concatenate(out, axis=1))
 
-    # -- one master round ----------------------------------------------------
+    def _generate_for_job(self, job: BatchJob) -> None:
+        """Run real prefill+decode for a completed batch (event path).
+
+        Prompts are keyed by request id (fold_in), so WHAT is generated for a
+        request is invariant to how traffic got batched or replicated.
+        """
+        import jax
+
+        sc = self.sc
+        rows = [
+            jax.random.randint(
+                jax.random.fold_in(self._prompt_key, req.request_id),
+                (sc.prompt_len,), 0, self.cfg.vocab_size,
+            )
+            for req in job.requests
+        ]
+        tokens = self._generate(jax.numpy.stack(rows))
+        for k, req in enumerate(job.requests):
+            self._tokens[req.request_id] = tokens[k]
+
+    # -- event-driven serving ------------------------------------------------
+    def _service_sampler(self, job: BatchJob, group: int) -> np.ndarray:
+        """Per-replica service draws for one dispatched batch."""
+        work = self._work(job.size)
+        return self.dist.scaled(work).sample(self.rng, self.plan.replication)
+
+    def _on_job_complete(self, job: BatchJob) -> Optional[dict]:
+        """Telemetry + model work + (maybe) a drain-then-swap re-plan."""
+        work = self._work(job.size)
+        # cancelled replicas are only OBSERVED up to the winner's response —
+        # recording them censored at the cancellation time keeps the
+        # censored MLE unbiased (recording their full would-have-been times
+        # as censored lower bounds would drag the fitted mu down by the
+        # censoring fraction)
+        used = job.used_mask()
+        observed = np.minimum(job.service_times, job.service)
+        self.tuner.observe(observed / work, censored=~used)
+        self.tuner.observe_sojourn(
+            np.array([req.sojourn for req in job.requests])
+        )
+        self._formations.append(job.formed_at)
+        if len(self._formations) >= 2:
+            # jobs complete out of formation order (slow sets finish late),
+            # so span the window by max-min, not last-first
+            span = max(self._formations) - min(self._formations)
+            if span > 0:
+                self.tuner.observe_load((len(self._formations) - 1) / span)
+        if self.sc.execute_model:
+            self._generate_for_job(job)
+        if self.sc.tuner:
+            rp = self.tuner.maybe_replan()
+            if rp is not None:
+                self.plan = self.tuner.apply(rp)
+                return {"n_groups": self.plan.n_batches}
+        return None
+
+    def serve(
+        self,
+        n_requests: int,
+        arrivals: Optional[ArrivalProcess] = None,
+    ) -> list[RequestStats]:
+        """Serve ``n_requests`` arriving under ``arrivals`` (default: the
+        config's process at the configured offered load) through the
+        event-driven master; returns per-request sojourn stats."""
+        sc = self.sc
+        process = arrivals if arrivals is not None else self._default_arrivals()
+        times = process.sample(self._arrival_rng, n_requests, start=self.clock)
+        requests = [
+            Request(request_id=self._next_id + i, arrival=float(t))
+            for i, t in enumerate(times)
+        ]
+        self._next_id += n_requests
+        master = EventDrivenMaster(
+            n_groups=self.plan.n_batches,
+            service_sampler=self._service_sampler,
+            policy=QueuePolicy(
+                max_batch_size=sc.batch_size,
+                max_wait=sc.max_wait,
+                discipline=sc.queue_discipline,
+            ),
+            clock=self.clock,
+            on_job_complete=self._on_job_complete,
+        )
+        self._tokens = {}
+        for req in requests:
+            master.submit(req)
+        master.run()
+        self.clock = master.clock
+        return [
+            RequestStats(
+                request_id=req.request_id,
+                arrival=req.arrival,
+                completion=req.completion,
+                tokens=self._tokens.get(req.request_id, _NO_TOKENS),
+                dispatched=req.dispatched,
+            )
+            for req in requests
+        ]
+
+    def run_load(
+        self,
+        n_requests: int = 512,
+        arrivals: Optional[ArrivalProcess] = None,
+    ) -> dict:
+        """Event-driven driver: serve a request stream, report sojourn
+        quantiles (the serving twin of :meth:`run`)."""
+        start = self.clock
+        stats = self.serve(n_requests, arrivals)
+        soj = np.array([s.latency for s in stats])
+        wait = np.array([s.queue_wait for s in stats])
+        return {
+            "requests": len(stats),
+            "mean_sojourn": float(soj.mean()),
+            "p50_sojourn": float(np.quantile(soj, 0.50)),
+            "p99_sojourn": float(np.quantile(soj, 0.99)),
+            "p999_sojourn": float(np.quantile(soj, 0.999)),
+            "mean_queue_wait": float(wait.mean()),
+            "throughput": len(stats) / max(self.clock - start, 1e-9),
+            "final_B": self.plan.n_batches,
+            "stats": stats,
+        }
+
+    # -- one master round (compatibility shim) -------------------------------
     def serve_round(self, n_requests: Optional[int] = None) -> list[RequestStats]:
-        """Accept B*batch_size requests (default), dispatch with replication,
-        advance the clock by the paper's completion rule, run the real model
-        once per batch, return per-request stats."""
+        """One SYNCHRONIZED round through the event loop (legacy API).
+
+        Accept B*batch_size requests (default), all arriving at the current
+        clock; one pre-formed batch per idle replica-set with service times
+        pre-drawn in the legacy engine's RNG order — so zero-queueing
+        latencies reproduce the lock-step engine draw-for-draw.  Unlike the
+        legacy engine, the LAST batch absorbs the ``n_requests % B``
+        remainder instead of silently dropping it.
+        """
         sc = self.sc
         b = self.plan.n_batches
         r = self.plan.replication
         n_requests = n_requests or b * sc.batch_size
         arrival = self.clock
 
-        prompts = jax.random.randint(
-            jax.random.PRNGKey(self.sc.seed + self._next_id),
-            (n_requests, sc.prompt_len), 0, self.cfg.vocab_size,
-        )
-        # batching unit: contiguous request batches
-        per_batch = max(n_requests // b, 1)
-        # service times: each batch has r replicas; unit work = batch tokens
-        work = per_batch * (sc.prompt_len + sc.gen_tokens) / 100.0
-        times = self.dist.scaled(work).sample(self.rng, (b, r))
-        batch_done = times.min(axis=1)  # fastest replica per batch
-        round_done = float(batch_done.max())
+        if sc.execute_model:
+            import jax
 
-        stats: list[RequestStats] = []
-        for bi in range(b):
-            lo, hi = bi * per_batch, min((bi + 1) * per_batch, n_requests)
+            prompts = jax.random.randint(
+                jax.random.PRNGKey(sc.seed + self._next_id),
+                (n_requests, sc.prompt_len), 0, self.cfg.vocab_size,
+            )
+        # batching unit: contiguous request slices (legacy layout, remainder
+        # riding with the last batch); service times in the legacy RNG order
+        per_batch = max(n_requests // b, 1)
+        work = self._work(per_batch)
+        times = self.dist.scaled(work).sample(self.rng, (b, r))
+        slices = partition_requests(n_requests, b)
+        # Exp/SExp scale affinely with load, so rescaling a row re-prices a
+        # batch for its TRUE size from the same draws: the remainder-absorbing
+        # last batch is charged its real work, while every equal-size row is
+        # multiplied by exactly 1.0 (bit-for-bit with the legacy engine)
+        row_work = np.array([
+            self._work(hi - lo) if hi > lo else work for lo, hi in slices
+        ])
+        times = times * (row_work / work)[:, None]
+
+        master = EventDrivenMaster(
+            n_groups=b,
+            service_sampler=self._service_sampler,
+            clock=arrival,
+        )
+        jobs: list[tuple[int, BatchJob]] = []
+        for bi, (lo, hi) in enumerate(slices):
             if lo >= hi:
                 continue
-            tokens = self._generate(prompts[lo:hi])
-            for k in range(hi - lo):
+            reqs = [
+                Request(request_id=self._next_id + k, arrival=arrival)
+                for k in range(lo, hi)
+            ]
+            jobs.append(
+                (bi, master.submit_formed(reqs, at=arrival, service_times=times[bi]))
+            )
+        master.run()
+        self._next_id += n_requests
+
+        stats: list[RequestStats] = []
+        for bi, job in jobs:
+            lo, hi = slices[bi]
+            tokens = self._generate(prompts[lo:hi]) if sc.execute_model else None
+            for k, req in enumerate(job.requests):
                 stats.append(
                     RequestStats(
-                        request_id=self._next_id,
-                        arrival=arrival,
-                        completion=arrival + float(batch_done[bi]),
-                        tokens=tokens[k],
+                        request_id=req.request_id,
+                        arrival=req.arrival,
+                        completion=req.completion,
+                        tokens=(
+                            tokens[k] if tokens is not None else _NO_TOKENS
+                        ),
+                        dispatched=req.dispatched,
                     )
                 )
-                self._next_id += 1
-
-        self.clock = arrival + round_done
-        # telemetry: per-unit times, censored for unused replicas
-        unit = (times / work).reshape(-1)
+        # legacy round clock: max over ALL replica-set minima, including
+        # sets whose slice was empty (n_requests < B)
+        self.clock = arrival + float(times.min(axis=1).max())
+        # telemetry: per-unit times (normalized by each row's true work),
+        # censored AT THE CANCELLATION TIME for unused replicas
+        # (first-replica-wins cancels them at the batch minimum; their full
+        # draws were never observable)
+        batch_done = times.min(axis=1)
+        observed = np.minimum(times, batch_done[:, None])
         used = np.zeros_like(times, dtype=bool)
         used[np.arange(b), times.argmin(axis=1)] = True
-        self.tuner.observe(unit, censored=~used.reshape(-1))
+        self.tuner.observe(
+            (observed / row_work[:, None]).reshape(-1),
+            censored=~used.reshape(-1),
+        )
         if self.sc.tuner:
             rp = self.tuner.maybe_replan()
             if rp is not None:

@@ -1,0 +1,356 @@
+"""Event-driven serving master: admission queue, batch formation, replica
+dispatch with first-replica-wins cancellation.
+
+This is the discrete-event core the engine drives the model from.  The fleet
+is factored (per the active :class:`~repro.core.planner.Plan`) into
+``n_groups`` replica-sets — one per batch slot, each holding ``r`` server
+groups.  The master's event loop:
+
+* **Admission** — requests enter a FIFO or priority queue at their arrival
+  time (``QueuePolicy.discipline``; larger ``Request.priority`` is served
+  first, ties FIFO).
+* **Batch formation** — a batch forms as soon as ``max_batch_size`` requests
+  wait, or when the oldest queued request has waited ``max_wait`` (whichever
+  comes first); leftovers are flushed once the arrival stream ends, so no
+  request is ever dropped (the lock-step engine's remainder bug — see
+  :func:`partition_requests`).
+* **Replica dispatch** — a formed batch goes to the lowest-numbered idle
+  replica-set; its ``r`` replicas all start, the FASTEST one's response
+  completes the batch and the rest are cancelled (the paper's
+  ``min``-over-replicas rule), so the whole set frees at the winner's time.
+* **Sojourn accounting** — every request records arrival, dispatch, and
+  completion; sojourn = queue wait + service, the metric the load-aware
+  planner objectives act on.
+
+Re-planning: ``on_job_complete`` may return a reconfiguration (new
+``n_groups`` and/or sampler).  The master then DRAINS — formed batches keep
+queueing, in-flight batches finish — and swaps the replica-set fabric only
+at the quiesce point, mirroring how re-factoring a real mesh flushes
+compiled executables before traffic resumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from collections import deque
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "QueuePolicy",
+    "Request",
+    "BatchJob",
+    "EventDrivenMaster",
+    "partition_requests",
+]
+
+
+def partition_requests(n_requests: int, n_batches: int) -> list[tuple[int, int]]:
+    """Contiguous [lo, hi) request slices for one synchronized round.
+
+    The legacy ``serve_round`` sliced ``per_batch = max(n // B, 1)`` requests
+    per batch and DROPPED the remainder (``n=10, B=4`` served only 8).  Here
+    the LAST batch absorbs the remainder, so every request is assigned; with
+    ``B | n`` the slices are identical to the legacy ones.  Empty trailing
+    slices (``n < B``) are preserved so callers can keep slice index == batch
+    index.
+    """
+    if n_batches < 1:
+        raise ValueError(f"n_batches must be >= 1, got {n_batches}")
+    if n_requests < 0:
+        raise ValueError(f"n_requests must be >= 0, got {n_requests}")
+    per_batch = max(n_requests // n_batches, 1)
+    slices = []
+    for bi in range(n_batches):
+        lo = min(bi * per_batch, n_requests)
+        hi = min((bi + 1) * per_batch, n_requests)
+        if bi == n_batches - 1:
+            hi = n_requests  # the remainder rides with the last batch
+        slices.append((lo, hi))
+    return slices
+
+
+@dataclasses.dataclass(frozen=True)
+class QueuePolicy:
+    """Admission + batch-formation knobs of the event-driven master."""
+
+    max_batch_size: int = 4  # form a batch as soon as this many wait
+    max_wait: float = math.inf  # ... or the oldest has waited this long
+    discipline: str = "fifo"  # 'fifo' | 'priority'
+
+    def __post_init__(self):
+        if self.max_batch_size < 1:
+            raise ValueError(
+                f"max_batch_size must be >= 1, got {self.max_batch_size}"
+            )
+        if not self.max_wait > 0:
+            raise ValueError(f"max_wait must be positive, got {self.max_wait}")
+        if self.discipline not in ("fifo", "priority"):
+            raise ValueError(
+                f"unknown discipline {self.discipline!r} (use 'fifo'|'priority')"
+            )
+
+
+@dataclasses.dataclass
+class Request:
+    """One user request moving through the queueing subsystem."""
+
+    request_id: int
+    arrival: float
+    priority: float = 0.0  # larger = more urgent ('priority' discipline only)
+    batch_id: int = -1
+    dispatched: float = math.nan
+    completion: float = math.nan
+
+    @property
+    def queue_wait(self) -> float:
+        return self.dispatched - self.arrival
+
+    @property
+    def sojourn(self) -> float:
+        """Queue wait + service: the latency the user actually feels."""
+        return self.completion - self.arrival
+
+
+@dataclasses.dataclass
+class BatchJob:
+    """A formed batch of requests and its dispatch/telemetry record."""
+
+    batch_id: int
+    requests: tuple[Request, ...]
+    formed_at: float
+    group: int = -1  # replica-set the batch ran on
+    dispatched: float = math.nan
+    completed: float = math.nan
+    service_times: Optional[np.ndarray] = None  # per-replica draws
+    winner: int = -1  # index of the fastest (used) replica
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def priority(self) -> float:
+        """A batch is as urgent as its most urgent request."""
+        return max((r.priority for r in self.requests), default=0.0)
+
+    @property
+    def service(self) -> float:
+        return self.completed - self.dispatched
+
+    def used_mask(self) -> np.ndarray:
+        """Per-replica mask: True for the one replica whose result was used."""
+        used = np.zeros(len(self.service_times), dtype=bool)
+        used[self.winner] = True
+        return used
+
+
+# sampler(job, group) -> per-replica service times for dispatching `job` on
+# replica-set `group`
+ServiceSampler = Callable[[BatchJob, int], np.ndarray]
+# callback(job) -> None, or {'n_groups': int, 'service_sampler': fn?} to
+# request a drain-then-reconfigure
+JobCallback = Callable[[BatchJob], Optional[dict]]
+
+
+class EventDrivenMaster:
+    """The serving master as a discrete-event system (see module docstring)."""
+
+    def __init__(
+        self,
+        n_groups: int,
+        service_sampler: ServiceSampler,
+        policy: Optional[QueuePolicy] = None,
+        clock: float = 0.0,
+        on_job_complete: Optional[JobCallback] = None,
+    ):
+        if n_groups < 1:
+            raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+        self.n_groups = n_groups
+        self.policy = policy or QueuePolicy()
+        self._sampler = service_sampler
+        self.clock = float(clock)
+        self.on_job_complete = on_job_complete
+        self._events: list = []  # (time, seq, kind, payload)
+        self._seq = itertools.count()
+        self._queue: deque[Request] = deque()  # fifo order
+        self._prio: list = []  # (-priority, arrival, id, Request) heap
+        self._queued_ids: set[int] = set()
+        # formed batches awaiting an idle set: FIFO, or (under the
+        # 'priority' discipline) a heap keyed by (-priority, batch_id) so an
+        # urgent batch overtakes earlier-formed ones at dispatch
+        self._pending: list = []
+        self._idle: list[int] = list(range(n_groups))
+        heapq.heapify(self._idle)
+        self._in_flight: dict[int, BatchJob] = {}
+        self._batch_seq = itertools.count()
+        self._reconfig: Optional[dict] = None
+        self.completed_jobs: list[BatchJob] = []
+        self.reconfigurations = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Admit one request at its arrival time (admission + formation
+        policies apply)."""
+        self._push(request.arrival, "arrival", request)
+
+    def submit_formed(
+        self,
+        requests: Sequence[Request],
+        at: Optional[float] = None,
+        service_times: Optional[np.ndarray] = None,
+    ) -> BatchJob:
+        """Enqueue a PRE-FORMED batch, bypassing admission and formation.
+
+        The compatibility shim uses this to drive one synchronized round:
+        ``service_times`` (per-replica) may be pre-drawn so the shim's RNG
+        stream matches the legacy engine draw-for-draw.
+        """
+        t = self.clock if at is None else float(at)
+        job = BatchJob(
+            batch_id=next(self._batch_seq),
+            requests=tuple(requests),
+            formed_at=t,
+        )
+        if service_times is not None:
+            job.service_times = np.asarray(service_times, dtype=float)
+        self._push(t, "formed", job)
+        return job
+
+    # -- event loop ----------------------------------------------------------
+    def run(self) -> list[BatchJob]:
+        """Process events until every submitted request has completed."""
+        while True:
+            self._try_dispatch()
+            if not self._events:
+                if self._n_queued():
+                    # arrival stream ended with a partial batch waiting:
+                    # flush it (in max_batch_size chunks) rather than strand it
+                    while self._n_queued():
+                        self._form(min(self._n_queued(), self.policy.max_batch_size))
+                    continue
+                if self._pending or self._in_flight:
+                    # in-flight batches always hold a depart event, and
+                    # pending batches with every set idle dispatch above —
+                    # reaching here means a reconfig drain resolves next lap
+                    continue
+                break
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.clock = max(self.clock, t)
+            if kind == "arrival":
+                self._on_arrival(payload)
+            elif kind == "timer":
+                self._on_timer(payload)
+            elif kind == "formed":
+                self._pending_push(payload)
+            elif kind == "depart":
+                self._on_depart(payload)
+        return self.completed_jobs
+
+    # -- internals -----------------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (float(t), next(self._seq), kind, payload))
+
+    def _n_queued(self) -> int:
+        return len(self._queue) if self.policy.discipline == "fifo" else len(self._prio)
+
+    def _on_arrival(self, req: Request) -> None:
+        if self.policy.discipline == "fifo":
+            self._queue.append(req)
+        else:
+            heapq.heappush(
+                self._prio, (-req.priority, req.arrival, req.request_id, req)
+            )
+        self._queued_ids.add(req.request_id)
+        if self._n_queued() >= self.policy.max_batch_size:
+            self._form(self.policy.max_batch_size)
+        elif math.isfinite(self.policy.max_wait):
+            self._push(req.arrival + self.policy.max_wait, "timer", req.request_id)
+
+    def _on_timer(self, request_id: int) -> None:
+        # the max-wait deadline of a request that is still queued fires a
+        # batch with whatever is waiting (>= 1 request, <= max size)
+        if request_id in self._queued_ids:
+            self._form(min(self._n_queued(), self.policy.max_batch_size))
+
+    def _pop_request(self) -> Request:
+        if self.policy.discipline == "fifo":
+            req = self._queue.popleft()
+        else:
+            req = heapq.heappop(self._prio)[3]
+        self._queued_ids.discard(req.request_id)
+        return req
+
+    def _pending_push(self, job: BatchJob) -> None:
+        if self.policy.discipline == "priority":
+            heapq.heappush(self._pending, (-job.priority, job.batch_id, job))
+        else:
+            self._pending.append(job)
+
+    def _pending_pop(self) -> BatchJob:
+        if self.policy.discipline == "priority":
+            return heapq.heappop(self._pending)[2]
+        return self._pending.pop(0)
+
+    def _form(self, k: int) -> None:
+        job = BatchJob(
+            batch_id=next(self._batch_seq),
+            requests=tuple(self._pop_request() for _ in range(k)),
+            formed_at=self.clock,
+        )
+        self._pending_push(job)
+
+    def _try_dispatch(self) -> None:
+        if self._reconfig is not None:
+            if self._in_flight:
+                return  # draining: no new dispatches until the fabric quiesces
+            self._apply_reconfig()
+        while self._pending and self._idle:
+            job = self._pending_pop()
+            group = heapq.heappop(self._idle)
+            job.group = group
+            job.dispatched = self.clock
+            if job.service_times is None:
+                job.service_times = np.asarray(
+                    self._sampler(job, group), dtype=float
+                )
+            job.winner = int(np.argmin(job.service_times))
+            # first-replica-wins: the set frees at the winner's response and
+            # the remaining replicas are cancelled
+            job.completed = self.clock + float(job.service_times[job.winner])
+            self._in_flight[group] = job
+            self._push(job.completed, "depart", job)
+
+    def _on_depart(self, job: BatchJob) -> None:
+        del self._in_flight[job.group]
+        for req in job.requests:
+            req.batch_id = job.batch_id
+            req.dispatched = job.dispatched
+            req.completion = job.completed
+        self.completed_jobs.append(job)
+        # with a reconfig pending, freed sets are NOT re-added — the whole
+        # fabric is rebuilt at the quiesce point in _apply_reconfig
+        if self._reconfig is None:
+            heapq.heappush(self._idle, job.group)
+        # every completed job reports (model work + telemetry happen in the
+        # callback), including those draining out; a newer reconfig request
+        # supersedes the pending one at the same quiesce point
+        if self.on_job_complete is not None:
+            rc = self.on_job_complete(job)
+            if rc:
+                self._reconfig = dict(rc)
+
+    def _apply_reconfig(self) -> None:
+        rc, self._reconfig = self._reconfig, None
+        self.n_groups = int(rc.get("n_groups", self.n_groups))
+        if self.n_groups < 1:
+            raise ValueError(f"reconfig n_groups must be >= 1, got {self.n_groups}")
+        if "service_sampler" in rc:
+            self._sampler = rc["service_sampler"]
+        self._idle = list(range(self.n_groups))
+        heapq.heapify(self._idle)
+        self.reconfigurations += 1

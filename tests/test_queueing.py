@@ -1,0 +1,572 @@
+"""Discrete-event serving subsystem: arrivals, queueing master, sojourn
+simulator, load-aware planner objectives, and the engine shim — all CPU-fast
+(model execution off)."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticPlanner,
+    ClusterSpec,
+    Exponential,
+    Objective,
+    ReplicationPlan,
+    ShiftedExponential,
+    SimulatedPlanner,
+    StragglerTuner,
+    TunerConfig,
+    simulate_sojourn,
+    sweep_sojourn,
+)
+from repro.serving import (
+    DeterministicArrivals,
+    EventDrivenMaster,
+    MMPPArrivals,
+    PoissonArrivals,
+    QueuePolicy,
+    ReplicatedServingEngine,
+    Request,
+    ServeEngineConfig,
+    TraceArrivals,
+    make_arrivals,
+    partition_requests,
+)
+
+# the Fig. 2-style SExp fleet used by the acceptance demonstration
+N_FLEET = 16
+FLEET_DIST = ShiftedExponential(delta=0.02, mu=2.0)
+
+
+# -- arrival processes --------------------------------------------------------
+
+def test_poisson_arrivals_rate_and_order():
+    rng = np.random.default_rng(0)
+    t = PoissonArrivals(rate=5.0).sample(rng, 20_000, start=3.0)
+    assert t[0] >= 3.0
+    assert (np.diff(t) > 0).all()
+    assert 20_000 / (t[-1] - 3.0) == pytest.approx(5.0, rel=0.05)
+
+
+def test_deterministic_arrivals_spacing():
+    rng = np.random.default_rng(0)
+    t = DeterministicArrivals(rate=4.0).sample(rng, 8, start=1.0)
+    np.testing.assert_allclose(np.diff(t), 0.25)
+    assert t[0] == pytest.approx(1.25)
+
+
+def test_mmpp_mean_rate_pinned_but_burstier_than_poisson():
+    rng = np.random.default_rng(1)
+    mmpp = MMPPArrivals(rate=5.0, burstiness=8.0, burst_fraction=0.2,
+                        mean_cycle=20.0)
+    t = mmpp.sample(rng, 40_000)
+    assert 40_000 / t[-1] == pytest.approx(5.0, rel=0.1)
+    # burstiness: count variance over windows far exceeds Poisson (= mean)
+    window = 4.0
+    counts = np.bincount((t / window).astype(int))
+    assert counts.var() > 2.0 * counts.mean()
+
+
+def test_trace_arrivals_replay_and_cycle():
+    rng = np.random.default_rng(0)
+    tr = TraceArrivals(offsets=(0.0, 1.0, 3.0))
+    t = tr.sample(rng, 7, start=10.0)
+    assert t[0] == pytest.approx(10.0)
+    np.testing.assert_allclose(t[:3] - 10.0, [0.0, 1.0, 3.0])
+    assert (np.diff(t) > 0).all()  # laps stay strictly ordered
+    assert tr.mean_rate() == pytest.approx(2 / 3.0)
+
+
+def test_make_arrivals_factory_and_validation():
+    assert isinstance(make_arrivals("poisson", 2.0), PoissonArrivals)
+    assert isinstance(make_arrivals("mmpp", 2.0), MMPPArrivals)
+    with pytest.raises(ValueError):
+        make_arrivals("warp", 2.0)
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate=-1.0)
+    with pytest.raises(ValueError):
+        MMPPArrivals(rate=1.0, burstiness=0.5)
+
+
+# -- batch partition (the legacy serve_round drop bug) ------------------------
+
+def test_partition_requests_last_batch_absorbs_remainder():
+    # the legacy engine served only b * (n // b) requests: n=10, B=4 dropped
+    # requests 8 and 9.  The last slice must absorb them.
+    slices = partition_requests(10, 4)
+    assert slices == [(0, 2), (2, 4), (4, 6), (6, 10)]
+    covered = [i for lo, hi in slices for i in range(lo, hi)]
+    assert covered == list(range(10))
+
+
+def test_partition_requests_divisible_matches_legacy_layout():
+    assert partition_requests(8, 4) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+
+
+def test_partition_requests_fewer_than_batches():
+    slices = partition_requests(3, 4)
+    assert slices == [(0, 1), (1, 2), (2, 3), (3, 3)]  # trailing empty slice
+
+
+# -- event-driven master ------------------------------------------------------
+
+def _requests(arrivals, priority=None):
+    return [
+        Request(request_id=i, arrival=float(a),
+                priority=0.0 if priority is None else priority[i])
+        for i, a in enumerate(arrivals)
+    ]
+
+
+def test_synchronized_round_is_maxmin_rule():
+    """Pre-formed batches on idle sets: completion = min over replicas, the
+    paper's rule with zero queueing."""
+    times = np.array([[3.0, 1.0], [2.0, 5.0]])
+    master = EventDrivenMaster(2, service_sampler=None, clock=10.0)
+    jobs = [
+        master.submit_formed(_requests([10.0, 10.0]), at=10.0,
+                             service_times=times[i])
+        for i in range(2)
+    ]
+    master.run()
+    assert jobs[0].completed == 11.0 and jobs[0].winner == 1
+    assert jobs[1].completed == 12.0 and jobs[1].winner == 0
+    assert master.clock == 12.0
+    for job in jobs:
+        for req in job.requests:
+            assert req.dispatched == 10.0
+            assert req.completion == job.completed
+
+
+def test_fifo_queueing_second_job_waits():
+    """One replica-set, two batches: the second sojourn includes the first's
+    service (queue wait), the event clock advances monotonically."""
+    svc = iter([np.array([2.0]), np.array([3.0])])
+    master = EventDrivenMaster(
+        1, service_sampler=lambda job, g: next(svc),
+        policy=QueuePolicy(max_batch_size=1),
+    )
+    for r in _requests([0.0, 0.5]):
+        master.submit(r)
+    jobs = master.run()
+    assert jobs[0].completed == 2.0
+    assert jobs[1].dispatched == 2.0  # waited for the set to free
+    assert jobs[1].completed == 5.0
+    assert jobs[1].requests[0].sojourn == pytest.approx(4.5)
+    assert jobs[1].requests[0].queue_wait == pytest.approx(1.5)
+
+
+def test_batch_forms_at_max_size_or_max_wait():
+    calls = []
+
+    def sampler(job, g):
+        calls.append(job.size)
+        return np.array([0.1])
+
+    master = EventDrivenMaster(
+        4, sampler, policy=QueuePolicy(max_batch_size=3, max_wait=1.0)
+    )
+    # three quick arrivals -> size-3 batch at once; one straggling request
+    # -> flushed by its max_wait deadline as a size-1 batch
+    for r in _requests([0.0, 0.1, 0.2, 5.0]):
+        master.submit(r)
+    jobs = master.run()
+    assert calls == [3, 1]
+    assert jobs[0].formed_at == pytest.approx(0.2)
+    assert jobs[1].formed_at == pytest.approx(6.0)  # 5.0 + max_wait
+
+
+def test_leftover_queue_flushed_at_stream_end():
+    master = EventDrivenMaster(
+        2, lambda job, g: np.array([0.5]),
+        policy=QueuePolicy(max_batch_size=4),  # max_wait = inf
+    )
+    for r in _requests([0.0, 0.1]):  # never reaches max_batch_size
+        master.submit(r)
+    jobs = master.run()
+    assert len(jobs) == 1 and jobs[0].size == 2  # nothing dropped
+
+
+def test_priority_discipline_overtakes_fifo():
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=1, discipline="priority"),
+    )
+    # all queued behind a busy set; the high-priority late request forms the
+    # next batch ahead of earlier low-priority ones
+    for r in _requests([0.0, 0.1, 0.2], priority=[0.0, 0.0, 5.0]):
+        master.submit(r)
+    jobs = master.run()
+    served_order = [job.requests[0].request_id for job in jobs]
+    assert served_order == [0, 2, 1]
+
+
+def test_first_replica_wins_telemetry():
+    times = np.array([4.0, 0.5, 2.0])
+    master = EventDrivenMaster(1, None)
+    job = master.submit_formed(_requests([0.0]), at=0.0, service_times=times)
+    master.run()
+    assert job.winner == 1
+    np.testing.assert_array_equal(job.used_mask(), [False, True, False])
+    assert job.service == pytest.approx(0.5)
+
+
+def test_reconfigure_drains_then_swaps():
+    reconfigured = []
+
+    def on_complete(job):
+        if job.batch_id == 0:
+            return {"n_groups": 3}
+        reconfigured.append(master.n_groups)
+        return None
+
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=1), on_job_complete=on_complete,
+    )
+    for r in _requests([0.0, 0.1, 0.2]):
+        master.submit(r)
+    jobs = master.run()
+    assert len(jobs) == 3
+    assert master.reconfigurations == 1
+    assert reconfigured == [3, 3]  # later jobs saw the swapped fabric
+    # jobs 2 and 3 dispatched together on the widened fabric after drain
+    assert jobs[1].dispatched == jobs[2].dispatched == jobs[0].completed
+
+
+# -- sojourn simulator --------------------------------------------------------
+
+def test_mm1_mean_sojourn_closed_form():
+    """N=1, B=1, Exp service: M/M/1 with E[sojourn] = 1/(mu - lambda)."""
+    sim = simulate_sojourn(
+        Exponential(mu=2.0), 1, 1, arrival_rate=1.0, n_jobs=60_000, seed=0
+    )
+    assert sim.mean == pytest.approx(1.0, rel=0.08)
+
+
+def test_zero_load_sojourn_is_pure_service():
+    """Vanishing arrival rate: no queueing, sojourn = min of r replicas'
+    service = SExp(load*delta, r*mu/load)."""
+    n, b = 8, 2  # r = 4
+    dist = ShiftedExponential(delta=0.3, mu=1.5)
+    sim = simulate_sojourn(
+        dist, n, b, arrival_rate=1e-4, n_jobs=8_000, seed=1
+    )
+    expected = 0.3 + 1.0 / (4 * 1.5)
+    assert sim.mean == pytest.approx(expected, rel=0.05)
+
+
+def test_sojourn_increases_with_load():
+    means = [
+        simulate_sojourn(
+            FLEET_DIST, N_FLEET, 4, arrival_rate=lam, n_jobs=4_000, seed=2
+        ).mean
+        for lam in (2.0, 10.0, 20.0)
+    ]
+    assert means[0] < means[1] < means[2]
+
+
+def test_sweep_sojourn_cells_bit_identical_to_single_sim():
+    lam = 8.0
+    sweep = sweep_sojourn(
+        FLEET_DIST, N_FLEET, arrival_rate=lam, n_jobs=2_000, seed=5
+    )
+    for i, b in enumerate(sweep.splits):
+        single = simulate_sojourn(
+            FLEET_DIST, N_FLEET, b, arrival_rate=lam, n_jobs=2_000, seed=5
+        )
+        np.testing.assert_array_equal(sweep.samples[0, i], single.samples)
+
+
+def test_sojourn_validation():
+    with pytest.raises(ValueError):
+        simulate_sojourn(FLEET_DIST, 16, 3, arrival_rate=1.0)  # B !| N
+    with pytest.raises(ValueError):
+        simulate_sojourn(FLEET_DIST, 16, 4, arrival_rate=-1.0)
+    with pytest.raises(ValueError):
+        simulate_sojourn(FLEET_DIST, 16, 4, arrival_rate=1.0, n_jobs=100,
+                         warmup=100)
+
+
+# -- load-aware planner objectives --------------------------------------------
+
+def test_objective_load_validation():
+    with pytest.raises(ValueError):
+        Objective(arrival_rate=1.0, utilization=0.5)  # mutually exclusive
+    with pytest.raises(ValueError):
+        Objective(utilization=1.5)
+    with pytest.raises(ValueError):
+        Objective(arrival_rate=0.0)
+    with pytest.raises(ValueError):
+        Objective(job_load=0.0)
+    assert not Objective(metric="p99").load_aware
+    assert Objective(utilization=0.5).load_aware
+
+
+def test_objective_offered_rate_conversion():
+    spec = ClusterSpec(n_workers=N_FLEET, dist=FLEET_DIST)
+    obj = Objective(utilization=0.7)
+    # capacity anchor: N / E[service of one unit-load job on one group]
+    assert obj.offered_rate(spec) == pytest.approx(
+        0.7 * N_FLEET / (0.02 + 0.5)
+    )
+    assert Objective(arrival_rate=3.0).offered_rate(spec) == 3.0
+
+
+def test_analytic_planner_rejects_load_aware():
+    spec = ClusterSpec(n_workers=N_FLEET, dist=FLEET_DIST)
+    with pytest.raises(ValueError, match="load-aware"):
+        AnalyticPlanner().plan(spec, Objective(metric="p99", utilization=0.7))
+
+
+def test_load_free_objective_unchanged_by_new_fields():
+    """Batch-completion planning is byte-identical to the pre-queueing path."""
+    spec = ClusterSpec(n_workers=N_FLEET, dist=FLEET_DIST)
+    a = SimulatedPlanner(n_trials=2_000, seed=0).plan(spec, Objective(metric="p99"))
+    b = SimulatedPlanner(n_trials=2_000, seed=0).plan(spec, Objective(metric="p99"))
+    assert a.n_batches == b.n_batches
+    assert a.predicted == b.predicted
+
+
+# -- the acceptance demonstration --------------------------------------------
+# At utilization ~0.7 (Poisson arrivals) on the Fig. 2-style SExp fleet, the
+# load-aware p99 objective must pick a B whose MEASURED sojourn p99 in the
+# event-driven engine beats both the batch-completion-optimal B and the
+# no-replication baseline (B = N, r = 1).
+
+def _engine_p99(n_batches: int, n_requests: int = 3_000) -> float:
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=N_FLEET, n_batches=n_batches, batch_size=4,
+        prompt_len=16, gen_tokens=8, delta=0.02, mu=2.0,
+        utilization=0.7, execute_model=False, seed=42,
+    ))
+    return eng.run_load(n_requests=n_requests)["p99_sojourn"]
+
+
+def test_load_aware_plan_beats_batch_optimal_and_no_replication():
+    spec = ClusterSpec(n_workers=N_FLEET, dist=FLEET_DIST)
+    planner = SimulatedPlanner(n_trials=6_000, seed=0)
+    batch_b = planner.plan(spec, Objective(metric="p99")).n_batches
+    load_b = planner.plan(
+        spec, Objective(metric="p99", utilization=0.7)
+    ).n_batches
+    # pinned picks: near-exponential SExp favors full diversity per batch
+    # completion (Thm 2), but under load B=1 is past saturation
+    assert batch_b == 1
+    assert load_b == 4
+    assert load_b not in (batch_b, N_FLEET)
+
+    p99 = {b: _engine_p99(b) for b in (batch_b, load_b, N_FLEET)}
+    assert p99[load_b] < p99[batch_b]
+    assert p99[load_b] < p99[N_FLEET]
+
+
+# -- engine: shim parity + event mode ----------------------------------------
+
+def _shim_config(**kw):
+    base = dict(n_server_groups=8, n_batches=4, batch_size=2, prompt_len=8,
+                gen_tokens=4, execute_model=False, seed=3)
+    base.update(kw)
+    return ServeEngineConfig(**base)
+
+
+def test_serve_round_shim_reproduces_legacy_latencies_bit_for_bit():
+    """rates=ones, zero queueing, one synchronized round: the event-loop
+    shim must equal the legacy lock-step engine draw-for-draw."""
+    eng = ReplicatedServingEngine(_shim_config())
+    stats = eng.serve_round()
+    # the legacy engine's exact computation, replayed on a fresh rng
+    sc = eng.sc
+    rng = np.random.default_rng(sc.seed + 1)
+    b, r = 4, 2
+    n = b * sc.batch_size
+    per_batch = n // b
+    work = per_batch * (sc.prompt_len + sc.gen_tokens) / 100.0
+    times = ShiftedExponential(sc.delta, sc.mu).scaled(work).sample(rng, (b, r))
+    batch_done = times.min(axis=1)
+    legacy = [float(batch_done[i // per_batch]) for i in range(n)]
+    got = [s.latency for s in sorted(stats, key=lambda s: s.request_id)]
+    assert got == legacy  # bit-for-bit, not approx
+    assert eng.clock == float(batch_done.max())
+
+
+def test_serve_round_remainder_not_dropped():
+    """Regression: n_requests=10, B=4 must serve ALL 10 requests (the legacy
+    engine silently served only 8)."""
+    eng = ReplicatedServingEngine(_shim_config())
+    stats = eng.serve_round(n_requests=10)
+    assert len(stats) == 10
+    assert sorted(s.request_id for s in stats) == list(range(10))
+    # the remainder rides with the LAST batch: same completion time
+    last = [s for s in stats if s.request_id >= 6]
+    assert len({s.completion for s in last}) == 1
+    assert all(np.isfinite(s.latency) and s.latency > 0 for s in stats)
+
+
+def test_serve_round_ids_continue_across_rounds():
+    eng = ReplicatedServingEngine(_shim_config())
+    eng.serve_round(n_requests=10)
+    stats = eng.serve_round(n_requests=10)
+    assert sorted(s.request_id for s in stats) == list(range(10, 20))
+
+
+def test_event_mode_serves_all_requests_with_queueing():
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=N_FLEET, n_batches=4, batch_size=4, delta=0.02,
+        mu=2.0, utilization=0.7, execute_model=False, seed=0,
+    ))
+    out = eng.run_load(n_requests=1_000)
+    assert out["requests"] == 1_000
+    assert out["mean_queue_wait"] > 0  # real queueing happened
+    assert out["p50_sojourn"] <= out["p99_sojourn"] <= out["p999_sojourn"]
+    stats = out["stats"]
+    assert all(np.isfinite(s.completion) for s in stats)
+    assert all(s.completion >= s.dispatched >= s.arrival for s in stats)
+
+
+def test_event_mode_respects_custom_arrivals_and_discipline():
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=8, n_batches=2, batch_size=2, delta=0.02, mu=2.0,
+        queue_discipline="priority", max_wait=0.5, execute_model=False,
+        seed=0,
+    ))
+    stats = eng.serve(200, arrivals=DeterministicArrivals(rate=5.0))
+    assert len(stats) == 200
+
+
+def test_event_mode_tuner_replans_from_sojourn_telemetry():
+    """Under heavy load, a B=N start must move off no-replication, the
+    re-plan objective must carry the OBSERVED arrival rate, and the final B
+    must serve the tail better than staying put."""
+    sc = ServeEngineConfig(
+        n_server_groups=N_FLEET, n_batches=N_FLEET, batch_size=4,
+        prompt_len=16, gen_tokens=8, delta=0.02, mu=2.0, utilization=0.7,
+        execute_model=False, seed=2, tuner=True, metric="p99",
+        planner_mode="simulate",
+    )
+    eng = ReplicatedServingEngine(sc)
+    out = eng.run_load(n_requests=4_000)
+    assert out["final_B"] < N_FLEET
+    plan = eng.tuner.last_plan
+    assert plan is not None and plan.objective.load_aware
+    true_batch_rate = eng.objective.offered_rate(eng.cluster_spec)
+    assert plan.objective.arrival_rate == pytest.approx(
+        true_batch_rate, rel=0.25
+    )
+    # the adapted tail beats the static no-replication baseline
+    static = ReplicatedServingEngine(
+        dataclasses.replace(sc, tuner=False)
+    ).run_load(n_requests=4_000)
+    tail = sorted(out["stats"], key=lambda s: s.request_id)[2_000:]
+    tail_p99 = float(np.quantile([s.latency for s in tail], 0.99))
+    assert tail_p99 < static["p99_sojourn"]
+
+
+def test_plan_initial_load_aware_picks_interior_b():
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=N_FLEET, batch_size=4, delta=0.02, mu=2.0,
+        utilization=0.7, metric="p99", planner_mode="simulate",
+        plan_initial=True, execute_model=False, seed=0,
+    ))
+    assert 1 < eng.plan.n_batches < N_FLEET
+
+
+def test_event_mode_needs_a_load_spec():
+    eng = ReplicatedServingEngine(_shim_config())
+    with pytest.raises(ValueError, match="arrival_rate"):
+        eng.serve(10)
+
+
+def test_config_rejects_ambiguous_load_spec():
+    with pytest.raises(ValueError, match="not both"):
+        ReplicatedServingEngine(
+            _shim_config(arrival_rate=10.0, utilization=0.7)
+        )
+
+
+def test_serve_round_remainder_priced_for_its_true_size():
+    """The remainder-absorbing last batch is charged its REAL work: its
+    latency scales up from the same draws by (actual size / per_batch)."""
+    eng = ReplicatedServingEngine(_shim_config())
+    stats = eng.serve_round(n_requests=10)  # B=4, per_batch=2, last size 4
+    sc = eng.sc
+    rng = np.random.default_rng(sc.seed + 1)
+    work = 2 * (sc.prompt_len + sc.gen_tokens) / 100.0
+    times = ShiftedExponential(sc.delta, sc.mu).scaled(work).sample(rng, (4, 2))
+    times[3] *= 2.0  # 4 requests on a batch priced for 2
+    by_id = {s.request_id: s for s in stats}
+    assert by_id[0].latency == float(times[0].min())
+    assert by_id[9].latency == float(times[3].min())
+
+
+def test_drained_jobs_still_report_completion():
+    """Jobs finishing while a re-plan drain is pending must still fire
+    on_job_complete (model work + telemetry would otherwise vanish)."""
+    seen = []
+
+    def on_complete(job):
+        seen.append(job.batch_id)
+        return {"n_groups": 1} if job.batch_id == 0 else None
+
+    master = EventDrivenMaster(
+        2, lambda job, g: np.array([1.0 if job.batch_id == 0 else 5.0]),
+        policy=QueuePolicy(max_batch_size=1), on_job_complete=on_complete,
+    )
+    # both dispatch immediately; job 0 completes first and requests a
+    # reconfig, job 1 departs DURING the drain
+    for r in _requests([0.0, 0.0]):
+        master.submit(r)
+    jobs = master.run()
+    assert len(jobs) == 2
+    assert seen == [0, 1]
+    assert master.reconfigurations == 1
+
+
+# -- tuner telemetry plumbing -------------------------------------------------
+
+def test_tuner_observe_load_and_sojourn_windows():
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=8, n_batches=4),
+        TunerConfig(min_samples=8, cooldown_steps=0, mode="simulate"),
+    )
+    assert tuner.observed_arrival_rate is None
+    tuner.observe_load(2.0)
+    tuner.observe_load(4.0)
+    tuner.observe_load(math.inf)  # ignored
+    assert tuner.observed_arrival_rate == pytest.approx(3.0)
+    assert tuner.observed_sojourn("p99") is None
+    tuner.observe_sojourn(np.linspace(1.0, 2.0, 100))
+    assert tuner.observed_sojourn("mean") == pytest.approx(1.5)
+    assert tuner.observed_sojourn("p99") == pytest.approx(1.99, abs=0.02)
+    # load flows into the objective only for load-capable planners
+    assert tuner.planner.consumes_load
+    assert tuner.objective().arrival_rate == pytest.approx(3.0)
+    analytic = StragglerTuner(
+        ReplicationPlan(n_data=8, n_batches=4), TunerConfig()
+    )
+    analytic.observe_load(2.0)
+    assert not analytic.objective().load_aware
+
+
+def test_forced_move_bypasses_observed_sojourn_hysteresis():
+    """A current B that is infeasible under batch_divisor forces the move
+    even when the observed-sojourn baseline would never clear hysteresis."""
+    rng = np.random.default_rng(0)
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=12, n_batches=3),  # 3 does not divide 8
+        TunerConfig(min_samples=16, cooldown_steps=0, mode="simulate",
+                    improvement_threshold=0.5, sim_trials=500),
+        batch_divisor=8,
+    )
+    tuner.observe_load(4.0)  # load-aware objective
+    for _ in range(8):
+        tuner.observe(FLEET_DIST.sample(rng, 12))
+        # observed sojourns far BELOW any prediction: a non-forced move
+        # could never clear the 50% threshold against this baseline
+        tuner.observe_sojourn(np.full(8, 1e-6))
+    rp = tuner.maybe_replan()
+    assert rp is not None
+    assert rp.new_batches in (1, 2, 4)
+    assert rp.predicted_old == math.inf

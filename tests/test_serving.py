@@ -1,9 +1,18 @@
-"""Replicated serving engine + serve driver."""
+"""Replicated serving engine (event-driven + serve_round shim) + serve driver.
+
+Model-free subsystem behavior (queueing, arrivals, shim bit-parity, the
+load-aware acceptance demonstration) lives in the FAST tests/test_queueing.py;
+this module exercises the paths that run real prefill/decode.
+"""
 
 import numpy as np
 import pytest
 
-from repro.serving import ReplicatedServingEngine, ServeEngineConfig
+from repro.serving import (
+    PoissonArrivals,
+    ReplicatedServingEngine,
+    ServeEngineConfig,
+)
 
 # serving sweeps + compiles, ~6 min; deselected from tier-1 (see pytest.ini), run with -m slow
 pytestmark = pytest.mark.slow
@@ -63,6 +72,35 @@ def test_tuner_adapts_B_online():
     assert out["final_B"] < 8
 
 
+def test_serve_round_remainder_generates_all_tokens():
+    """Regression (with real model work): n_requests % B != 0 used to drop
+    the tail; every request must come back with generated tokens."""
+    eng = ReplicatedServingEngine(
+        ServeEngineConfig(n_server_groups=8, n_batches=4, gen_tokens=4,
+                          prompt_len=8, batch_size=2)
+    )
+    stats = eng.serve_round(n_requests=10)
+    assert len(stats) == 10
+    for s in stats:
+        assert s.tokens.shape == (4,)
+        assert (s.tokens >= 0).all()
+
+
+def test_event_mode_generates_real_tokens():
+    """The event-driven path drives prefill/decode off the event clock: every
+    queued-and-served request gets real tokens and a finite sojourn."""
+    eng = ReplicatedServingEngine(
+        ServeEngineConfig(n_server_groups=8, n_batches=4, gen_tokens=4,
+                          prompt_len=8, batch_size=2, seed=1)
+    )
+    stats = eng.serve(6, arrivals=PoissonArrivals(rate=50.0))
+    assert len(stats) == 6
+    for s in stats:
+        assert s.tokens.shape == (4,)
+        assert np.isfinite(s.latency) and s.latency > 0
+        assert s.completion >= s.dispatched >= s.arrival
+
+
 def test_serve_driver_runs():
     from repro.launch.serve import ServeConfig, run_serving
 
@@ -70,3 +108,5 @@ def test_serve_driver_runs():
                                   gen_tokens=4, max_len=32))
     assert out["generated"].shape == (2, 4)
     assert out["latency_by_B"][1]["p99"] > 0
+    assert out["sojourn_by_B"][1]["p999"] >= out["sojourn_by_B"][1]["p99"] > 0
+    assert out["sojourn_best_B"] in out["sojourn_by_B"]

@@ -8,14 +8,18 @@ from repro.core import (
     Exponential,
     ReplicationPlan,
     ShiftedExponential,
+    StepTimeSimulator,
     StragglerTuner,
     TunerConfig,
+    censored_observations,
+    completion_from_step_times,
     completion_mean,
     continuous_optimum,
     fit_best,
     fit_exponential,
     fit_shifted_exponential,
     optimize,
+    replica_major_nonoverlapping,
     sweep,
 )
 from repro.core.policies import divisors
@@ -109,6 +113,38 @@ def test_fit_best_model_selection():
     assert isinstance(fit_best(x_exp).dist, Exponential)
     x_sexp = ShiftedExponential(delta=1.0, mu=2.0).sample(rng, 5_000)
     assert isinstance(fit_best(x_sexp).dist, ShiftedExponential)
+
+
+def test_censored_replica_telemetry_does_not_bias_fit():
+    """The serving/training telemetry path: unused replicas are cancelled at
+    their batch's first response and observed CENSORED at that time
+    (core.censored_observations).  Fitting through the tuner must recover
+    the StepTimeSimulator's ground-truth distribution, where the naive
+    winners-only fit is badly biased fast (winners are minima of r draws)."""
+    dist = ShiftedExponential(delta=0.3, mu=1.5)
+    n, b = 16, 4  # r = 4: 3 of 4 replicas per batch are cancelled
+    assignment = replica_major_nonoverlapping(n, b)
+    sim = StepTimeSimulator(dist, n, seed=0)
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=n, n_batches=b),
+        TunerConfig(window_steps=400, min_samples=64, cooldown_steps=0),
+    )
+    winners = []
+    for _ in range(300):
+        times = sim.next_step()
+        _, used = completion_from_step_times(times, assignment)
+        observed, censored = censored_observations(times, assignment, used)
+        tuner.observe(observed, censored=censored)
+        winners.append(times[used])
+    fit = tuner.fit()
+    assert fit is not None
+    assert fit.n_censored == 300 * (n - b)
+    assert fit.dist.delta == pytest.approx(0.3, abs=0.05)
+    assert fit.dist.mu == pytest.approx(1.5, rel=0.15)
+    # dropping the censored draws keeps only each batch's FASTEST replica:
+    # min-of-4 statistics masquerading as service times -> mu biased high
+    naive = fit_best(np.concatenate(winners))
+    assert naive.dist.mu > 2.5 * 1.5
 
 
 def test_fit_rejects_bad_input():

@@ -89,6 +89,44 @@ def test_tuner_replans_during_training():
     assert res.final_plan.n_batches < 8
 
 
+def test_shrink_sheds_slowest_worker_rate_aware():
+    """Operator shrink feeds LIVE tuner rates into RescaleExecutor.shrink:
+    the observed-slowest worker is shed, not an arbitrary id."""
+    tc = _tc(steps=12, slow_workers={2: 20.0}, planner_mode="simulate",
+             planner_heterogeneous=True)
+    tr = Trainer(tc)
+    for i in range(12):  # accumulate a clean telemetry window
+        tr.step(i)
+    rates = tr._live_rates()
+    assert rates is not None and np.argmin(rates) == 2
+    topo = tr.shrink(1)
+    assert topo.dropped_workers == (2,)
+    assert topo.plan.n_data == 7
+    assert tr.plan.n_data == 7
+    assert topo.generation == 1
+    # runtime rebuilt around the survivors: training continues
+    loss, completion, decision = tr.step(12)
+    assert np.isfinite(loss) and np.isfinite(completion)
+
+
+def test_recovery_feeds_live_rates_and_bumps_topology():
+    """Whole-group loss re-plans through plan_recovery with the tuner's
+    live worker rates (rate-aware survivors placement) and records the
+    rescale on the RescaleExecutor topology."""
+    faults = (
+        FaultEvent(worker=1, start_step=6, end_step=10**9),
+        FaultEvent(worker=5, start_step=6, end_step=10**9),
+    )
+    tc = _tc(steps=14, faults=faults, planner_mode="simulate",
+             planner_heterogeneous=True)
+    tr = Trainer(tc)
+    res = tr.run()
+    assert any("replan" in e for e in res.events)
+    assert tr.rescaler.topology.generation >= 1
+    assert tr.rescaler.topology.plan.n_data < 8
+    assert res.final_plan.n_data < 8
+
+
 def test_compressed_training_tracks_uncompressed():
     rc = Trainer(_tc(steps=15, grad_compression=True)).run()
     ru = Trainer(_tc(steps=15)).run()
