@@ -46,6 +46,7 @@ from .replication import (
 from .simulator import (
     FaultEvent,
     SimResult,
+    SpeculativeSweepResult,
     StepTimeSimulator,
     SweepSimResult,
     censored_observations,
@@ -56,6 +57,7 @@ from .simulator import (
     simulate_sojourn,
     sweep_simulate,
     sweep_sojourn,
+    sweep_sojourn_speculative,
 )
 from .spectrum import (
     METRICS,

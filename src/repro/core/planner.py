@@ -95,6 +95,26 @@ __all__ = [
 _CLOSED_FORM_MAX_BATCHES = 16
 
 
+def _best_speculative_point(
+    n_batches: int,
+    replication: int,
+    sample_sets: Sequence[np.ndarray],
+    quantiles: Sequence[Optional[float]],
+    metric: Metric,
+) -> tuple[SpectrumPoint, Optional[float]]:
+    """Pick one B's best clone trigger: build a SpectrumPoint per candidate
+    sample set (one per trigger, None = plain replication) and return the
+    (point, trigger) minimizing the objective metric."""
+    candidates = [
+        point_from_samples(n_batches, replication, s) for s in sample_sets
+    ]
+    best = min(
+        range(len(candidates)),
+        key=lambda qi: metric_value(candidates[qi], metric),
+    )
+    return candidates[best], quantiles[best]
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Everything the control plane knows about the fleet.
@@ -111,6 +131,11 @@ class ClusterSpec:
                           batch size, so every data batch has integer rows).
     * ``max_batches``   — if set, B may not exceed it (e.g. "never exceed the
                           pre-fault B" during recovery).
+
+    >>> spec = ClusterSpec(n_workers=16, dist=ShiftedExponential(0.5, 2.0),
+    ...                    batch_divisor=8)
+    >>> spec.feasible_batches()
+    (1, 2, 4, 8)
     """
 
     n_workers: int
@@ -228,6 +253,20 @@ class Objective:
     ``job_load`` is the units of data one batch-job carries (constant in B:
     a serving batch is ``max_batch_size`` requests no matter how the fleet
     is factored).  Only simulated planners can score load-aware objectives.
+
+    **Speculative re-dispatch.**  ``speculation_quantiles`` (load-aware
+    objectives only) asks the simulated planners to also score each
+    candidate B WITH a clone-attack trigger at each listed late-quantile —
+    a job whose first response is later than that quantile of its service
+    distribution grabs an idle replica-set for one speculative clone
+    (:func:`~repro.core.simulator.sweep_sojourn_speculative`).  The plan
+    then carries the winning trigger as
+    :attr:`Plan.speculation_quantile` (``None`` when plain replication won).
+
+    >>> Objective(metric="p99", utilization=0.7).load_aware
+    True
+    >>> Objective(metric="mean").load_aware
+    False
     """
 
     metric: Metric = "mean"
@@ -236,6 +275,7 @@ class Objective:
     arrival_rate: Optional[float] = None
     utilization: Optional[float] = None
     job_load: float = 1.0
+    speculation_quantiles: Optional[tuple[float, ...]] = None
 
     def __post_init__(self):
         if self.metric not in METRICS:
@@ -266,6 +306,27 @@ class Objective:
             )
         if not self.job_load > 0:
             raise ValueError(f"job_load must be positive, got {self.job_load}")
+        if self.speculation_quantiles is not None:
+            object.__setattr__(
+                self,
+                "speculation_quantiles",
+                tuple(float(q) for q in self.speculation_quantiles),
+            )
+            if not self.speculation_quantiles:
+                raise ValueError(
+                    "speculation_quantiles must be non-empty when given"
+                )
+            for q in self.speculation_quantiles:
+                if not 0.0 < q < 1.0:
+                    raise ValueError(
+                        f"speculation quantiles must be in (0, 1), got {q}"
+                    )
+            if not self.load_aware:
+                raise ValueError(
+                    "speculation_quantiles needs a load-aware objective "
+                    "(arrival_rate or utilization): speculation is scored "
+                    "on sojourn under queueing"
+                )
 
     @property
     def load_aware(self) -> bool:
@@ -290,7 +351,13 @@ class Objective:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """The planner's decision: factoring + placement + predicted metrics."""
+    """The planner's decision: factoring + placement + predicted metrics.
+
+    ``speculation_quantile`` is the late-quantile clone trigger the planner
+    chose for the emitted B (only when the Objective offered
+    ``speculation_quantiles``); ``None`` means plain replication scored
+    best and the serving engine should not speculate.
+    """
 
     spec: ClusterSpec
     objective: Objective
@@ -300,6 +367,7 @@ class Plan:
     spectrum: SpectrumResult
     planner: str  # name of the Planner that produced this
     closed_form_mean: Optional[float] = None  # hetero closed-form companion
+    speculation_quantile: Optional[float] = None  # chosen clone trigger
 
     @property
     def n_workers(self) -> int:
@@ -335,6 +403,12 @@ class Planner:
 
     Subclasses implement :meth:`sweep_spectrum`; selection (argmin of the
     objective metric over feasible B) and placement are shared here.
+
+    >>> from repro.core import ClusterSpec, Objective, ShiftedExponential
+    >>> spec = ClusterSpec(n_workers=16, dist=ShiftedExponential(0.5, 2.0))
+    >>> plan = AnalyticPlanner().plan(spec, Objective(metric="mean"))
+    >>> plan.n_batches in spec.feasible_batches()
+    True
     """
 
     name = "planner"
@@ -373,9 +447,16 @@ class Planner:
             spec.dist, spec.n_workers, assignment.worker_batch, spec.rates
         )
 
+    def _speculation_for(self, n_batches: int) -> Optional[float]:
+        """The clone trigger chosen for ``n_batches`` by the last sweep
+        (None unless a speculative sweep ran and speculation won there)."""
+        return None
+
     def plan(
         self, spec: ClusterSpec, objective: Optional[Objective] = None
     ) -> Plan:
+        """Sweep feasible B under ``objective``, pick the argmin, and emit
+        the full decision (factoring + placement + predictions)."""
         objective = objective if objective is not None else Objective()
         spectrum = self.sweep_spectrum(spec, objective)
         best = spectrum.best(objective.metric)
@@ -391,11 +472,20 @@ class Planner:
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
+            speculation_quantile=self._speculation_for(best.n_batches),
         )
 
 
 class AnalyticPlanner(Planner):
-    """Closed-form sweep (Thms 2-4): homogeneous Exp/SExp fleets only."""
+    """Closed-form sweep (Thms 2-4): homogeneous Exp/SExp fleets only.
+
+    Microsecond re-plans, but no heterogeneous rates and no queueing:
+    load-aware objectives (and therefore speculation) are rejected.
+
+    >>> spec = ClusterSpec(n_workers=16, dist=Exponential(mu=2.0))
+    >>> AnalyticPlanner().plan(spec, Objective(metric="mean")).n_batches
+    1
+    """
 
     name = "analytic"
 
@@ -424,6 +514,12 @@ class SimulatedPlanner(Planner):
     than independent simulations.  Per-worker ``rates`` on the spec are NOT
     fed into the prediction (that is :class:`HeterogeneousPlanner`'s job);
     placement still honours them via the shared ``assignment_for``.
+
+    >>> spec = ClusterSpec(n_workers=16, dist=ShiftedExponential(0.5, 2.0))
+    >>> plan = SimulatedPlanner(n_trials=2_000, seed=0).plan(
+    ...     spec, Objective(metric="p99", utilization=0.7))
+    >>> plan.n_batches in spec.feasible_batches()
+    True
     """
 
     n_trials: int = 20_000
@@ -436,14 +532,53 @@ class SimulatedPlanner(Planner):
     def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
         return None
 
+    def _speculation_for(self, n_batches: int) -> Optional[float]:
+        return getattr(self, "_spec_q_by_b", {}).get(n_batches)
+
     def _sweep_sojourn(
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
         """Queueing-aware mode: score every candidate B by simulated sojourn
         (queue wait + service) at the objective's offered load, from ONE
-        shared CRN draw matrix + arrival sequence (simulator.sweep_sojourn)."""
-        from .simulator import sweep_sojourn  # local: avoid import cycle
+        shared CRN draw matrix + arrival sequence (simulator.sweep_sojourn).
 
+        With ``objective.speculation_quantiles`` the candidates become
+        (B, clone-trigger) pairs — every B is also scored with a speculative
+        clone at each listed late-quantile (plus the no-speculation
+        baseline), each B keeps its best trigger, and the winners are
+        recorded for :attr:`Plan.speculation_quantile`."""
+        from .simulator import (  # local: avoid import cycle
+            sweep_sojourn,
+            sweep_sojourn_speculative,
+        )
+
+        if objective.speculation_quantiles:
+            quantiles = (None, *objective.speculation_quantiles)
+            res = sweep_sojourn_speculative(
+                spec.dist,
+                spec.n_workers,
+                arrival_rate=objective.offered_rate(spec),
+                quantiles=quantiles,
+                n_jobs=self.n_trials,
+                seed=self.seed,
+                feasible_b=spec.feasible_batches(),
+                rates=self._sweep_rates(spec),
+                job_load=objective.job_load,
+            )
+            pts = []
+            self._spec_q_by_b = {}
+            for i, b in enumerate(res.splits):
+                point, best_q = _best_speculative_point(
+                    b,
+                    spec.n_workers // b,
+                    [res.samples[0, i, qi] for qi in range(len(quantiles))],
+                    quantiles,
+                    objective.metric,
+                )
+                self._spec_q_by_b[b] = best_q
+                pts.append(point)
+            return result_from_points(pts)
+        self._spec_q_by_b = {}
         res = sweep_sojourn(
             spec.dist,
             spec.n_workers,
@@ -462,6 +597,7 @@ class SimulatedPlanner(Planner):
     def sweep_spectrum(
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
+        self._spec_q_by_b = {}
         if objective.load_aware:
             return self._sweep_sojourn(spec, objective)
         return sweep_simulated(
@@ -496,6 +632,12 @@ class HeterogeneousPlanner(SimulatedPlanner):
     batched-sweep path (``mu * 1.0 == mu`` exactly in the engine) and the
     placement falls back to the same replica-major balanced layout.  The
     skewed path is numpy-only (``backend`` applies to the homogeneous path).
+
+    >>> skewed = ClusterSpec(n_workers=8, dist=Exponential(mu=2.0),
+    ...                      rates=(0.2, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0))
+    >>> plan = HeterogeneousPlanner(n_trials=2_000, seed=0).plan(skewed)
+    >>> plan.assignment.n_workers
+    8
     """
 
     name = "heterogeneous"
@@ -507,35 +649,46 @@ class HeterogeneousPlanner(SimulatedPlanner):
     def sweep_spectrum(
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
+        self._spec_q_by_b = {}
         if not spec.heterogeneous:
             return super().sweep_spectrum(spec, objective)
         if objective.load_aware:
             # skewed + load-aware: sojourn-simulate each candidate B under
             # the placement the plan actually emits (rate-aware replica
             # sets); the shared seed keeps the arrival sequence and draw
-            # matrix common across B, exactly like the batched sweeps
-            from .simulator import simulate_sojourn  # local: avoid cycle
+            # matrix common across B, exactly like the batched sweeps.
+            # speculation_quantiles extends the candidates to (B, trigger)
+            # pairs — all triggers of one B share one draw set
+            # (simulate_sojourn_quantiles), same as the homogeneous sweep.
+            from .simulator import simulate_sojourn_quantiles  # avoid cycle
 
             rate = objective.offered_rate(spec)
+            quantiles: tuple[Optional[float], ...] = (None,)
+            if objective.speculation_quantiles:
+                quantiles = (None, *objective.speculation_quantiles)
             pts = []
             for b in spec.feasible_batches():
                 assignment = rate_aware_assignment(
                     spec.n_workers, b, spec.rates
                 )
-                sim = simulate_sojourn(
+                sample_sets = simulate_sojourn_quantiles(
                     spec.dist,
                     spec.n_workers,
                     b,
                     arrival_rate=rate,
+                    quantiles=quantiles,
                     n_jobs=self.n_trials,
                     seed=self.seed,
                     rates=spec.rates,
                     job_load=objective.job_load,
                     worker_batch=assignment.worker_batch,
                 )
-                pts.append(
-                    point_from_samples(b, spec.n_workers // b, sim.samples)
+                point, best_q = _best_speculative_point(
+                    b, spec.n_workers // b, sample_sets, quantiles,
+                    objective.metric,
                 )
+                self._spec_q_by_b[b] = best_q
+                pts.append(point)
             return result_from_points(pts)
         from .simulator import simulate_coverage  # local: avoid import cycle
 
@@ -560,7 +713,11 @@ def make_planner(
     seed: int = 0,
     backend: str = "numpy",
 ) -> Planner:
-    """Map the legacy tuner knobs (mode / heterogeneous / sim_*) to a Planner."""
+    """Map the legacy tuner knobs (mode / heterogeneous / sim_*) to a Planner.
+
+    >>> make_planner(mode="simulate", heterogeneous=True).name
+    'heterogeneous'
+    """
     if mode == "analytic":
         if heterogeneous:
             raise ValueError(

@@ -38,6 +38,7 @@ harness and the tuner tests.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Sequence
 
 import numpy as np
@@ -48,12 +49,15 @@ from .policies import Assignment, _validate_rates, divisors
 __all__ = [
     "SimResult",
     "SweepSimResult",
+    "SpeculativeSweepResult",
     "simulate_maxmin",
     "simulate_coverage",
     "simulate_coverage_reference",
     "simulate_sojourn",
+    "simulate_sojourn_quantiles",
     "sweep_simulate",
     "sweep_sojourn",
+    "sweep_sojourn_speculative",
     "censored_observations",
     "StepTimeSimulator",
     "FaultEvent",
@@ -494,6 +498,102 @@ def _sojourn_recursion(
     return out
 
 
+def _sojourn_recursion_speculative(
+    arrivals: np.ndarray,
+    svc: np.ndarray,
+    clone_svc: np.ndarray,
+    n_groups: int,
+    threshold: float,
+) -> tuple[np.ndarray, int]:
+    """FIFO multi-server queue WITH speculative re-dispatch (event-driven).
+
+    The queueing model of the master's clone-attack rule: jobs dispatch
+    FCFS onto the earliest-freed idle replica-set (ties -> lowest index,
+    matching :func:`_sojourn_recursion` exactly when no clone fires); a job
+    whose first response has not arrived ``threshold`` after its start
+    grabs an idle set for ONE clone, drawn from the independent
+    ``clone_svc`` matrix.  Crucially, clones only ever take sets that are
+    idle AT the trigger instant — and under greedy FCFS dispatch an idle
+    set implies an empty queue, so speculation spends spare capacity and
+    can never starve queued work (getting this wrong turns speculation
+    into a self-inflicted overload at exactly the loads it should help).
+    A busy trigger instant RE-ARMS one threshold later (the master's rule),
+    and the job completes at the earlier response with both sets busy until
+    then (first-replica-wins cancellation).  The model fixes the clone
+    budget at ONE per job — the engine's default; larger engine budgets are
+    scored by their first clone.
+
+    Returns (per-job sojourns, number of clones launched).
+    """
+    import heapq as _hq
+    import itertools as _it
+
+    svc_rows = svc.tolist()
+    clone_rows = clone_svc.tolist()
+    n_jobs = len(arrivals)
+    out = np.empty(n_jobs)
+    free = [0.0] * n_groups  # last time each set freed (dispatch tie-break)
+    idle = set(range(n_groups))
+    queue: deque[int] = deque()
+    # per-job state: start, done, groups held, cloned?, departed?
+    start = [0.0] * n_jobs
+    done = [0.0] * n_jobs
+    held: list[tuple[int, ...]] = [()] * n_jobs
+    cloned = [False] * n_jobs
+    departed = [False] * n_jobs
+    seq = _it.count()
+    events: list = []  # (time, seq, kind, job): kind 0=arrive 1=depart 2=spec
+    for i, a in enumerate(arrivals.tolist()):
+        _hq.heappush(events, (a, next(seq), 0, i))
+    n_clones = 0
+
+    def dispatch(i: int, t: float) -> None:
+        g = min(idle, key=lambda h: (free[h], h))
+        idle.discard(g)
+        start[i] = t
+        done[i] = t + svc_rows[i][g]
+        held[i] = (g,)
+        _hq.heappush(events, (done[i], next(seq), 1, i))
+        if np.isfinite(threshold):
+            _hq.heappush(events, (t + threshold, next(seq), 2, i))
+
+    while events:
+        t, _, kind, i = _hq.heappop(events)
+        if kind == 0:  # arrival
+            if idle:
+                dispatch(i, t)
+            else:
+                queue.append(i)
+        elif kind == 1:  # depart (possibly stale after a clone win)
+            if departed[i] or done[i] > t:
+                continue
+            departed[i] = True
+            out[i] = done[i] - arrivals[i]
+            for g in held[i]:
+                free[g] = done[i]
+                idle.add(g)
+            while queue and idle:
+                dispatch(queue.popleft(), t)
+        else:  # speculation check
+            if departed[i] or done[i] <= t or cloned[i]:
+                continue
+            if not idle:
+                # busy trigger instant: re-arm one threshold later, exactly
+                # like the master (done[i] is finite, so this terminates)
+                _hq.heappush(events, (t + threshold, next(seq), 2, i))
+                continue
+            g2 = min(idle, key=lambda h: (free[h], h))
+            idle.discard(g2)
+            cloned[i] = True
+            n_clones += 1
+            clone_done = t + clone_rows[i][g2]
+            held[i] = (*held[i], g2)
+            if clone_done < done[i]:
+                done[i] = clone_done
+                _hq.heappush(events, (clone_done, next(seq), 1, i))
+    return out, n_clones
+
+
 def _group_min_times(
     core: np.ndarray, worker_batch: np.ndarray, n_groups: int
 ) -> np.ndarray:
@@ -525,6 +625,7 @@ def simulate_sojourn(
     job_load: float = 1.0,
     warmup: int | None = None,
     worker_batch: Sequence[int] | None = None,
+    speculation_quantile: float | None = None,
 ) -> SimResult:
     """Sojourn times of one (B, r) split under Poisson batch-job arrivals.
 
@@ -537,30 +638,114 @@ def simulate_sojourn(
     steady-state quantiles.  Offered load past capacity is legal — sojourns
     then grow with the horizon, which is exactly the signal that makes an
     unstable B lose the planner's argmin.
+
+    ``speculation_quantile`` switches on the clone-attack model
+    (:func:`_sojourn_recursion_speculative`): a job late relative to that
+    empirical quantile of its set-service distribution grabs an idle set
+    for one speculative clone.  ``None`` (default) is bit-identical to the
+    pre-speculation path — the clone draws are only consumed when enabled.
     """
+    wb, rates_arr, warm = _resolve_sojourn_args(
+        n_workers, n_batches, arrival_rate, (speculation_quantile,),
+        n_jobs, rates, job_load, warmup, worker_batch,
+    )
+    samples = _sojourn_quantile_samples(
+        dist, n_workers, n_batches, arrival_rate, (speculation_quantile,),
+        n_jobs, seed, rates_arr, job_load, warm, wb,
+    )
+    return SimResult(samples[0])
+
+
+def _validate_load(arrival_rate: float, job_load: float) -> None:
     if arrival_rate <= 0 or not np.isfinite(arrival_rate):
         raise ValueError(f"arrival_rate must be positive, got {arrival_rate}")
     if job_load <= 0:
         raise ValueError(f"job_load must be positive, got {job_load}")
+
+
+def _resolve_sojourn_args(
+    n_workers, n_batches, arrival_rate, quantiles,
+    n_jobs, rates, job_load, warmup, worker_batch,
+):
+    """Shared validation + worker->set map resolution for the per-B sojourn
+    entry points (one place, so the argument contract cannot drift)."""
+    _validate_load(arrival_rate, job_load)
+    for q in quantiles:
+        if q is not None and not 0.0 < q < 1.0:
+            raise ValueError(
+                f"speculation quantile must be in (0, 1), got {q}"
+            )
     if worker_batch is None:
         if n_workers % n_batches:
             raise ValueError(f"B={n_batches} must divide N={n_workers}")
-        r = n_workers // n_batches
-        wb = np.arange(n_workers) // r
+        wb = np.arange(n_workers) // (n_workers // n_batches)
     else:
         wb = np.asarray(worker_batch, dtype=int)
         if wb.shape != (n_workers,):
             raise ValueError(f"worker_batch shape {wb.shape} != ({n_workers},)")
-    rates_arr = _validate_rates(rates, n_workers)
-    warm = _resolve_warmup(n_jobs, warmup)
+    return wb, _validate_rates(rates, n_workers), _resolve_warmup(n_jobs, warmup)
 
+
+def _sojourn_quantile_samples(
+    dist, n_workers, n_batches, arrival_rate, quantiles,
+    n_jobs, seed, rates_arr, job_load, warm, wb,
+) -> list[np.ndarray]:
+    """Post-warmup sojourns for ONE (B, placement) at several speculation
+    triggers, from one draw set (arrivals + primary matrix + — lazily, only
+    when some trigger is not None — one clone matrix).  The lazy clone draw
+    keeps the ``(None,)`` call bit-identical to the pre-speculation path."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
     unit = rng.standard_exponential((n_jobs, n_workers))
     core = _unit_times(unit, dist, rates_arr) * job_load
     svc = _group_min_times(core, wb, n_batches)
-    sojourn = _sojourn_recursion(arrivals, svc, n_batches)
-    return SimResult(sojourn[warm:])
+    clone_svc = None
+    out = []
+    for q in quantiles:
+        if q is None:
+            out.append(_sojourn_recursion(arrivals, svc, n_batches)[warm:])
+            continue
+        if clone_svc is None:
+            clone_unit = rng.standard_exponential((n_jobs, n_workers))
+            clone_core = _unit_times(clone_unit, dist, rates_arr) * job_load
+            clone_svc = _group_min_times(clone_core, wb, n_batches)
+        threshold = float(np.quantile(svc, q))
+        sojourn, _ = _sojourn_recursion_speculative(
+            arrivals, svc, clone_svc, n_batches, threshold
+        )
+        out.append(sojourn[warm:])
+    return out
+
+
+def simulate_sojourn_quantiles(
+    dist: ServiceDistribution,
+    n_workers: int,
+    n_batches: int,
+    arrival_rate: float,
+    quantiles: Sequence[float | None],
+    n_jobs: int = 4_000,
+    seed: int = 0,
+    rates: Sequence[float] | None = None,
+    job_load: float = 1.0,
+    warmup: int | None = None,
+    worker_batch: Sequence[int] | None = None,
+) -> list[np.ndarray]:
+    """Sojourn samples of ONE (B, placement) at several clone triggers.
+
+    The per-B companion of :func:`sweep_sojourn_speculative` for callers
+    that supply an explicit ``worker_batch`` (the rate-aware planner): all
+    triggers share one arrival sequence + draw matrix + clone matrix, and
+    entry ``k`` is bit-identical to ``simulate_sojourn(...,
+    speculation_quantile=quantiles[k])`` at the same seed.
+    """
+    wb, rates_arr, warm = _resolve_sojourn_args(
+        n_workers, n_batches, arrival_rate, quantiles,
+        n_jobs, rates, job_load, warmup, worker_batch,
+    )
+    return _sojourn_quantile_samples(
+        dist, n_workers, n_batches, arrival_rate, tuple(quantiles),
+        n_jobs, seed, rates_arr, job_load, warm, wb,
+    )
 
 
 def sweep_sojourn(
@@ -590,10 +775,7 @@ def sweep_sojourn(
     for b in splits:
         if n_workers % b:
             raise ValueError(f"B={b} infeasible: must divide N={n_workers}")
-    if arrival_rate <= 0 or not np.isfinite(arrival_rate):
-        raise ValueError(f"arrival_rate must be positive, got {arrival_rate}")
-    if job_load <= 0:
-        raise ValueError(f"job_load must be positive, got {job_load}")
+    _validate_load(arrival_rate, job_load)
     rates_arr = _validate_rates(rates, n_workers)
     warm = _resolve_warmup(n_jobs, warmup)
 
@@ -614,6 +796,117 @@ def sweep_sojourn(
         dists=dist_seq,
         samples=samples,
         backend="numpy",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeSweepResult:
+    """Sojourn samples for every (distribution, B, late-quantile) cell.
+
+    The speculative twin of :class:`SweepSimResult`: ``samples[d, s, q]``
+    holds the post-warmup sojourns of ``dists[d]`` at ``splits[s]`` batches
+    under the speculation trigger ``quantiles[q]`` (``None`` = no
+    speculation), all from ONE shared arrival sequence + draw matrix + clone
+    draw matrix, so (B, quantile) comparisons are variance-reduced.
+    ``clone_fraction[d, s, q]`` is the fraction of jobs that launched a
+    speculative clone — the capacity price of each trigger setting.
+    """
+
+    n_workers: int
+    splits: tuple[int, ...]
+    quantiles: tuple[float | None, ...]
+    dists: tuple[ServiceDistribution, ...]
+    samples: np.ndarray  # (n_dists, n_splits, n_quantiles, n_jobs - warmup)
+    clone_fraction: np.ndarray  # (n_dists, n_splits, n_quantiles)
+
+    def result(
+        self,
+        n_batches: int,
+        quantile: float | None,
+        dist_index: int = 0,
+    ) -> SimResult:
+        return SimResult(
+            self.samples[
+                dist_index,
+                self.splits.index(n_batches),
+                self.quantiles.index(quantile),
+            ]
+        )
+
+
+def sweep_sojourn_speculative(
+    dists: ServiceDistribution | Sequence[ServiceDistribution],
+    n_workers: int,
+    arrival_rate: float,
+    quantiles: Sequence[float | None],
+    n_jobs: int = 4_000,
+    seed: int = 0,
+    feasible_b: Sequence[int] | None = None,
+    rates: Sequence[float] | None = None,
+    job_load: float = 1.0,
+    warmup: int | None = None,
+) -> SpeculativeSweepResult:
+    """Sojourns for ALL (B, speculation-quantile) pairs x distributions.
+
+    The planner's scoring engine for speculative re-dispatch: every cell
+    shares ONE arrival sequence, ONE primary draw matrix, and ONE clone draw
+    matrix (common random numbers), so the argmin over (B, quantile) — and
+    the comparison against the ``None`` no-speculation cells — measures pure
+    policy effect, not sampling noise.  Each ``quantile=None`` cell is
+    bit-identical to the matching :func:`sweep_sojourn` cell at the same
+    seed; each ``quantile=q`` cell matches ``simulate_sojourn(...,
+    speculation_quantile=q)``.
+    """
+    dist_seq = _normalize_dists(dists)
+    splits = list(feasible_b) if feasible_b is not None else divisors(n_workers)
+    if not splits:
+        raise ValueError("no feasible B values")
+    for b in splits:
+        if n_workers % b:
+            raise ValueError(f"B={b} infeasible: must divide N={n_workers}")
+    q_seq = tuple(quantiles)
+    if not q_seq:
+        raise ValueError("at least one speculation quantile required")
+    for q in q_seq:
+        if q is not None and not 0.0 < q < 1.0:
+            raise ValueError(f"speculation quantile must be in (0, 1), got {q}")
+    _validate_load(arrival_rate, job_load)
+    rates_arr = _validate_rates(rates, n_workers)
+    warm = _resolve_warmup(n_jobs, warmup)
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
+    unit = rng.standard_exponential((n_jobs, n_workers))
+    clone_unit = rng.standard_exponential((n_jobs, n_workers))
+
+    samples = np.empty((len(dist_seq), len(splits), len(q_seq), n_jobs - warm))
+    clones = np.zeros((len(dist_seq), len(splits), len(q_seq)))
+    for di, dist in enumerate(dist_seq):
+        core = _unit_times(unit, dist, rates_arr) * job_load
+        clone_core = _unit_times(clone_unit, dist, rates_arr) * job_load
+        for si, b in enumerate(splits):
+            r = n_workers // b
+            svc = core.reshape(n_jobs, b, r).min(axis=2)
+            clone_svc = clone_core.reshape(n_jobs, b, r).min(axis=2)
+            for qi, q in enumerate(q_seq):
+                if q is None:
+                    samples[di, si, qi] = _sojourn_recursion(
+                        arrivals, svc, b
+                    )[warm:]
+                else:
+                    threshold = float(np.quantile(svc, q))
+                    soj, n_clones = _sojourn_recursion_speculative(
+                        arrivals, svc, clone_svc, b, threshold
+                    )
+                    samples[di, si, qi] = soj[warm:]
+                    clones[di, si, qi] = n_clones / n_jobs
+    return SpeculativeSweepResult(
+        n_workers=n_workers,
+        splits=tuple(splits),
+        quantiles=q_seq,
+        dists=dist_seq,
+        samples=samples,
+        clone_fraction=clones,
     )
 
 

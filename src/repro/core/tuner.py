@@ -13,12 +13,16 @@ and a cooldown has elapsed — re-factoring the mesh is not free (it flushes
 compiled executables and reshuffles the data pipeline), so we only move for
 real wins.
 
-Serving feeds two extra telemetry streams: :meth:`StragglerTuner.observe_load`
-(measured batch-job arrival rate) and :meth:`StragglerTuner.observe_sojourn`
-(per-request queue wait + service).  With a load-capable planner the re-plan
-Objective then carries the observed arrival rate — candidate B is scored by
-simulated sojourn quantiles — and hysteresis measures the predicted win
-against the sojourn requests ACTUALLY experienced at the current B.
+Serving feeds three extra telemetry streams: :meth:`StragglerTuner
+.observe_load` (measured batch-job arrival rate), :meth:`StragglerTuner
+.observe_sojourn` (per-request queue wait + service), and
+:meth:`StragglerTuner.observe_deadline_misses` (SLO outcomes of requests
+carrying deadlines).  With a load-capable planner the re-plan Objective then
+carries the observed arrival rate — candidate B is scored by simulated
+sojourn quantiles — and hysteresis measures the predicted win against the
+sojourn requests ACTUALLY experienced at the current B.  A breached
+``TunerConfig.miss_rate_target`` waives the hysteresis threshold: when the
+fleet is missing its SLO, any predicted improvement justifies the move.
 """
 
 from __future__ import annotations
@@ -60,6 +64,9 @@ class TunerConfig:
     sim_trials: int = 4_000
     sim_backend: str = "numpy"
     sim_seed: int = 0
+    # SLO trigger: when the observed deadline-miss rate exceeds this target,
+    # the hysteresis threshold is waived for the next re-plan (None = off)
+    miss_rate_target: Optional[float] = None
 
     def objective(self) -> Objective:
         """The planner Objective this config describes."""
@@ -123,6 +130,7 @@ class StragglerTuner:
         planner: Planner | None = None,
         batch_divisor: int | None = None,
         job_load: float = 1.0,
+        speculation_quantiles: tuple[float, ...] | None = None,
     ):
         self.plan = plan
         self.config = config or TunerConfig()
@@ -134,10 +142,22 @@ class StragglerTuner:
         # units of data one batch-job carries (serving: batch tokens / unit);
         # scales the load-aware objective's service model
         self.job_load = job_load
+        # clone triggers the serving master is running: load-aware re-plans
+        # must score candidate B WITH speculation, else a fleet that is only
+        # stable because it speculates looks saturated to the planner
+        self.speculation_quantiles = (
+            tuple(float(q) for q in speculation_quantiles)
+            if speculation_quantiles
+            else None
+        )
         self._times: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
         self._censored: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
         self._load: deque[float] = deque(maxlen=self.config.window_steps)
         self._sojourns: deque[np.ndarray] = deque(
+            maxlen=self.config.window_steps
+        )
+        # (n_missed, n_total) per observation: windowed deadline-miss telemetry
+        self._misses: deque[tuple[int, int]] = deque(
             maxlen=self.config.window_steps
         )
         self._step = 0
@@ -201,6 +221,31 @@ class StragglerTuner:
         s = s[np.isfinite(s)]
         if s.size:
             self._sojourns.append(s)
+
+    def observe_deadline_misses(self, n_missed: int, n_total: int) -> None:
+        """Record SLO outcomes: of ``n_total`` deadline-carrying requests
+        that resolved (served or dropped), ``n_missed`` missed.
+
+        The windowed rate (:attr:`observed_miss_rate`) is the SLO re-plan
+        trigger: past ``TunerConfig.miss_rate_target`` the next re-plan
+        skips the hysteresis threshold — a fleet in breach moves for any
+        predicted win, not just a large one.
+        """
+        if n_total < 0 or not 0 <= n_missed <= max(n_total, 0):
+            raise ValueError(
+                f"invalid miss telemetry ({n_missed}/{n_total})"
+            )
+        if n_total > 0:
+            self._misses.append((int(n_missed), int(n_total)))
+
+    @property
+    def observed_miss_rate(self) -> Optional[float]:
+        """Windowed deadline-miss fraction (None without miss telemetry)."""
+        if not self._misses:
+            return None
+        missed = sum(m for m, _ in self._misses)
+        total = sum(t for _, t in self._misses)
+        return missed / total
 
     def observed_sojourn(self, metric: Metric) -> Optional[float]:
         """The objective metric evaluated on the observed sojourn window."""
@@ -294,6 +339,7 @@ class StragglerTuner:
                 arrival_rate=rate,
                 utilization=None,
                 job_load=self.job_load,
+                speculation_quantiles=self.speculation_quantiles,
             )
         return objective
 
@@ -346,7 +392,19 @@ class StragglerTuner:
                     baselines.append(observed)
             cur = min(baselines)
             improvement = 1.0 - plan.score / max(cur, 1e-30)
-        if improvement < self.config.improvement_threshold:
+        # SLO breach waives hysteresis: while the observed deadline-miss
+        # rate exceeds the target, ANY predicted win justifies moving (the
+        # cooldown still paces the attempts, so near-ties cannot ping-pong
+        # faster than one move per cooldown window)
+        threshold = self.config.improvement_threshold
+        miss_rate = self.observed_miss_rate
+        if (
+            self.config.miss_rate_target is not None
+            and miss_rate is not None
+            and miss_rate > self.config.miss_rate_target
+        ):
+            threshold = 0.0
+        if improvement < threshold:
             return None
         self._last_replan = self._step
         return RescalePlan(
@@ -364,8 +422,9 @@ class StragglerTuner:
         self.plan = ReplicationPlan(
             n_data=self.plan.n_data, n_batches=plan.new_batches
         )
-        # sojourn telemetry describes the configuration it was measured
-        # under; keeping the old B's (and the move's drain-transient)
-        # sojourns would let every move justify the next one
+        # sojourn + miss telemetry describe the configuration they were
+        # measured under; keeping the old B's (and the move's drain-
+        # transient) observations would let every move justify the next one
         self._sojourns.clear()
+        self._misses.clear()
         return self.plan

@@ -55,6 +55,9 @@ class ServeConfig:
     mu: float = 20.0
     # offered load for the queueing-aware (sojourn) sweep
     utilization: float = 0.7
+    # late-quantile clone triggers offered to the load-aware planner (the
+    # plan reports which — if any — beats plain replication)
+    speculation_quantiles: tuple[float, ...] = (0.8, 0.9, 0.95)
 
 
 def run_serving(sc: ServeConfig):
@@ -97,9 +100,18 @@ def run_serving(sc: ServeConfig):
     lat = {p.n_batches: {"mean": p.mean, "p99": p.p99} for p in res.points}
     # ... and the queueing twin: per-request sojourn under Poisson arrivals
     # at the configured utilization, scored through the load-aware planner
+    # offering clone-attack triggers.  ONE sweep covers everything: the
+    # speculative sweep's no-speculation cells ARE the plain sojourn sweep,
+    # so each reported B carries its best policy (trigger or plain), and
+    # the winner's trigger says whether speculation beat static replication
     spec = ClusterSpec(n_workers=sc.n_servers, dist=dist)
     plan = SimulatedPlanner(n_trials=20_000, seed=7).plan(
-        spec, Objective(metric="p99", utilization=sc.utilization)
+        spec,
+        Objective(
+            metric="p99",
+            utilization=sc.utilization,
+            speculation_quantiles=sc.speculation_quantiles,
+        ),
     )
     sojourn = {
         p.n_batches: {"mean": p.mean, "p99": p.p99, "p999": p.p999}
@@ -112,6 +124,8 @@ def run_serving(sc: ServeConfig):
         "latency_by_B": lat,
         "sojourn_by_B": sojourn,
         "sojourn_best_B": plan.n_batches,
+        "speculation_quantile": plan.speculation_quantile,
+        "speculative_p99": plan.score,
     }
 
 
@@ -129,11 +143,20 @@ def main():
     print("batch-latency vs B (simulated fleet):")
     for b, d in out["latency_by_B"].items():
         print(f"  B={b:3d}  mean={d['mean']*1e3:7.2f}ms  p99={d['p99']*1e3:7.2f}ms")
-    print("request sojourn vs B (Poisson arrivals, queueing):")
+    print("request sojourn vs B (Poisson arrivals; best policy per B):")
     for b, d in out["sojourn_by_B"].items():
         print(f"  B={b:3d}  mean={d['mean']*1e3:7.2f}ms  p99={d['p99']*1e3:7.2f}ms"
               f"  p999={d['p999']*1e3:7.2f}ms")
-    print(f"load-aware p99-optimal B* = {out['sojourn_best_B']}")
+    q = out["speculation_quantile"]
+    print(
+        f"load-aware p99-optimal B* = {out['sojourn_best_B']}: "
+        + (
+            f"speculative re-dispatch at the q={q:g} late-quantile "
+            f"(predicted p99 {out['speculative_p99']*1e3:.2f}ms)"
+            if q is not None
+            else "plain replication (no clone trigger pays off)"
+        )
+    )
 
 
 if __name__ == "__main__":

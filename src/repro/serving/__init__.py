@@ -18,6 +18,7 @@ from repro.serving.queueing import (
     EventDrivenMaster,
     QueuePolicy,
     Request,
+    SpeculationPolicy,
     partition_requests,
 )
 
@@ -33,6 +34,7 @@ __all__ = [
     "Request",
     "RequestStats",
     "ServeEngineConfig",
+    "SpeculationPolicy",
     "TraceArrivals",
     "make_arrivals",
     "partition_requests",

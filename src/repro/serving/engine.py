@@ -57,6 +57,7 @@ from repro.serving.queueing import (
     EventDrivenMaster,
     QueuePolicy,
     Request,
+    SpeculationPolicy,
     partition_requests,
 )
 
@@ -89,11 +90,34 @@ class ServeEngineConfig:
     # offered load, either as REQUESTS per unit sim-time or as a fraction of
     # the fleet's no-replication capacity; either one makes the planner
     # objective load-aware (scored on sojourn, needs planner_mode='simulate')
+    # NOTE: the load-aware objective converts the REQUEST rate to a
+    # batch-JOB rate as arrival_rate / batch_size, i.e. it assumes full
+    # batches.  With a tight max_wait (or drop_expired) the master forms
+    # partial batches and the true job rate is higher; the tuner's
+    # observe_load telemetry corrects the estimate online when tuner=True.
     arrival_rate: Optional[float] = None
     utilization: Optional[float] = None
     arrival_kind: str = "poisson"  # 'poisson'|'mmpp'|'deterministic'|'trace'
+    # recorded arrival offsets for arrival_kind='trace' (required there;
+    # alternatively pass any ArrivalProcess straight to serve())
+    arrival_offsets: Optional[tuple[float, ...]] = None
     max_wait: float = math.inf  # batch-formation deadline (sim-time units)
-    queue_discipline: str = "fifo"  # 'fifo' | 'priority'
+    queue_discipline: str = "fifo"  # 'fifo' | 'priority' | 'edf'
+    # --- speculative re-dispatch (clone-attack straggler mitigation) --------
+    # launch a clone of a batch onto an idle replica-set when its first
+    # response is later than this quantile of the fitted min-over-replicas
+    # service distribution (None = no speculation); clone_budget caps the
+    # clones per batch job.  The same quantile seeds the planner objective,
+    # so plan_initial / tuner re-plans score candidate B with speculation on.
+    speculation_quantile: Optional[float] = None
+    clone_budget: int = 1
+    # --- deadlines / SLOs ---------------------------------------------------
+    # uniform RELATIVE deadline applied to every request (arrival + deadline;
+    # None = no SLO).  Per-request deadlines go through serve(deadlines=...).
+    deadline: Optional[float] = None
+    drop_expired: bool = False  # shed requests already past their deadline
+    # observed miss rate above this waives re-plan hysteresis (None = off)
+    miss_rate_target: Optional[float] = None
     # skip real prefill/decode (latency-only experiments, fast tests)
     execute_model: bool = True
 
@@ -105,6 +129,8 @@ class RequestStats:
     completion: float
     tokens: np.ndarray
     dispatched: float = math.nan
+    deadline: float = math.inf  # absolute SLO deadline (inf = none)
+    dropped: bool = False  # shed by drop-on-expiry, never served
 
     @property
     def latency(self) -> float:
@@ -118,6 +144,13 @@ class RequestStats:
     @property
     def service(self) -> float:
         return self.completion - self.dispatched
+
+    @property
+    def missed_deadline(self) -> bool:
+        """True when a deadline-carrying request was late or dropped."""
+        if not math.isfinite(self.deadline):
+            return False
+        return self.dropped or self.completion > self.deadline
 
 
 class ReplicatedServingEngine:
@@ -156,13 +189,26 @@ class ReplicatedServingEngine:
             self.plan,
             TunerConfig(
                 window_steps=256, min_samples=64, cooldown_steps=16,
-                metric=sc.metric,
+                metric=sc.metric, miss_rate_target=sc.miss_rate_target,
             ),
             planner=self.planner,
             job_load=self._work(sc.batch_size),
+            # load-aware re-plans score candidate B with the SAME clone
+            # trigger the master runs (else a fleet stable only because it
+            # speculates looks saturated and re-plans to no-replication)
+            speculation_quantiles=(
+                (sc.speculation_quantile,)
+                if sc.speculation_quantile is not None
+                else None
+            ),
         )
         self.clock = 0.0
         self._next_id = 0
+        # the LIVE clone trigger: starts at the config's, and adopts the
+        # trigger chosen by each load-aware re-plan (which may be None —
+        # the planner found plain replication better at the new B)
+        self.speculation_quantile = sc.speculation_quantile
+        self.last_master: Optional[EventDrivenMaster] = None
         self._tokens: dict[int, np.ndarray] = {}
         self._formations: deque[float] = deque(maxlen=32)
         if sc.execute_model:
@@ -195,6 +241,7 @@ class ReplicatedServingEngine:
                 "give ServeEngineConfig.arrival_rate OR .utilization, not "
                 "both (same rule as Objective)"
             )
+        load_aware = sc.arrival_rate is not None or sc.utilization is not None
         return Objective(
             metric=sc.metric,
             arrival_rate=(
@@ -204,6 +251,13 @@ class ReplicatedServingEngine:
             ),
             utilization=sc.utilization,
             job_load=self._work(sc.batch_size),
+            # with speculation on and a load-aware objective, the planner
+            # scores candidate B with the SAME clone trigger the master runs
+            speculation_quantiles=(
+                (sc.speculation_quantile,)
+                if sc.speculation_quantile is not None and load_aware
+                else None
+            ),
         )
 
     def _request_rate(self) -> float:
@@ -219,7 +273,18 @@ class ReplicatedServingEngine:
         )
 
     def _default_arrivals(self) -> ArrivalProcess:
-        return make_arrivals(self.sc.arrival_kind, rate=self._request_rate())
+        sc = self.sc
+        if sc.arrival_kind == "trace":
+            # a trace carries its own rate; the offsets are the config
+            if sc.arrival_offsets is None:
+                raise ValueError(
+                    "arrival_kind='trace' needs ServeEngineConfig"
+                    ".arrival_offsets (or pass an ArrivalProcess to serve())"
+                )
+            return make_arrivals(
+                "trace", rate=1.0, offsets=sc.arrival_offsets
+            )
+        return make_arrivals(sc.arrival_kind, rate=self._request_rate())
 
     # -- real model work -----------------------------------------------------
     def _generate(self, prompts) -> np.ndarray:
@@ -266,6 +331,36 @@ class ReplicatedServingEngine:
         work = self._work(job.size)
         return self.dist.scaled(work).sample(self.rng, self.plan.replication)
 
+    def _speculation_threshold(self, job: BatchJob) -> float:
+        """Late-quantile of the calibrated FIRST-RESPONSE distribution.
+
+        The first response of a batch is the min over its r replicas'
+        service draws; for the (shifted-)exponential straggler model that
+        min keeps the shift and multiplies the rate by r, so its q-quantile
+        is ``shift + -ln(1-q) / (r * mu)``.  A response later than this is
+        late with model probability 1 - q — the clone trigger.  Reads the
+        LIVE ``speculation_quantile``/plan, so a mid-run re-plan that
+        changed B or disabled speculation (inf threshold) takes effect on
+        the next dispatch.
+        """
+        q = self.speculation_quantile
+        if q is None:
+            return math.inf  # re-plan disabled speculation mid-run
+        scaled = self.dist.scaled(self._work(job.size))
+        r = max(self.plan.replication, 1)
+        shift = float(getattr(scaled, "delta", 0.0))
+        return shift + (-math.log1p(-q)) / (scaled.mu * r)
+
+    def _speculation_policy(self) -> Optional[SpeculationPolicy]:
+        """The master's clone policy implied by the live trigger (None = off)."""
+        if self.speculation_quantile is None:
+            return None
+        return SpeculationPolicy(
+            late_quantile=self.speculation_quantile,
+            max_clones=self.sc.clone_budget,
+            threshold=self._speculation_threshold,
+        )
+
     def _on_job_complete(self, job: BatchJob) -> Optional[dict]:
         """Telemetry + model work + (maybe) a drain-then-swap re-plan."""
         work = self._work(job.size)
@@ -277,9 +372,30 @@ class ReplicatedServingEngine:
         used = job.used_mask()
         observed = np.minimum(job.service_times, job.service)
         self.tuner.observe(observed / work, censored=~used)
+        # speculative clones are telemetry too: each clone's replicas are
+        # censored at ITS cancellation time (completion - clone dispatch),
+        # and only the winning clone's fastest replica is uncensored
+        for k in range(job.n_clones):
+            clone_cancel = job.completed - job.clone_dispatched[k]
+            clone_times = job.clone_service_times[k]
+            clone_used = np.zeros(len(clone_times), dtype=bool)
+            if job.winner_clone == k:
+                clone_used[int(np.argmin(clone_times))] = True
+            self.tuner.observe(
+                np.minimum(clone_times, clone_cancel) / work,
+                censored=~clone_used,
+            )
         self.tuner.observe_sojourn(
             np.array([req.sojourn for req in job.requests])
         )
+        with_deadline = [
+            req for req in job.requests if math.isfinite(req.deadline)
+        ]
+        if with_deadline:
+            self.tuner.observe_deadline_misses(
+                sum(req.completion > req.deadline for req in with_deadline),
+                len(with_deadline),
+            )
         self._formations.append(job.formed_at)
         if len(self._formations) >= 2:
             # jobs complete out of formation order (slow sets finish late),
@@ -293,22 +409,69 @@ class ReplicatedServingEngine:
             rp = self.tuner.maybe_replan()
             if rp is not None:
                 self.plan = self.tuner.apply(rp)
+                # adopt the trigger the winning score assumed: when the
+                # re-plan swept (B, trigger) pairs, run what it scored —
+                # including "don't speculate at this B" (None)
+                if (
+                    rp.plan is not None
+                    and rp.plan.objective.speculation_quantiles
+                ):
+                    self.speculation_quantile = rp.plan.speculation_quantile
                 return {"n_groups": self.plan.n_batches}
+            # no B move, but the last evaluated sweep may still have found
+            # a better trigger AT the current B — adopting it needs no
+            # drain/reconfig, so it is free (cooldown paces evaluations)
+            lp = self.tuner.last_plan
+            if (
+                lp is not None
+                and lp.objective.speculation_quantiles
+                and lp.n_batches == self.plan.n_batches
+            ):
+                self.speculation_quantile = lp.speculation_quantile
         return None
 
     def serve(
         self,
         n_requests: int,
         arrivals: Optional[ArrivalProcess] = None,
+        deadlines: Optional[np.ndarray] = None,
+        priorities: Optional[np.ndarray] = None,
     ) -> list[RequestStats]:
         """Serve ``n_requests`` arriving under ``arrivals`` (default: the
         config's process at the configured offered load) through the
-        event-driven master; returns per-request sojourn stats."""
+        event-driven master; returns per-request sojourn stats.
+
+        ``deadlines`` (per-request, RELATIVE to arrival) overrides the
+        config's uniform ``deadline``; ``priorities`` feeds the
+        ``'priority'`` discipline.  Requests carrying deadlines drive EDF
+        ordering, drop-on-expiry, and deadline-miss telemetry.
+        """
         sc = self.sc
         process = arrivals if arrivals is not None else self._default_arrivals()
         times = process.sample(self._arrival_rng, n_requests, start=self.clock)
+        if deadlines is None and sc.deadline is not None:
+            deadlines = np.full(n_requests, sc.deadline)
+        if deadlines is not None and len(deadlines) != n_requests:
+            raise ValueError(
+                f"deadlines length {len(deadlines)} != {n_requests}"
+            )
+        if priorities is not None and len(priorities) != n_requests:
+            raise ValueError(
+                f"priorities length {len(priorities)} != {n_requests}"
+            )
         requests = [
-            Request(request_id=self._next_id + i, arrival=float(t))
+            Request(
+                request_id=self._next_id + i,
+                arrival=float(t),
+                deadline=(
+                    float(t) + float(deadlines[i])
+                    if deadlines is not None
+                    else math.inf
+                ),
+                priority=(
+                    float(priorities[i]) if priorities is not None else 0.0
+                ),
+            )
             for i, t in enumerate(times)
         ]
         self._next_id += n_requests
@@ -319,15 +482,22 @@ class ReplicatedServingEngine:
                 max_batch_size=sc.batch_size,
                 max_wait=sc.max_wait,
                 discipline=sc.queue_discipline,
+                drop_expired=sc.drop_expired,
             ),
             clock=self.clock,
             on_job_complete=self._on_job_complete,
+            speculation=self._speculation_policy(),
+            # a dropped request resolved as a miss without reaching any job
+            # callback: stream it into the tuner AS IT HAPPENS, so a
+            # drop-heavy SLO breach can trigger a re-plan mid-stream
+            on_drop=lambda req: self.tuner.observe_deadline_misses(1, 1),
         )
         self._tokens = {}
         for req in requests:
             master.submit(req)
         master.run()
         self.clock = master.clock
+        self.last_master = master
         return [
             RequestStats(
                 request_id=req.request_id,
@@ -335,6 +505,8 @@ class ReplicatedServingEngine:
                 completion=req.completion,
                 tokens=self._tokens.get(req.request_id, _NO_TOKENS),
                 dispatched=req.dispatched,
+                deadline=req.deadline,
+                dropped=req.dropped,
             )
             for req in requests
         ]
@@ -343,22 +515,47 @@ class ReplicatedServingEngine:
         self,
         n_requests: int = 512,
         arrivals: Optional[ArrivalProcess] = None,
+        deadlines: Optional[np.ndarray] = None,
     ) -> dict:
         """Event-driven driver: serve a request stream, report sojourn
-        quantiles (the serving twin of :meth:`run`)."""
+        quantiles plus SLO/speculation telemetry (the serving twin of
+        :meth:`run`).  Sojourn quantiles cover SERVED requests only;
+        ``deadline_miss_rate`` covers every deadline-carrying request
+        (dropped ones count as misses) and is None when no request carried
+        a deadline."""
         start = self.clock
-        stats = self.serve(n_requests, arrivals)
-        soj = np.array([s.latency for s in stats])
-        wait = np.array([s.queue_wait for s in stats])
+        stats = self.serve(n_requests, arrivals, deadlines=deadlines)
+        served = [s for s in stats if not s.dropped]
+        soj = np.array([s.latency for s in served])
+        wait = np.array([s.queue_wait for s in served])
+        with_deadline = [s for s in stats if math.isfinite(s.deadline)]
+        miss_rate = (
+            sum(s.missed_deadline for s in with_deadline) / len(with_deadline)
+            if with_deadline
+            else None
+        )
         return {
             "requests": len(stats),
-            "mean_sojourn": float(soj.mean()),
-            "p50_sojourn": float(np.quantile(soj, 0.50)),
-            "p99_sojourn": float(np.quantile(soj, 0.99)),
-            "p999_sojourn": float(np.quantile(soj, 0.999)),
-            "mean_queue_wait": float(wait.mean()),
-            "throughput": len(stats) / max(self.clock - start, 1e-9),
+            "mean_sojourn": float(soj.mean()) if len(served) else math.nan,
+            "p50_sojourn": (
+                float(np.quantile(soj, 0.50)) if len(served) else math.nan
+            ),
+            "p99_sojourn": (
+                float(np.quantile(soj, 0.99)) if len(served) else math.nan
+            ),
+            "p999_sojourn": (
+                float(np.quantile(soj, 0.999)) if len(served) else math.nan
+            ),
+            "mean_queue_wait": (
+                float(wait.mean()) if len(served) else math.nan
+            ),
+            "throughput": len(served) / max(self.clock - start, 1e-9),
             "final_B": self.plan.n_batches,
+            "deadline_miss_rate": miss_rate,
+            "n_dropped": len(stats) - len(served),
+            "speculations": (
+                self.last_master.speculations if self.last_master else 0
+            ),
             "stats": stats,
         }
 

@@ -1,32 +1,49 @@
 """Event-driven serving master: admission queue, batch formation, replica
-dispatch with first-replica-wins cancellation.
+dispatch with first-replica-wins cancellation, speculative re-dispatch, and
+deadline (EDF) scheduling.
 
 This is the discrete-event core the engine drives the model from.  The fleet
 is factored (per the active :class:`~repro.core.planner.Plan`) into
 ``n_groups`` replica-sets — one per batch slot, each holding ``r`` server
 groups.  The master's event loop:
 
-* **Admission** — requests enter a FIFO or priority queue at their arrival
-  time (``QueuePolicy.discipline``; larger ``Request.priority`` is served
-  first, ties FIFO).
+* **Admission** — requests enter the queue at their arrival time under one of
+  three disciplines (``QueuePolicy.discipline``): ``'fifo'`` (arrival order),
+  ``'priority'`` (larger ``Request.priority`` first, ties FIFO), or ``'edf'``
+  (earliest ``Request.deadline`` first, ties FIFO — the deadline/SLO
+  discipline).  With ``QueuePolicy.drop_expired`` set, a request whose
+  deadline has already passed is DROPPED instead of queued (at admission) or
+  instead of dispatched (at batch formation); dropped requests land in
+  :attr:`EventDrivenMaster.dropped_requests` and never occupy a replica-set.
 * **Batch formation** — a batch forms as soon as ``max_batch_size`` requests
   wait, or when the oldest queued request has waited ``max_wait`` (whichever
   comes first); leftovers are flushed once the arrival stream ends, so no
-  request is ever dropped (the lock-step engine's remainder bug — see
-  :func:`partition_requests`).
+  request is ever dropped by formation (the lock-step engine's remainder bug
+  — see :func:`partition_requests`).  A batch inherits the EARLIEST deadline
+  and the LARGEST priority of its requests.
 * **Replica dispatch** — a formed batch goes to the lowest-numbered idle
-  replica-set; its ``r`` replicas all start, the FASTEST one's response
-  completes the batch and the rest are cancelled (the paper's
+  replica-set (under ``'priority'``/``'edf'`` an urgent batch overtakes
+  earlier-formed pending ones); its ``r`` replicas all start, the FASTEST
+  one's response completes the batch and the rest are cancelled (the paper's
   ``min``-over-replicas rule), so the whole set frees at the winner's time.
+* **Speculative re-dispatch** — with a :class:`SpeculationPolicy`, a batch
+  whose first response is LATE (no response by the policy's late-quantile
+  threshold after dispatch) is cloned onto an idle replica-set, Aktaş et
+  al. clone-attack style: the clone's ``r`` replicas race the originals,
+  whichever responds first completes the batch, and every other replica is
+  cancelled.  Clones only ever take sets that are idle at the trigger
+  instant (a queued batch is never displaced), and each job spends at most
+  ``max_clones`` from its clone budget.
 * **Sojourn accounting** — every request records arrival, dispatch, and
   completion; sojourn = queue wait + service, the metric the load-aware
-  planner objectives act on.
+  planner objectives act on.  Requests carrying a finite ``deadline`` also
+  report :attr:`Request.missed_deadline`.
 
 Re-planning: ``on_job_complete`` may return a reconfiguration (new
 ``n_groups`` and/or sampler).  The master then DRAINS — formed batches keep
-queueing, in-flight batches finish — and swaps the replica-set fabric only
-at the quiesce point, mirroring how re-factoring a real mesh flushes
-compiled executables before traffic resumes.
+queueing, in-flight batches finish, no new clones launch — and swaps the
+replica-set fabric only at the quiesce point, mirroring how re-factoring a
+real mesh flushes compiled executables before traffic resumes.
 """
 
 from __future__ import annotations
@@ -42,6 +59,7 @@ import numpy as np
 
 __all__ = [
     "QueuePolicy",
+    "SpeculationPolicy",
     "Request",
     "BatchJob",
     "EventDrivenMaster",
@@ -58,6 +76,9 @@ def partition_requests(n_requests: int, n_batches: int) -> list[tuple[int, int]]
     ``B | n`` the slices are identical to the legacy ones.  Empty trailing
     slices (``n < B``) are preserved so callers can keep slice index == batch
     index.
+
+    >>> partition_requests(10, 4)
+    [(0, 2), (2, 4), (4, 6), (6, 10)]
     """
     if n_batches < 1:
         raise ValueError(f"n_batches must be >= 1, got {n_batches}")
@@ -76,11 +97,27 @@ def partition_requests(n_requests: int, n_batches: int) -> list[tuple[int, int]]
 
 @dataclasses.dataclass(frozen=True)
 class QueuePolicy:
-    """Admission + batch-formation knobs of the event-driven master."""
+    """Admission + batch-formation knobs of the event-driven master.
+
+    * ``max_batch_size`` — form a batch as soon as this many requests wait.
+    * ``max_wait``       — ... or when the oldest queued request has waited
+      this long (finite values arm a per-request formation timer).
+    * ``discipline``     — ``'fifo'`` | ``'priority'`` (larger
+      :attr:`Request.priority` first) | ``'edf'`` (earliest
+      :attr:`Request.deadline` first; requests without a deadline sort last).
+    * ``drop_expired``   — drop a request whose deadline has already passed
+      instead of admitting/dispatching it (the SLO "don't serve dead work"
+      knob; default off, so late requests are still served and merely
+      counted as deadline misses).
+
+    >>> QueuePolicy(max_batch_size=8, discipline="edf", drop_expired=True)
+    QueuePolicy(max_batch_size=8, max_wait=inf, discipline='edf', drop_expired=True)
+    """
 
     max_batch_size: int = 4  # form a batch as soon as this many wait
     max_wait: float = math.inf  # ... or the oldest has waited this long
-    discipline: str = "fifo"  # 'fifo' | 'priority'
+    discipline: str = "fifo"  # 'fifo' | 'priority' | 'edf'
+    drop_expired: bool = False  # drop requests already past their deadline
 
     def __post_init__(self):
         if self.max_batch_size < 1:
@@ -89,22 +126,84 @@ class QueuePolicy:
             )
         if not self.max_wait > 0:
             raise ValueError(f"max_wait must be positive, got {self.max_wait}")
-        if self.discipline not in ("fifo", "priority"):
+        if self.discipline not in ("fifo", "priority", "edf"):
             raise ValueError(
-                f"unknown discipline {self.discipline!r} (use 'fifo'|'priority')"
+                f"unknown discipline {self.discipline!r} "
+                "(use 'fifo'|'priority'|'edf')"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationPolicy:
+    """When (and how much) to clone a late batch (speculative re-dispatch).
+
+    A batch dispatched at time ``t`` whose first response has not arrived by
+    ``t + threshold`` is LATE; the master then launches a clone of the whole
+    batch on an idle replica-set (if one exists), first-replica-wins across
+    originals and clones.  The threshold is, in order of preference:
+
+    * ``threshold(job)`` — caller-supplied model, e.g. the ``late_quantile``
+      of the fitted min-over-replicas service distribution (what the serving
+      engine wires in); or
+    * the empirical ``late_quantile`` of the master's own window of observed
+      batch service times, once ``min_observations`` jobs have completed
+      (self-calibrating fallback when no fitted model is available).
+
+    ``max_clones`` is the per-job clone budget: after a clone launches, the
+    trigger re-arms one threshold later until the budget is spent.  Clones
+    are launched ONLY onto sets idle at the trigger instant — speculation
+    spends spare capacity, never displaces queued work.
+
+    >>> SpeculationPolicy(late_quantile=0.9, max_clones=1)
+    SpeculationPolicy(late_quantile=0.9, max_clones=1, min_observations=8, threshold=None)
+    """
+
+    late_quantile: float = 0.9  # trigger when the response is this late
+    max_clones: int = 1  # per-job clone budget
+    min_observations: int = 8  # window size gating the empirical fallback
+    threshold: Optional[Callable[["BatchJob"], float]] = None
+
+    def __post_init__(self):
+        if not 0.0 < self.late_quantile < 1.0:
+            raise ValueError(
+                f"late_quantile must be in (0, 1), got {self.late_quantile}"
+            )
+        if self.max_clones < 0:
+            raise ValueError(
+                f"max_clones must be >= 0, got {self.max_clones}"
+            )
+        if self.min_observations < 1:
+            raise ValueError(
+                f"min_observations must be >= 1, got {self.min_observations}"
             )
 
 
 @dataclasses.dataclass
 class Request:
-    """One user request moving through the queueing subsystem."""
+    """One user request moving through the queueing subsystem.
+
+    ``priority`` matters under the ``'priority'`` discipline (larger = more
+    urgent); ``deadline`` (ABSOLUTE sim-time, default +inf = no SLO) drives
+    the ``'edf'`` discipline, drop-on-expiry, and miss accounting; ``slo`` is
+    a free-form class label for per-class reporting.  ``dropped`` marks a
+    request shed by drop-on-expiry — it never ran, so its ``completion``
+    stays NaN.
+
+    >>> r = Request(request_id=0, arrival=1.0, deadline=3.0)
+    >>> r.dispatched, r.completion = 1.5, 2.5
+    >>> r.sojourn, r.missed_deadline
+    (1.5, False)
+    """
 
     request_id: int
     arrival: float
     priority: float = 0.0  # larger = more urgent ('priority' discipline only)
+    deadline: float = math.inf  # absolute SLO deadline ('edf' + miss stats)
+    slo: str = ""  # optional SLO class label (reporting only)
     batch_id: int = -1
     dispatched: float = math.nan
     completion: float = math.nan
+    dropped: bool = False  # shed by drop-on-expiry, never served
 
     @property
     def queue_wait(self) -> float:
@@ -115,10 +214,28 @@ class Request:
         """Queue wait + service: the latency the user actually feels."""
         return self.completion - self.arrival
 
+    @property
+    def missed_deadline(self) -> bool:
+        """True when the request has a deadline and did not make it (a
+        dropped request counts as a miss; one still in flight does not)."""
+        if not math.isfinite(self.deadline):
+            return False
+        return self.dropped or (
+            math.isfinite(self.completion) and self.completion > self.deadline
+        )
+
 
 @dataclasses.dataclass
 class BatchJob:
-    """A formed batch of requests and its dispatch/telemetry record."""
+    """A formed batch of requests and its dispatch/telemetry record.
+
+    One job occupies one replica-set (``group``) from ``dispatched`` until
+    ``completed``; speculative clones occupy additional sets, recorded in
+    the parallel lists ``clone_groups`` / ``clone_dispatched`` /
+    ``clone_service_times``.  ``winner`` is the fastest ORIGINAL replica;
+    ``winner_clone`` is -1 when an original won and otherwise the index of
+    the winning clone (whose fastest replica supplied the result).
+    """
 
     batch_id: int
     requests: tuple[Request, ...]
@@ -127,7 +244,15 @@ class BatchJob:
     dispatched: float = math.nan
     completed: float = math.nan
     service_times: Optional[np.ndarray] = None  # per-replica draws
-    winner: int = -1  # index of the fastest (used) replica
+    winner: int = -1  # index of the fastest original replica
+    # speculative re-dispatch record (parallel lists, one entry per clone)
+    clone_groups: list[int] = dataclasses.field(default_factory=list)
+    clone_dispatched: list[float] = dataclasses.field(default_factory=list)
+    clone_service_times: list[np.ndarray] = dataclasses.field(
+        default_factory=list
+    )
+    winner_clone: int = -1  # -1: an original replica won; else clone index
+    departed: bool = False  # internal: guards stale depart events
 
     @property
     def size(self) -> int:
@@ -139,18 +264,36 @@ class BatchJob:
         return max((r.priority for r in self.requests), default=0.0)
 
     @property
+    def deadline(self) -> float:
+        """A batch inherits the EARLIEST deadline of its requests (EDF)."""
+        return min((r.deadline for r in self.requests), default=math.inf)
+
+    @property
     def service(self) -> float:
+        """Dispatch-to-completion time (clone wins shorten it)."""
         return self.completed - self.dispatched
 
+    @property
+    def n_clones(self) -> int:
+        """How many speculative clones this job launched."""
+        return len(self.clone_groups)
+
+    @property
+    def groups(self) -> list[int]:
+        """Every replica-set the job occupies (original + clones)."""
+        return [self.group, *self.clone_groups]
+
     def used_mask(self) -> np.ndarray:
-        """Per-replica mask: True for the one replica whose result was used."""
+        """Per-ORIGINAL-replica mask: True for the replica whose result was
+        used (all False when a speculative clone won the race)."""
         used = np.zeros(len(self.service_times), dtype=bool)
-        used[self.winner] = True
+        if self.winner_clone < 0:
+            used[self.winner] = True
         return used
 
 
 # sampler(job, group) -> per-replica service times for dispatching `job` on
-# replica-set `group`
+# replica-set `group` (clone dispatches use the same sampler)
 ServiceSampler = Callable[[BatchJob, int], np.ndarray]
 # callback(job) -> None, or {'n_groups': int, 'service_sampler': fn?} to
 # request a drain-then-reconfigure
@@ -158,7 +301,14 @@ JobCallback = Callable[[BatchJob], Optional[dict]]
 
 
 class EventDrivenMaster:
-    """The serving master as a discrete-event system (see module docstring)."""
+    """The serving master as a discrete-event system (see module docstring).
+
+    >>> master = EventDrivenMaster(2, lambda job, g: np.array([0.5, 1.0]))
+    >>> master.submit(Request(request_id=0, arrival=0.0))
+    >>> jobs = master.run()
+    >>> jobs[0].requests[0].sojourn
+    0.5
+    """
 
     def __init__(
         self,
@@ -167,22 +317,28 @@ class EventDrivenMaster:
         policy: Optional[QueuePolicy] = None,
         clock: float = 0.0,
         on_job_complete: Optional[JobCallback] = None,
+        speculation: Optional[SpeculationPolicy] = None,
+        on_drop: Optional[Callable[[Request], None]] = None,
     ):
         if n_groups < 1:
             raise ValueError(f"n_groups must be >= 1, got {n_groups}")
         self.n_groups = n_groups
         self.policy = policy or QueuePolicy()
+        self.speculation = speculation
         self._sampler = service_sampler
         self.clock = float(clock)
         self.on_job_complete = on_job_complete
+        # fires the moment drop-on-expiry sheds a request, so SLO telemetry
+        # reaches re-plan triggers DURING the stream, not after it ends
+        self.on_drop = on_drop
         self._events: list = []  # (time, seq, kind, payload)
         self._seq = itertools.count()
         self._queue: deque[Request] = deque()  # fifo order
-        self._prio: list = []  # (-priority, arrival, id, Request) heap
+        self._prio: list = []  # (key, Request) heap: 'priority'/'edf' order
         self._queued_ids: set[int] = set()
-        # formed batches awaiting an idle set: FIFO, or (under the
-        # 'priority' discipline) a heap keyed by (-priority, batch_id) so an
-        # urgent batch overtakes earlier-formed ones at dispatch
+        # formed batches awaiting an idle set: FIFO, or (under 'priority' /
+        # 'edf') a heap keyed so the most urgent batch overtakes
+        # earlier-formed ones at dispatch
         self._pending: list = []
         self._idle: list[int] = list(range(n_groups))
         heapq.heapify(self._idle)
@@ -190,7 +346,11 @@ class EventDrivenMaster:
         self._batch_seq = itertools.count()
         self._reconfig: Optional[dict] = None
         self.completed_jobs: list[BatchJob] = []
+        self.dropped_requests: list[Request] = []
         self.reconfigurations = 0
+        self.speculations = 0  # clones actually launched
+        # observed batch service times: the empirical late-threshold fallback
+        self._service_window: deque[float] = deque(maxlen=64)
 
     # -- submission ----------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -249,6 +409,8 @@ class EventDrivenMaster:
                 self._pending_push(payload)
             elif kind == "depart":
                 self._on_depart(payload)
+            elif kind == "spec":
+                self._on_spec(payload)
         return self.completed_jobs
 
     # -- internals -----------------------------------------------------------
@@ -258,13 +420,26 @@ class EventDrivenMaster:
     def _n_queued(self) -> int:
         return len(self._queue) if self.policy.discipline == "fifo" else len(self._prio)
 
+    def _admission_key(self, req: Request) -> tuple:
+        if self.policy.discipline == "priority":
+            return (-req.priority, req.arrival, req.request_id)
+        return (req.deadline, req.arrival, req.request_id)  # 'edf'
+
+    def _drop(self, req: Request) -> None:
+        req.dropped = True
+        self.dropped_requests.append(req)
+        if self.on_drop is not None:
+            self.on_drop(req)
+
     def _on_arrival(self, req: Request) -> None:
+        if self.policy.drop_expired and req.deadline < req.arrival:
+            # already expired at admission: never queue dead work
+            self._drop(req)
+            return
         if self.policy.discipline == "fifo":
             self._queue.append(req)
         else:
-            heapq.heappush(
-                self._prio, (-req.priority, req.arrival, req.request_id, req)
-            )
+            heapq.heappush(self._prio, (self._admission_key(req), req))
         self._queued_ids.add(req.request_id)
         if self._n_queued() >= self.policy.max_batch_size:
             self._form(self.policy.max_batch_size)
@@ -281,28 +456,65 @@ class EventDrivenMaster:
         if self.policy.discipline == "fifo":
             req = self._queue.popleft()
         else:
-            req = heapq.heappop(self._prio)[3]
+            req = heapq.heappop(self._prio)[1]
         self._queued_ids.discard(req.request_id)
         return req
 
-    def _pending_push(self, job: BatchJob) -> None:
+    def _pending_key(self, job: BatchJob) -> tuple:
         if self.policy.discipline == "priority":
-            heapq.heappush(self._pending, (-job.priority, job.batch_id, job))
+            return (-job.priority, job.batch_id)
+        return (job.deadline, job.batch_id)  # 'edf'
+
+    def _pending_push(self, job: BatchJob) -> None:
+        if self.policy.discipline in ("priority", "edf"):
+            heapq.heappush(self._pending, (self._pending_key(job), job))
         else:
             self._pending.append(job)
 
     def _pending_pop(self) -> BatchJob:
-        if self.policy.discipline == "priority":
-            return heapq.heappop(self._pending)[2]
+        if self.policy.discipline in ("priority", "edf"):
+            return heapq.heappop(self._pending)[1]
         return self._pending.pop(0)
 
     def _form(self, k: int) -> None:
+        reqs = []
+        for _ in range(k):
+            req = self._pop_request()
+            if self.policy.drop_expired and req.deadline < self.clock:
+                # expired while queued: shed at the formation boundary
+                self._drop(req)
+            else:
+                reqs.append(req)
+        if not reqs:
+            return  # everything popped was dead work
         job = BatchJob(
             batch_id=next(self._batch_seq),
-            requests=tuple(self._pop_request() for _ in range(k)),
+            requests=tuple(reqs),
             formed_at=self.clock,
         )
         self._pending_push(job)
+
+    def _spec_threshold(self, job: BatchJob) -> Optional[float]:
+        """Lateness threshold for one job: caller model, else the empirical
+        late-quantile of observed batch services, else None (not yet
+        calibrated -> no speculation)."""
+        pol = self.speculation
+        if pol.threshold is not None:
+            return float(pol.threshold(job))
+        if len(self._service_window) >= pol.min_observations:
+            return float(
+                np.quantile(np.asarray(self._service_window), pol.late_quantile)
+            )
+        return None
+
+    def _arm_speculation(self, job: BatchJob) -> None:
+        """Schedule the late-response check for a just-(re)dispatched job."""
+        pol = self.speculation
+        if pol is None or pol.max_clones <= job.n_clones:
+            return
+        threshold = self._spec_threshold(job)
+        if threshold is not None and math.isfinite(threshold) and threshold > 0:
+            self._push(self.clock + threshold, "spec", job)
 
     def _try_dispatch(self) -> None:
         if self._reconfig is not None:
@@ -324,18 +536,51 @@ class EventDrivenMaster:
             job.completed = self.clock + float(job.service_times[job.winner])
             self._in_flight[group] = job
             self._push(job.completed, "depart", job)
+            self._arm_speculation(job)
+
+    def _on_spec(self, job: BatchJob) -> None:
+        """Late-response check: the job's first response has not arrived by
+        the speculation threshold -> clone it onto an idle set (if any)."""
+        if job.departed or job.completed <= self.clock:
+            return  # the original responded first: speculation is a no-op
+        if self._reconfig is not None:
+            return  # draining: never grow the in-flight footprint
+        if job.n_clones >= self.speculation.max_clones:
+            return  # clone budget exhausted
+        if self._idle:
+            group = heapq.heappop(self._idle)
+            times = np.asarray(self._sampler(job, group), dtype=float)
+            job.clone_groups.append(group)
+            job.clone_dispatched.append(self.clock)
+            job.clone_service_times.append(times)
+            self._in_flight[group] = job
+            self.speculations += 1
+            clone_done = self.clock + float(times.min())
+            if clone_done < job.completed:
+                # the clone wins the race: complete earlier and cancel the
+                # originals (the old depart event is ignored via `departed`)
+                job.completed = clone_done
+                job.winner_clone = job.n_clones - 1
+                self._push(job.completed, "depart", job)
+        # re-arm while budget remains (also covers "no idle set right now")
+        self._arm_speculation(job)
 
     def _on_depart(self, job: BatchJob) -> None:
-        del self._in_flight[job.group]
+        if job.departed:
+            return  # stale event: a winning clone already departed this job
+        job.departed = True
+        for group in job.groups:
+            del self._in_flight[group]
+            # with a reconfig pending, freed sets are NOT re-added — the
+            # whole fabric is rebuilt at the quiesce point in _apply_reconfig
+            if self._reconfig is None:
+                heapq.heappush(self._idle, group)
         for req in job.requests:
             req.batch_id = job.batch_id
             req.dispatched = job.dispatched
             req.completion = job.completed
         self.completed_jobs.append(job)
-        # with a reconfig pending, freed sets are NOT re-added — the whole
-        # fabric is rebuilt at the quiesce point in _apply_reconfig
-        if self._reconfig is None:
-            heapq.heappush(self._idle, job.group)
+        self._service_window.append(job.service)
         # every completed job reports (model work + telemetry happen in the
         # callback), including those draining out; a newer reconfig request
         # supersedes the pending one at the same quiesce point

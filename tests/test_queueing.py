@@ -8,19 +8,23 @@ import math
 import numpy as np
 import pytest
 
+from _prop import given, settings, st
 from repro.core import (
     AnalyticPlanner,
     ClusterSpec,
     Exponential,
     Objective,
     ReplicationPlan,
+    RescalePlan,
     ShiftedExponential,
     SimulatedPlanner,
     StragglerTuner,
     TunerConfig,
     simulate_sojourn,
     sweep_sojourn,
+    sweep_sojourn_speculative,
 )
+from repro.core.simulator import simulate_sojourn_quantiles
 from repro.serving import (
     DeterministicArrivals,
     EventDrivenMaster,
@@ -30,6 +34,7 @@ from repro.serving import (
     ReplicatedServingEngine,
     Request,
     ServeEngineConfig,
+    SpeculationPolicy,
     TraceArrivals,
     make_arrivals,
     partition_requests,
@@ -522,6 +527,440 @@ def test_drained_jobs_still_report_completion():
     assert len(jobs) == 2
     assert seen == [0, 1]
     assert master.reconfigurations == 1
+
+
+# -- speculative re-dispatch --------------------------------------------------
+
+def test_speculation_clone_wins_and_cancels_originals():
+    """A late batch is cloned onto an idle set; the faster clone completes
+    the job, the originals are cancelled (used_mask all False), and both
+    sets free at the winner's time."""
+    svc = iter([np.array([10.0]), np.array([1.0])])
+    master = EventDrivenMaster(
+        2, lambda job, g: next(svc),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(max_clones=1, threshold=lambda job: 2.0),
+    )
+    master.submit(Request(request_id=0, arrival=0.0))
+    jobs = master.run()
+    job = jobs[0]
+    assert master.speculations == 1
+    assert job.n_clones == 1 and job.winner_clone == 0
+    assert job.clone_dispatched == [2.0]  # trigger at dispatch + threshold
+    assert job.completed == pytest.approx(3.0)  # 2.0 + clone's 1.0
+    assert not job.used_mask().any()  # no original replica's result used
+    assert sorted(job.groups) == [0, 1]
+    assert sorted(master._idle) == [0, 1]  # both sets freed at completion
+
+
+def test_speculation_after_original_completes_is_noop():
+    master = EventDrivenMaster(
+        2, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(threshold=lambda job: 2.0),
+    )
+    master.submit(Request(request_id=0, arrival=0.0))
+    jobs = master.run()
+    assert master.speculations == 0
+    assert jobs[0].n_clones == 0 and jobs[0].winner_clone == -1
+    assert jobs[0].completed == pytest.approx(1.0)
+
+
+def test_speculation_losing_clone_is_cancelled():
+    """A clone slower than the original changes nothing about completion;
+    it is cancelled at the original's response and the set frees then."""
+    svc = iter([np.array([3.0]), np.array([10.0])])
+    master = EventDrivenMaster(
+        2, lambda job, g: next(svc),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(max_clones=1, threshold=lambda job: 1.0),
+    )
+    master.submit(Request(request_id=0, arrival=0.0))
+    jobs = master.run()
+    job = jobs[0]
+    assert master.speculations == 1
+    assert job.winner_clone == -1  # original replica won
+    np.testing.assert_array_equal(job.used_mask(), [True])
+    assert job.completed == pytest.approx(3.0)
+    assert sorted(master._idle) == [0, 1]
+
+
+def test_speculation_clone_budget_exhausted():
+    """The trigger re-arms after each clone but stops at max_clones, even
+    while the job stays late and idle sets remain."""
+    master = EventDrivenMaster(
+        4, lambda job, g: np.array([100.0]),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(max_clones=2, threshold=lambda job: 1.0),
+    )
+    master.submit(Request(request_id=0, arrival=0.0))
+    jobs = master.run()
+    assert jobs[0].n_clones == 2  # budget, not the number of idle sets
+    assert master.speculations == 2
+    zero = EventDrivenMaster(
+        2, lambda job, g: np.array([5.0]),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(max_clones=0, threshold=lambda job: 1.0),
+    )
+    zero.submit(Request(request_id=0, arrival=0.0))
+    zero.run()
+    assert zero.speculations == 0
+
+
+def test_speculation_needs_an_idle_set():
+    """B=1 leaves no set to clone onto: speculation never fires (and the
+    re-armed trigger terminates cleanly)."""
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([5.0]),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(max_clones=3, threshold=lambda job: 1.0),
+    )
+    master.submit(Request(request_id=0, arrival=0.0))
+    jobs = master.run()
+    assert master.speculations == 0
+    assert jobs[0].completed == pytest.approx(5.0)
+
+
+def test_speculation_empirical_threshold_calibrates():
+    """Without a caller-supplied threshold the master self-calibrates from
+    its window of observed batch services once min_observations accrue."""
+    services = iter([1.0, 1.0, 1.0, 1.0, 10.0, 1.0])
+    master = EventDrivenMaster(
+        2, lambda job, g: np.array([next(services)]),
+        policy=QueuePolicy(max_batch_size=1),
+        speculation=SpeculationPolicy(
+            late_quantile=0.5, max_clones=1, min_observations=4
+        ),
+    )
+    for i, a in enumerate([0.0, 2.0, 4.0, 6.0, 8.0]):
+        master.submit(Request(request_id=i, arrival=a))
+    jobs = master.run()
+    # jobs 0-3 complete before the window fills; job 4 (service 10) trips
+    # the ~1.0 empirical threshold at t=9 and its clone finishes at 10
+    assert master.speculations == 1
+    assert jobs[-1].completed == pytest.approx(10.0)
+
+
+def test_mm1_with_speculation_matches_plain_and_closed_form():
+    """B=1 pins the speculative simulator: no spare set means no clone can
+    ever launch, so the event-driven speculative path must reproduce the
+    plain recursion draw-for-draw AND the M/M/1 closed form."""
+    plain = simulate_sojourn(
+        Exponential(mu=2.0), 1, 1, arrival_rate=1.0, n_jobs=20_000, seed=0
+    )
+    spec = simulate_sojourn(
+        Exponential(mu=2.0), 1, 1, arrival_rate=1.0, n_jobs=20_000, seed=0,
+        speculation_quantile=0.9,
+    )
+    np.testing.assert_array_equal(spec.samples, plain.samples)
+    assert spec.mean == pytest.approx(1.0, rel=0.08)  # 1/(mu - lambda)
+
+
+def test_speculative_sweep_cells_match_single_sim():
+    """CRN contract: every (B, q) cell of the batched speculative sweep is
+    bit-identical to the standalone simulate_sojourn call; q=None cells
+    match the plain sweep path."""
+    lam = 8.0
+    res = sweep_sojourn_speculative(
+        FLEET_DIST, N_FLEET, arrival_rate=lam, quantiles=(None, 0.9),
+        n_jobs=1_500, seed=5,
+    )
+    for i, b in enumerate(res.splits):
+        plain = simulate_sojourn(
+            FLEET_DIST, N_FLEET, b, arrival_rate=lam, n_jobs=1_500, seed=5
+        )
+        spec = simulate_sojourn(
+            FLEET_DIST, N_FLEET, b, arrival_rate=lam, n_jobs=1_500, seed=5,
+            speculation_quantile=0.9,
+        )
+        np.testing.assert_array_equal(res.samples[0, i, 0], plain.samples)
+        np.testing.assert_array_equal(res.samples[0, i, 1], spec.samples)
+
+
+def test_objective_speculation_validation():
+    with pytest.raises(ValueError, match="load-aware"):
+        Objective(speculation_quantiles=(0.9,))  # speculation needs load
+    with pytest.raises(ValueError):
+        Objective(utilization=0.5, speculation_quantiles=(1.5,))
+    with pytest.raises(ValueError):
+        Objective(utilization=0.5, speculation_quantiles=())
+    ok = Objective(utilization=0.5, speculation_quantiles=(0.9,))
+    assert ok.speculation_quantiles == (0.9,)
+
+
+def test_planner_scores_speculation_pairs_on_heavy_fleet():
+    """On the heavy-shift fleet (static replication unaffordable at u=0.7)
+    the planner must choose to speculate, record the trigger on the Plan,
+    and never score worse than plain replication (same CRN draws)."""
+    heavy = ClusterSpec(n_workers=16, dist=ShiftedExponential(0.5, 2.0))
+    planner = SimulatedPlanner(n_trials=3_000, seed=0)
+    plain = planner.plan(heavy, Objective(metric="p99", utilization=0.7))
+    sp = planner.plan(heavy, Objective(
+        metric="p99", utilization=0.7, speculation_quantiles=(0.8, 0.9),
+    ))
+    assert plain.speculation_quantile is None
+    assert sp.speculation_quantile in (0.8, 0.9)
+    assert sp.score <= plain.score
+
+
+# -- deadlines / EDF ----------------------------------------------------------
+
+def test_deadline_expired_at_admission_is_dropped():
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=1, drop_expired=True),
+    )
+    dead = Request(request_id=0, arrival=1.0, deadline=0.5)
+    ok = Request(request_id=1, arrival=1.0, deadline=99.0)
+    master.submit(dead)
+    master.submit(ok)
+    jobs = master.run()
+    assert dead.dropped and dead in master.dropped_requests
+    assert math.isnan(dead.completion) and dead.missed_deadline
+    assert len(jobs) == 1 and jobs[0].requests == (ok,)
+    assert ok.completion == pytest.approx(2.0) and not ok.missed_deadline
+
+
+def test_deadline_expired_while_queued_dropped_at_formation():
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=2, drop_expired=True),
+    )
+    stale = Request(request_id=0, arrival=0.0, deadline=0.5)
+    fresh = Request(request_id=1, arrival=1.0, deadline=99.0)
+    master.submit(stale)
+    master.submit(fresh)  # formation fires at t=1.0, stale already expired
+    jobs = master.run()
+    assert stale.dropped
+    assert len(jobs) == 1 and jobs[0].size == 1
+
+
+def test_missed_deadline_served_when_drop_disabled():
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([2.0]),
+        policy=QueuePolicy(max_batch_size=1),  # drop_expired off
+    )
+    req = Request(request_id=0, arrival=0.0, deadline=1.0)
+    master.submit(req)
+    master.run()
+    assert not req.dropped
+    assert req.completion == pytest.approx(2.0)
+    assert req.missed_deadline  # late but served
+
+
+def test_edf_discipline_serves_most_urgent_batch_first():
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=1, discipline="edf"),
+    )
+    deadlines = [math.inf, 5.0, 1.0, 3.0]
+    for i, d in enumerate(deadlines):
+        master.submit(Request(request_id=i, arrival=0.1 * i, deadline=d))
+    jobs = master.run()
+    served = [job.requests[0].request_id for job in jobs]
+    # id 0 dispatches on the idle set at t=0; the rest queue and go EDF
+    assert served == [0, 2, 3, 1]
+
+
+@settings(max_examples=20)
+@given(deadlines=st.lists(st.floats(0.1, 50.0), min_size=1, max_size=12))
+def test_edf_ordering_property(deadlines):
+    """Property: with one busy server and every request queued behind it,
+    EDF serves in exactly (deadline, arrival, id) sorted order."""
+    master = EventDrivenMaster(
+        1, lambda job, g: np.array([1.0]),
+        policy=QueuePolicy(max_batch_size=1, discipline="edf"),
+    )
+    master.submit(Request(request_id=999, arrival=0.0))  # occupies the set
+    reqs = [
+        Request(request_id=i, arrival=0.1 + 1e-3 * i, deadline=0.1 + d)
+        for i, d in enumerate(deadlines)
+    ]
+    for r in reqs:
+        master.submit(r)
+    jobs = master.run()
+    served = [job.requests[0].request_id for job in jobs[1:]]
+    expected = [
+        r.request_id
+        for r in sorted(reqs, key=lambda r: (r.deadline, r.arrival))
+    ]
+    assert served == expected
+
+
+def test_engine_deadline_telemetry_and_drop():
+    """The engine threads deadlines end to end: miss rate reported, tuner
+    fed, drop-on-expiry sheds dead work, sojourn stats cover survivors."""
+    base = dict(
+        n_server_groups=8, n_batches=4, batch_size=4, delta=0.02, mu=2.0,
+        utilization=0.7, execute_model=False, seed=3,
+    )
+    eng = ReplicatedServingEngine(ServeEngineConfig(**base, deadline=0.4))
+    out = eng.run_load(n_requests=800)
+    assert 0.0 < out["deadline_miss_rate"] < 1.0
+    assert eng.tuner.observed_miss_rate == pytest.approx(
+        out["deadline_miss_rate"]
+    )
+    assert out["n_dropped"] == 0
+    dropper = ReplicatedServingEngine(ServeEngineConfig(
+        **base, deadline=0.05, drop_expired=True,
+    ))
+    out2 = dropper.run_load(n_requests=800)
+    assert out2["n_dropped"] > 0
+    assert out2["requests"] == 800
+    dropped = [s for s in out2["stats"] if s.dropped]
+    assert all(math.isnan(s.completion) for s in dropped)
+    assert all(s.missed_deadline for s in dropped)
+    # no-deadline runs report None, and sojourns never include dropped work
+    plain = ReplicatedServingEngine(ServeEngineConfig(**base))
+    assert plain.run_load(n_requests=200)["deadline_miss_rate"] is None
+
+
+def test_engine_speculation_smoke():
+    """Speculation knobs thread end to end: clones launch on the heavy
+    fleet and per-request accounting stays consistent."""
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=16, n_batches=16, batch_size=4, delta=0.5, mu=2.0,
+        utilization=0.7, execute_model=False, seed=0,
+        speculation_quantile=0.8,
+    ))
+    out = eng.run_load(n_requests=600)
+    assert out["speculations"] > 0
+    assert all(s.completion >= s.dispatched >= s.arrival for s in out["stats"])
+
+
+def test_simulate_sojourn_quantiles_bit_parity():
+    """The per-B multi-trigger helper (hoisted draws) matches standalone
+    simulate_sojourn calls entry for entry."""
+    sets = simulate_sojourn_quantiles(
+        FLEET_DIST, N_FLEET, 4, arrival_rate=8.0, quantiles=(None, 0.9),
+        n_jobs=1_500, seed=5,
+    )
+    plain = simulate_sojourn(
+        FLEET_DIST, N_FLEET, 4, arrival_rate=8.0, n_jobs=1_500, seed=5
+    )
+    spec = simulate_sojourn(
+        FLEET_DIST, N_FLEET, 4, arrival_rate=8.0, n_jobs=1_500, seed=5,
+        speculation_quantile=0.9,
+    )
+    np.testing.assert_array_equal(sets[0], plain.samples)
+    np.testing.assert_array_equal(sets[1], spec.samples)
+
+
+def test_engine_adopts_replan_speculation_trigger(monkeypatch):
+    """When a load-aware re-plan swept (B, trigger) pairs, the engine must
+    run the trigger the winning score assumed — including disabling
+    speculation when the planner found plain replication better."""
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=8, n_batches=8, batch_size=2, delta=0.02, mu=2.0,
+        utilization=0.7, execute_model=False, seed=0, tuner=True,
+        planner_mode="simulate", speculation_quantile=0.8,
+    ))
+    assert eng.speculation_quantile == 0.8
+    plan = eng.planner.plan(
+        ClusterSpec(n_workers=8, dist=eng.dist),
+        Objective(metric="mean", arrival_rate=4.0,
+                  speculation_quantiles=(0.8,)),
+    )
+    plan = dataclasses.replace(
+        plan, speculation_quantile=None,
+        replication=ReplicationPlan(n_data=8, n_batches=4),
+    )
+    rp = RescalePlan(old_batches=8, new_batches=4, predicted_old=1.0,
+                     predicted_new=0.5, fit=None, step=0, plan=plan)
+    monkeypatch.setattr(eng.tuner, "maybe_replan", lambda: rp)
+    eng.serve(20)  # first completed job applies the re-plan
+    assert eng.plan.n_batches == 4
+    assert eng.speculation_quantile is None  # trigger adopted (disabled)
+    assert eng._speculation_policy() is None
+
+
+def test_engine_adopts_trigger_change_at_same_b(monkeypatch):
+    """A sweep that keeps B but prefers a different trigger still updates
+    the engine — a trigger change needs no drain, so it rides along even
+    when no RescalePlan is emitted."""
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=8, n_batches=8, batch_size=2, delta=0.02, mu=2.0,
+        utilization=0.7, execute_model=False, seed=0, tuner=True,
+        planner_mode="simulate", speculation_quantile=0.8,
+    ))
+    lp = eng.planner.plan(
+        ClusterSpec(n_workers=8, dist=eng.dist, feasible_b=(8,)),
+        Objective(metric="mean", arrival_rate=4.0,
+                  speculation_quantiles=(0.95,)),
+    )
+    lp = dataclasses.replace(lp, speculation_quantile=0.95)
+    monkeypatch.setattr(eng.tuner, "maybe_replan", lambda: None)
+    eng.tuner.last_plan = lp
+    eng.serve(10)
+    assert eng.plan.n_batches == 8  # no move
+    assert eng.speculation_quantile == 0.95  # trigger adopted anyway
+
+
+def test_tuner_objective_carries_speculation_triggers():
+    """A load-aware re-plan must score candidate B with the SAME clone
+    trigger the serving master runs — otherwise a fleet that is only
+    stable because it speculates looks saturated to the planner."""
+    tuner = StragglerTuner(
+        ReplicationPlan(n_data=8, n_batches=4),
+        TunerConfig(mode="simulate"),
+        speculation_quantiles=(0.8,),
+    )
+    tuner.observe_load(3.0)
+    assert tuner.objective().speculation_quantiles == (0.8,)
+    # without load telemetry the objective stays load-free (speculation
+    # scoring needs queueing), and the engine threads its config through
+    fresh = StragglerTuner(
+        ReplicationPlan(n_data=8, n_batches=4),
+        TunerConfig(mode="simulate"),
+        speculation_quantiles=(0.8,),
+    )
+    assert fresh.objective().speculation_quantiles is None
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        n_server_groups=8, n_batches=4, batch_size=2, utilization=0.7,
+        execute_model=False, seed=0, speculation_quantile=0.9,
+    ))
+    assert eng.tuner.speculation_quantiles == (0.9,)
+
+
+def test_engine_trace_arrival_kind_from_config():
+    base = dict(n_server_groups=8, n_batches=2, batch_size=2,
+                execute_model=False, seed=0, arrival_kind="trace")
+    eng = ReplicatedServingEngine(ServeEngineConfig(
+        **base, arrival_offsets=(0.0, 0.2, 0.5, 0.9),
+    ))
+    stats = eng.serve(10)  # trace cycles past its length
+    assert len(stats) == 10
+    with pytest.raises(ValueError, match="arrival_offsets"):
+        ReplicatedServingEngine(ServeEngineConfig(**base)).serve(4)
+
+
+def test_tuner_miss_rate_breach_waives_hysteresis():
+    """An SLO breach (observed miss rate past target) turns the hysteresis
+    threshold off: a predicted win too small to move otherwise moves."""
+    rng = np.random.default_rng(0)
+    dist = Exponential(mu=2.0)
+
+    def fresh_tuner():
+        t = StragglerTuner(
+            ReplicationPlan(n_data=16, n_batches=16),
+            TunerConfig(
+                min_samples=16, cooldown_steps=0,
+                improvement_threshold=0.95, miss_rate_target=0.05,
+            ),
+        )
+        for _ in range(4):
+            t.observe(dist.sample(rng, 16))
+        return t
+
+    calm = fresh_tuner()
+    assert calm.maybe_replan() is None  # ~70% win < 95% threshold
+    breached = fresh_tuner()
+    breached.observe_deadline_misses(10, 100)
+    assert breached.observed_miss_rate == pytest.approx(0.10)
+    rp = breached.maybe_replan()
+    assert rp is not None and rp.new_batches != 16
+    breached.apply(rp)
+    assert breached.observed_miss_rate is None  # window cleared on apply
 
 
 # -- tuner telemetry plumbing -------------------------------------------------

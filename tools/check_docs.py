@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Docs consistency checker: every `repro.*` symbol referenced by the docs
+must resolve, and the documented code examples must run.
+
+Two checks, both CI-gating (see .github/workflows/ci.yml, `docs` job):
+
+1. **Symbol check** — scan README.md and docs/*.md for backticked dotted
+   references (`repro.core.planner.ClusterSpec`, `repro.serving.engine
+   .ReplicatedServingEngine.run_load`, ...), import the longest importable
+   module prefix, and getattr the rest.  A doc that names a symbol that was
+   renamed or removed fails the build instead of silently rotting.
+2. **Example check** — execute every ```python fenced block in README.md
+   and docs/planner_api.md (the files documented as runnable).  Blocks
+   whose first line is ``# not-runnable`` are skipped.
+
+Run: PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SYMBOL_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+RUNNABLE_FILES = [REPO / "README.md", REPO / "docs" / "planner_api.md"]
+
+# a backticked dotted path rooted at the package, e.g. `repro.core.Metric`;
+# an optional trailing call/parenthesis is stripped before resolution
+SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)(?:\(\))?`")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def resolve(path: str) -> bool:
+    """Import the longest importable module prefix, getattr the rest."""
+    parts = path.split(".")
+    for i in range(len(parts), 0, -1):
+        modname = ".".join(parts[:i])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbols() -> list[str]:
+    errors = []
+    for md in SYMBOL_FILES:
+        text = md.read_text()
+        for ref in sorted(set(SYMBOL_RE.findall(text))):
+            if not resolve(ref):
+                errors.append(f"{md.relative_to(REPO)}: unresolved `{ref}`")
+    return errors
+
+
+def check_examples() -> list[str]:
+    errors = []
+    for md in RUNNABLE_FILES:
+        for k, block in enumerate(FENCE_RE.findall(md.read_text())):
+            if block.lstrip().startswith("# not-runnable"):
+                continue
+            try:
+                exec(compile(block, f"{md.name}[block {k}]", "exec"), {})
+            except Exception as exc:  # noqa: BLE001 - report, don't crash
+                errors.append(
+                    f"{md.relative_to(REPO)} python block {k} failed: "
+                    f"{type(exc).__name__}: {exc}"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = check_symbols() + check_examples()
+    for err in errors:
+        print(f"FAIL {err}")
+    if errors:
+        return 1
+    n_files = len(SYMBOL_FILES)
+    print(f"docs OK: symbols resolve across {n_files} files, examples ran")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
