@@ -1,12 +1,16 @@
-"""Planner overhead per re-plan: analytic vs simulated vs heterogeneous.
+"""Planner overhead per re-plan: analytic vs simulated vs heterogeneous
+vs empirical (bootstrap-K curve).
 
 A re-plan sits on the control-plane hot path (the tuner may call it every
 ``cooldown_steps`` training steps; serving calls it between rounds), so its
 cost bounds how reactive the system can be.  Measures one full
 ``Planner.plan(spec, objective)`` — sweep + argmin + placement — for the
-three implementations on an N=64 fleet, plus the skew-aware shrink path
+four implementations on an N=64 fleet, plus the skew-aware shrink path
 (``ClusterSpec.drop_slowest`` + re-plan) that the elastic layer runs on
-worker loss.
+worker loss.  The empirical rows sweep the bootstrap resample count K:
+resamples ride the dists axis of ONE batched engine call, so the overhead
+curve shows how the per-resample marginal cost amortizes (the number the
+GoF-gate fallback pays when a parametric fit is rejected mid-run).
 """
 
 import time
@@ -16,6 +20,8 @@ import numpy as np
 from repro.core import (
     AnalyticPlanner,
     ClusterSpec,
+    Empirical,
+    EmpiricalPlanner,
     HeterogeneousPlanner,
     Objective,
     ShiftedExponential,
@@ -80,6 +86,25 @@ def run():
             f"lost=4;dropped={list(dropped)};B*={plan.n_batches}",
         )
     )
+
+    # empirical-vs-parametric: bootstrap-K overhead curve.  Same fleet, the
+    # planning distribution is a 2k-atom telemetry pool; every K shares the
+    # simulated planner's trial budget, so the row-over-row growth is the
+    # pure cost of more resamples (and parity row planner_simulated above is
+    # the K-free parametric baseline).
+    pool = Empirical(tuple(DIST.sample(np.random.default_rng(0), 2_000)))
+    emp_spec = ClusterSpec(n_workers=N, dist=pool)
+    for k in (4, 16, 64):
+        ep = EmpiricalPlanner(n_trials=TRIALS, n_resamples=k)
+        s, plan = _best_of(lambda: ep.plan(emp_spec, obj), n=3)
+        rows.append(
+            (
+                f"planner_empirical_k{k}",
+                s * 1e6,
+                f"N={N};trials={TRIALS};resamples={k};B*={plan.n_batches};"
+                f"confidence={plan.confidence:.2f}",
+            )
+        )
     return rows
 
 

@@ -16,6 +16,7 @@ import time
 import numpy as np
 
 from repro.core import (
+    Empirical,
     ShiftedExponential,
     balanced_nonoverlapping,
     divisors,
@@ -93,6 +94,21 @@ def run():
         n=2,
     )
     rows.append(("sweep_simulate_hetero", het_s * 1e6, f"slow_nodes=1"))
+
+    # empirical vs parametric sweep: same fleet, the dist is a 4k-atom
+    # telemetry ECDF — the extra cost over sweep_simulate_batched is the
+    # rank coupling (argsort of the shared draws + quantile lookup per dist)
+    pool = Empirical(tuple(DIST.sample(np.random.default_rng(0), 4_000)))
+    emp_s = _best_of(
+        lambda: sweep_simulate(pool, N, n_trials=TRIALS, seed=0), n=2
+    )
+    rows.append(
+        (
+            "sweep_simulate_empirical",
+            emp_s * 1e6,
+            f"atoms=4000;parametric={batched_s:.3f}s;empirical={emp_s:.3f}s",
+        )
+    )
     return rows
 
 

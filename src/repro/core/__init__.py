@@ -15,9 +15,11 @@ from .gradient_coding import (
     simulate_gradient_coding,
 )
 from .order_stats import (
+    Empirical,
     Exponential,
     ServiceDistribution,
     ShiftedExponential,
+    batch_service,
     completion_mean,
     completion_quantile,
     completion_var,
@@ -70,10 +72,20 @@ from .spectrum import (
     sweep,
     sweep_simulated,
 )
-from .estimator import FitResult, fit_best, fit_exponential, fit_shifted_exponential
+from .estimator import (
+    FitResult,
+    GofResult,
+    fit_best,
+    fit_exponential,
+    fit_shifted_exponential,
+    goodness_of_fit,
+    ks_critical,
+    ks_statistic,
+)
 from .planner import (
     AnalyticPlanner,
     ClusterSpec,
+    EmpiricalPlanner,
     HeterogeneousPlanner,
     Objective,
     Plan,

@@ -7,6 +7,12 @@ The tuner observes per-worker step times.  Two complications vs textbook MLE:
   only known to exceed the step's cutoff.  We support censored samples.
 * **Model selection** — Exp vs SExp: we fit both and pick by (censored)
   log-likelihood with a small penalty for the extra parameter (AIC).
+* **Goodness of fit** — a parametric family can be the better of two wrong
+  answers.  :func:`goodness_of_fit` measures the censoring-aware
+  Kolmogorov-Smirnov distance between the observation window (Kaplan-Meier
+  ECDF) and a fitted distribution; the tuner uses it as the gate that
+  switches re-planning onto the empirical path when both families are
+  rejected by the data.
 
 Shifted-exponential MLE (uncensored): Delta_hat = X_(1) (sample min),
 mu_hat = 1 / (mean(X) - X_(1)).  We apply the standard small-sample
@@ -20,9 +26,23 @@ import math
 
 import numpy as np
 
-from .order_stats import Exponential, ServiceDistribution, ShiftedExponential
+from .order_stats import (
+    Exponential,
+    ServiceDistribution,
+    ShiftedExponential,
+    _kaplan_meier as _km_curve,
+)
 
-__all__ = ["FitResult", "fit_exponential", "fit_shifted_exponential", "fit_best"]
+__all__ = [
+    "FitResult",
+    "GofResult",
+    "fit_exponential",
+    "fit_shifted_exponential",
+    "fit_best",
+    "ks_critical",
+    "ks_statistic",
+    "goodness_of_fit",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +116,77 @@ def fit_shifted_exponential(
     ll = n_unc * math.log(mu) - mu * total
     return FitResult(
         ShiftedExponential(delta=delta, mu=mu), ll, int(x.size), int(c.sum())
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class GofResult:
+    """Outcome of a censoring-aware KS goodness-of-fit check.
+
+    ``rejected`` compares the observed KS distance to the asymptotic
+    critical value at ``alpha``.  The critical value assumes a FIXED null
+    distribution; with fitted parameters the true test is anti-conservative
+    (Lilliefors), which errs on the side of tripping the gate — the safe
+    direction for a fallback to the empirical planner.
+    """
+
+    statistic: float  # sup |KM-ECDF - F_fit| over the observation window
+    threshold: float  # critical KS distance at alpha
+    n_effective: int  # uncensored observations driving the critical value
+    alpha: float
+
+    @property
+    def rejected(self) -> bool:
+        return self.statistic > self.threshold
+
+
+def ks_critical(n: int, alpha: float = 0.01) -> float:
+    """Asymptotic two-sided KS critical value ``sqrt(-ln(alpha/2) / (2n))``."""
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if not 0.0 < alpha < 1.0:
+        raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+    return math.sqrt(-math.log(alpha / 2.0) / (2.0 * n))
+
+
+def ks_statistic(samples, dist: ServiceDistribution, censored=None) -> float:
+    """Censoring-aware KS distance between telemetry and ``dist``.
+
+    The empirical side is the RAW Kaplan-Meier product-limit curve
+    (:func:`~repro.core.order_stats._kaplan_meier`), so right-censored
+    observations inform the at-risk counts without biasing the ECDF low;
+    the distance is the sup over both sides of every KM jump against
+    ``dist.cdf``.  Survival mass beyond the largest death is excluded on
+    purpose: the KM curve is not estimated there, and Efron's
+    tail-collapse convention (used by ``Empirical.from_censored`` to keep
+    moments finite) would fabricate a final jump that no well-fitting
+    distribution could match.
+    """
+    x, c = _validate(samples, censored)
+    atoms, masses, _ = _km_curve(x, c)
+    cum = np.cumsum(masses)
+    cdf = getattr(dist, "cdf", None)
+    if cdf is None:
+        raise TypeError(
+            f"{type(dist).__name__} exposes no cdf(); cannot run the KS gate"
+        )
+    f = np.asarray(cdf(atoms), dtype=float)
+    return float(
+        np.max(np.maximum(np.abs(f - cum), np.abs(f - (cum - masses))))
+    )
+
+
+def goodness_of_fit(
+    samples, dist: ServiceDistribution, censored=None, alpha: float = 0.01
+) -> GofResult:
+    """KS distance + accept/reject verdict at ``alpha`` (see GofResult)."""
+    x, c = _validate(samples, censored)
+    n_unc = int((~c).sum())
+    return GofResult(
+        statistic=ks_statistic(x, dist, c),
+        threshold=ks_critical(n_unc, alpha),
+        n_effective=n_unc,
+        alpha=alpha,
     )
 
 

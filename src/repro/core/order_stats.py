@@ -16,8 +16,14 @@ is ``Exp(r * mu * B / N) = Exp(mu)``, hence
     E[T] = N*Delta/B + H_B / mu          (Thm 3; Delta=0 gives Thm 2)
     Var[T] = (sum_{k=1..B} k^-2) / mu^2  (Thms 2 & 4 — shift is deterministic)
 
-Everything in this module is plain-float math (no jax) so it can be used by
-the control plane (tuner / spectrum optimizer) without touching device state.
+Everything in this module is plain python/numpy math (no jax) so it can be
+used by the control plane (tuner / spectrum optimizer) without touching
+device state.
+
+Beyond the paper's two parametric families, :class:`Empirical` carries a
+(weighted) ECDF fitted straight from telemetry — censoring-aware via
+Kaplan-Meier (:meth:`Empirical.from_censored`) — so the whole
+``ClusterSpec -> Plan`` pipeline can plan for ANY measured workload.
 
 Heterogeneous workers (per-worker rate multipliers ``rates[j]``, the
 simulator's slow-node model): :func:`expected_completion_rates` gives E[T]
@@ -28,9 +34,12 @@ of each batch's replica set.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
 
 __all__ = [
     "harmonic",
@@ -38,6 +47,7 @@ __all__ = [
     "ServiceDistribution",
     "Exponential",
     "ShiftedExponential",
+    "Empirical",
     "batch_service",
     "completion_mean",
     "completion_var",
@@ -96,6 +106,11 @@ class Exponential(ServiceDistribution):
     def sample(self, rng, shape):
         return rng.exponential(scale=1.0 / self.mu, size=shape)
 
+    def cdf(self, t):
+        """P{T <= t}, vectorized (used by the goodness-of-fit gate)."""
+        t = np.asarray(t, dtype=float)
+        return np.where(t > 0, -np.expm1(-self.mu * np.maximum(t, 0.0)), 0.0)
+
     def mean(self) -> float:
         return 1.0 / self.mu
 
@@ -122,11 +137,224 @@ class ShiftedExponential(ServiceDistribution):
     def sample(self, rng, shape):
         return self.delta + rng.exponential(scale=1.0 / self.mu, size=shape)
 
+    def cdf(self, t):
+        """P{T <= t}, vectorized (used by the goodness-of-fit gate)."""
+        t = np.asarray(t, dtype=float)
+        z = np.maximum(t - self.delta, 0.0)
+        return np.where(t > self.delta, -np.expm1(-self.mu * z), 0.0)
+
     def mean(self) -> float:
         return self.delta + 1.0 / self.mu
 
     def var(self) -> float:
         return 1.0 / self.mu**2
+
+
+def _kaplan_meier(
+    times: np.ndarray, censored: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, float]:
+    """Product-limit curve: (death atoms, their KM masses, leftover survival).
+
+    ``leftover`` is the survival mass beyond the largest uncensored time
+    (positive when the largest observations are censored) — callers choose
+    what to do with it: :meth:`Empirical.from_censored` collapses it onto
+    the last atom (Efron's convention, finite moments), while the
+    goodness-of-fit KS statistic leaves it out (the KM curve is simply not
+    estimated past the last death, and folding the mass in would fabricate
+    a jump no fit could match).
+
+    Tie convention: deaths precede censorings at equal times (a same-time
+    censored subject is still at risk for the death).
+    """
+    order = np.lexsort((censored, times))
+    t, c = times[order], censored[order]
+    n = t.size
+    atoms: list[float] = []
+    masses: list[float] = []
+    survival = 1.0
+    i = 0
+    while i < n:
+        j = i
+        while j < n and t[j] == t[i] and c[j] == c[i]:
+            j += 1
+        if not c[i]:  # a group of tied deaths
+            at_risk = n - i
+            d = j - i
+            new_survival = survival * (1.0 - d / at_risk)
+            atoms.append(float(t[i]))
+            masses.append(survival - new_survival)
+            survival = new_survival
+        i = j
+    return np.asarray(atoms), np.asarray(masses), survival
+
+
+@dataclasses.dataclass(frozen=True)
+class Empirical(ServiceDistribution):
+    """Empirical service distribution: a (weighted) ECDF over observed times.
+
+    The paper's closed forms — and the parametric planners built on them —
+    assume Exp/SExp service.  Real telemetry rarely fits either family, and
+    the optimal replication level is driven by the *tail* of the actual
+    distribution, which a two-parameter fit can badly misestimate
+    (Behrouzi-Far & Soljanin, arXiv:2006.02318).  ``Empirical`` lets every
+    downstream consumer (simulator sweeps, planners, the tuner) plan from
+    what the fleet actually does:
+
+    * ``atoms``   — observed unit-service times (sorted ascending on
+      construction; pass them in any order).
+    * ``weights`` — optional per-atom probability masses (normalized on
+      construction; ``None`` = uniform).  Non-uniform weights arise from
+      censoring-aware construction (:meth:`from_censored`, Kaplan-Meier).
+
+    Sampling is inverse-CDF: ``ppf(u)`` returns the smallest atom whose
+    cumulative weight reaches ``u``.  ``scaled(s)`` multiplies every atom by
+    ``s`` — the same affine size-dependent load model the parametric
+    families follow (``scaled(s) = s * unit_time`` for Exp/SExp too).
+
+    >>> emp = Empirical((3.0, 1.0, 2.0))
+    >>> emp.atoms
+    (1.0, 2.0, 3.0)
+    >>> emp.quantile(0.5)
+    2.0
+    >>> emp.scaled(2.0).mean()
+    4.0
+    """
+
+    atoms: tuple[float, ...]
+    weights: Optional[tuple[float, ...]] = None
+
+    def __post_init__(self):
+        arr = np.asarray(self.atoms, dtype=float).ravel()
+        if arr.size == 0:
+            raise ValueError("Empirical needs at least one atom")
+        if np.any(~np.isfinite(arr)) or np.any(arr < 0):
+            raise ValueError("atoms must be finite and non-negative")
+        order = np.argsort(arr, kind="stable")
+        object.__setattr__(self, "atoms", tuple(float(x) for x in arr[order]))
+        if self.weights is not None:
+            w = np.asarray(self.weights, dtype=float).ravel()
+            if w.shape != arr.shape:
+                raise ValueError(
+                    f"weights shape {w.shape} != atoms shape {arr.shape}"
+                )
+            if np.any(~np.isfinite(w)) or np.any(w < 0) or w.sum() <= 0:
+                raise ValueError("weights must be non-negative with mass > 0")
+            w = w[order] / w.sum()
+            object.__setattr__(self, "weights", tuple(float(x) for x in w))
+
+    @classmethod
+    def from_censored(cls, times, censored=None) -> "Empirical":
+        """Censoring-aware construction (Kaplan-Meier product-limit).
+
+        ``censored[i]`` marks a RIGHT-censored observation: the true service
+        time exceeds ``times[i]`` (a replica cancelled at its batch's first
+        response — the tuner's telemetry).  The KM estimator redistributes
+        each censored observation's mass over the larger uncensored times,
+        so the fitted tail is unbiased where a naive ECDF of the recorded
+        times would be biased LOW by exactly the censoring fraction.
+        Mass beyond the largest uncensored time (when the largest
+        observations are censored) follows Efron's convention: it collapses
+        onto the largest uncensored atom, keeping moments finite.
+
+        With no censoring this is exactly the ECDF of ``times``.
+        """
+        t = np.asarray(times, dtype=float).ravel()
+        if t.size == 0:
+            raise ValueError("at least one observation required")
+        if np.any(~np.isfinite(t)) or np.any(t < 0):
+            raise ValueError("times must be finite and non-negative")
+        c = (
+            np.zeros(t.shape, dtype=bool)
+            if censored is None
+            else np.asarray(censored, dtype=bool).ravel()
+        )
+        if c.shape != t.shape:
+            raise ValueError("censored mask must match times shape")
+        if c.all():
+            raise ValueError("at least one uncensored observation required")
+        atoms, masses, leftover = _kaplan_meier(t, c)
+        if leftover > 0:  # largest observations censored: Efron tail
+            masses = masses.copy()
+            masses[-1] += leftover
+        return cls(tuple(atoms), tuple(masses))
+
+    # -- cached numpy views (cached_property writes to __dict__, which a
+    # frozen dataclass still has — the fields themselves stay immutable)
+    @functools.cached_property
+    def _atoms_arr(self) -> np.ndarray:
+        return np.asarray(self.atoms, dtype=float)
+
+    @functools.cached_property
+    def _cum_weights(self) -> np.ndarray:
+        if self.weights is None:
+            n = len(self.atoms)
+            return np.arange(1, n + 1) / n
+        cw = np.cumsum(np.asarray(self.weights, dtype=float))
+        cw[-1] = 1.0  # kill the cumsum rounding at the top
+        return cw
+
+    @property
+    def n_atoms(self) -> int:
+        return len(self.atoms)
+
+    def scaled(self, size: float) -> "Empirical":
+        # affine size model: serving s units takes s * (unit time), exactly
+        # like the parametric families' scaled()
+        return Empirical(
+            tuple(a * size for a in self.atoms), weights=self.weights
+        )
+
+    def ppf(self, u):
+        """Inverse ECDF: smallest atom with cumulative weight >= u."""
+        u = np.asarray(u, dtype=float)
+        idx = np.searchsorted(self._cum_weights, u, side="left")
+        return self._atoms_arr[np.minimum(idx, self.n_atoms - 1)]
+
+    def quantile(self, q: float) -> float:
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        return float(self.ppf(q))
+
+    def cdf(self, t):
+        """Weighted ECDF: P{T <= t}, vectorized."""
+        t = np.asarray(t, dtype=float)
+        idx = np.searchsorted(self._atoms_arr, t, side="right")
+        cw = np.concatenate([[0.0], self._cum_weights])
+        return cw[idx]
+
+    def sample(self, rng, shape):
+        """I.i.d. inverse-CDF draws.
+
+        Consumes ``Exp(1)`` variates (mapped to uniforms via the
+        probability-integral transform) rather than raw uniforms so the
+        draw-stream convention matches the parametric families and the
+        simulation engine's shared-CRN core.
+        """
+        u = -np.expm1(-rng.standard_exponential(shape))
+        return self.ppf(u)
+
+    def bootstrap(self, rng) -> "Empirical":
+        """One bootstrap resample: n atoms redrawn by weight, uniform mass.
+
+        The resampling unit of :class:`~repro.core.planner.EmpiricalPlanner`
+        — planning over K of these propagates the SAMPLING uncertainty of
+        the observation window into the B decision.
+        """
+        n = self.n_atoms
+        idx = rng.choice(n, size=n, replace=True, p=self.weights)
+        return Empirical(tuple(self._atoms_arr[idx]))
+
+    def mean(self) -> float:
+        if self.weights is None:
+            return float(self._atoms_arr.mean())
+        return float(self._atoms_arr @ np.asarray(self.weights))
+
+    def var(self) -> float:
+        m = self.mean()
+        sq = (self._atoms_arr - m) ** 2
+        if self.weights is None:
+            return float(sq.mean())
+        return float(sq @ np.asarray(self.weights))
 
 
 def batch_service(dist: ServiceDistribution, n: int, b: int) -> ServiceDistribution:

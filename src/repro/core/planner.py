@@ -29,6 +29,11 @@ Three implementations of the :class:`Planner` strategy:
   companion attached when available.  With ``rates`` equal to ones it is
   bit-identical to :class:`SimulatedPlanner` (same RNG stream, same float
   ops, same assignment) — the parity contract the tests pin down.
+* :class:`EmpiricalPlanner` — distribution-agnostic: plans over K
+  bootstrap resamples of an :class:`~repro.core.order_stats.Empirical`
+  distribution (telemetry, censoring-aware), picks B* by majority vote of
+  the per-resample argmins, and reports the vote distribution as
+  :attr:`Plan.confidence` / :attr:`Plan.vote_share`.
 
 Objective hysteresis (``improvement_threshold``, ``cooldown_steps``) is
 carried on the Objective so re-plan *triggers* (tuner, serving) and re-plan
@@ -54,6 +59,7 @@ import numpy as np
 
 from .estimator import FitResult
 from .order_stats import (
+    Empirical,
     Exponential,
     ServiceDistribution,
     ShiftedExponential,
@@ -87,6 +93,7 @@ __all__ = [
     "AnalyticPlanner",
     "SimulatedPlanner",
     "HeterogeneousPlanner",
+    "EmpiricalPlanner",
     "make_planner",
 ]
 
@@ -357,6 +364,14 @@ class Plan:
     chose for the emitted B (only when the Objective offered
     ``speculation_quantiles``); ``None`` means plain replication scored
     best and the serving engine should not speculate.
+
+    ``confidence`` and ``vote_share`` are the bootstrap-uncertainty report
+    of :class:`EmpiricalPlanner` (None from every other planner):
+    ``vote_share`` maps each swept B to the fraction of bootstrap
+    resamples whose argmin landed there, and ``confidence`` is that
+    fraction at the emitted B* — a plan with confidence 0.5 says the
+    observation window genuinely cannot distinguish the top candidates,
+    which is exactly when hysteresis should keep the fleet where it is.
     """
 
     spec: ClusterSpec
@@ -368,6 +383,8 @@ class Plan:
     planner: str  # name of the Planner that produced this
     closed_form_mean: Optional[float] = None  # hetero closed-form companion
     speculation_quantile: Optional[float] = None  # chosen clone trigger
+    confidence: Optional[float] = None  # bootstrap vote share at B*
+    vote_share: Optional[tuple[tuple[int, float], ...]] = None  # per-B votes
 
     @property
     def n_workers(self) -> int:
@@ -420,6 +437,10 @@ class Planner:
     # (sojourn under an arrival process)?  Re-plan triggers use it to decide
     # whether observed-load telemetry should flow into the Objective.
     consumes_load = False
+    # capability flag: does this planner want the RAW observation window as
+    # an Empirical distribution (rather than a parametric fit)?  The tuner
+    # builds the spec's dist accordingly.
+    consumes_empirical = False
 
     def sweep_spectrum(
         self, spec: ClusterSpec, objective: Objective
@@ -501,6 +522,13 @@ class AnalyticPlanner(Planner):
             raise ValueError(
                 "load-aware objectives (arrival_rate/utilization) have no "
                 "closed form; use SimulatedPlanner / HeterogeneousPlanner"
+            )
+        if not isinstance(spec.dist, (Exponential, ShiftedExponential)):
+            raise ValueError(
+                f"AnalyticPlanner has closed forms for Exp/SExp only, got "
+                f"{type(spec.dist).__name__}; use SimulatedPlanner (any "
+                "engine-supported dist) or EmpiricalPlanner (bootstrap over "
+                "an Empirical dist)"
             )
         return sweep(spec.dist, spec.n_workers, spec.feasible_batches())
 
@@ -706,17 +734,252 @@ class HeterogeneousPlanner(SimulatedPlanner):
         return result_from_points(pts)
 
 
+@dataclasses.dataclass
+class EmpiricalPlanner(SimulatedPlanner):
+    """Bootstrap planner: B* from resamples of the OBSERVED distribution.
+
+    Where the parametric planners trust a two-parameter fit, this one plans
+    from the data: the spec's :class:`~repro.core.order_stats.Empirical`
+    distribution (censoring-aware, straight from tuner telemetry) is
+    bootstrap-resampled ``n_resamples`` times, every resample is swept over
+    ALL feasible B in ONE batched engine call (resamples ride the dists
+    axis of ``sweep_simulate`` / ``sweep_sojourn``, so they share the CRN
+    draw matrix), and B* is chosen by MAJORITY VOTE of the per-resample
+    argmins.  The vote distribution lands on the returned Plan as
+    :attr:`Plan.vote_share` / :attr:`Plan.confidence` — the planner reports
+    not just a decision but how firmly the observation window supports it.
+
+    The emitted prediction and spectrum pool the samples of all resamples
+    per B (the bootstrap-smoothed estimate).  A parametric ``spec.dist`` is
+    accepted for convenience (a ``pool_size`` synthetic pool is drawn from
+    it first) — the statistical-recovery tests feed known Exp/SExp fleets
+    through exactly that path.  Load-aware objectives and speculation
+    triggers are supported through the same sojourn sweeps as
+    :class:`SimulatedPlanner`; per-worker rates are not consumed (the
+    bootstrap quantifies distributional uncertainty, not skew — placement
+    still honours rates via the shared ``assignment_for``).
+
+    >>> import numpy as np
+    >>> pool = np.random.default_rng(0).lognormal(0.0, 1.0, 2_000)
+    >>> spec = ClusterSpec(n_workers=16, dist=Empirical(tuple(pool)))
+    >>> plan = EmpiricalPlanner(n_trials=2_000, seed=0, n_resamples=8).plan(
+    ...     spec, Objective(metric="mean"))
+    >>> 0.0 < plan.confidence <= 1.0
+    True
+    """
+
+    n_resamples: int = 20
+    pool_size: int = 512
+
+    name = "empirical"
+    consumes_empirical = True
+
+    def _bootstrap_dists(self, spec: ClusterSpec) -> tuple[Empirical, ...]:
+        if self.n_resamples < 1:
+            raise ValueError(
+                f"n_resamples must be >= 1, got {self.n_resamples}"
+            )
+        # separate stream from the sweep's draw matrix: resampling noise and
+        # simulation noise must not be correlated
+        rng = np.random.default_rng((self.seed, 0xB007))
+        base = spec.dist
+        if not isinstance(base, Empirical):
+            base = Empirical(tuple(base.sample(rng, self.pool_size)))
+        return tuple(base.bootstrap(rng) for _ in range(self.n_resamples))
+
+    def _reduce_votes(
+        self,
+        splits: Sequence[int],
+        n_workers: int,
+        per_cell_samples,  # callable (k, s) -> 1-D samples of resample k at B splits[s]
+        metric: Metric,
+        pooled: bool = True,
+    ) -> Optional[SpectrumResult]:
+        """Votes (always, on ``self._votes``) + pooled spectrum from
+        per-(resample, B) sample sets.  Each cell is materialized ONCE and
+        reused for the pooled points; ``pooled=False`` skips the pooled
+        spectrum for callers that build their own (the speculative sweep,
+        whose spectrum must describe the adopted trigger)."""
+        k_count = self.n_resamples
+        cells = [
+            [per_cell_samples(k, s) for s in range(len(splits))]
+            for k in range(k_count)
+        ]
+        votes: dict[int, int] = {b: 0 for b in splits}
+        for k in range(k_count):
+            scores = [
+                metric_value(
+                    point_from_samples(b, n_workers // b, cells[k][s]),
+                    metric,
+                )
+                for s, b in enumerate(splits)
+            ]
+            votes[splits[int(np.argmin(scores))]] += 1
+        self._votes = votes
+        if not pooled:
+            return None
+        return result_from_points(
+            point_from_samples(
+                b,
+                n_workers // b,
+                np.concatenate([cells[k][s] for k in range(k_count)]),
+            )
+            for s, b in enumerate(splits)
+        )
+
+    def sweep_spectrum(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> SpectrumResult:
+        from .simulator import (  # local: avoid import cycle
+            sweep_simulate,
+            sweep_sojourn,
+            sweep_sojourn_speculative,
+        )
+
+        self._spec_q_by_b = {}
+        dists = self._bootstrap_dists(spec)
+        splits = spec.feasible_batches()
+        if objective.load_aware and objective.speculation_quantiles:
+            quantiles = (None, *objective.speculation_quantiles)
+            res = sweep_sojourn_speculative(
+                dists,
+                spec.n_workers,
+                arrival_rate=objective.offered_rate(spec),
+                quantiles=quantiles,
+                n_jobs=self.n_trials,
+                seed=self.seed,
+                feasible_b=splits,
+                job_load=objective.job_load,
+            )
+            # each resample scores every B at its best trigger; the trigger
+            # REPORTED per B comes from the pooled samples (one consistent
+            # answer for the engine to adopt, not K conflicting ones)
+            best_q_index: dict[int, int] = {}
+            for s, b in enumerate(splits):
+                pooled_pts = [
+                    point_from_samples(
+                        b,
+                        spec.n_workers // b,
+                        res.samples[:, s, qi, :].ravel(),
+                    )
+                    for qi in range(len(quantiles))
+                ]
+                qi_best = min(
+                    range(len(quantiles)),
+                    key=lambda qi: metric_value(
+                        pooled_pts[qi], objective.metric
+                    ),
+                )
+                best_q_index[b] = qi_best
+                self._spec_q_by_b[b] = quantiles[qi_best]
+
+            def cell(k: int, s: int):
+                # per-resample best trigger for voting (a resample votes for
+                # the B it would run, at the trigger it would pick)
+                pts = [
+                    point_from_samples(
+                        splits[s],
+                        spec.n_workers // splits[s],
+                        res.samples[k, s, qi],
+                    )
+                    for qi in range(len(quantiles))
+                ]
+                qi = min(
+                    range(len(quantiles)),
+                    key=lambda i: metric_value(pts[i], objective.metric),
+                )
+                return res.samples[k, s, qi]
+
+            self._reduce_votes(
+                splits, spec.n_workers, cell, objective.metric, pooled=False
+            )
+            # the pooled spectrum must describe the trigger the plan adopts
+            return result_from_points(
+                point_from_samples(
+                    b,
+                    spec.n_workers // b,
+                    res.samples[:, s, best_q_index[b], :].ravel(),
+                )
+                for s, b in enumerate(splits)
+            )
+        if objective.load_aware:
+            res = sweep_sojourn(
+                dists,
+                spec.n_workers,
+                arrival_rate=objective.offered_rate(spec),
+                n_jobs=self.n_trials,
+                seed=self.seed,
+                feasible_b=splits,
+                job_load=objective.job_load,
+            )
+        else:
+            res = sweep_simulate(
+                dists,
+                spec.n_workers,
+                n_trials=self.n_trials,
+                seed=self.seed,
+                feasible_b=splits,
+                backend=self.backend,
+            )
+        return self._reduce_votes(
+            splits,
+            spec.n_workers,
+            lambda k, s: res.samples[k, s],
+            objective.metric,
+        )
+
+    def plan(
+        self, spec: ClusterSpec, objective: Optional[Objective] = None
+    ) -> Plan:
+        """Sweep bootstrap resamples, pick B* by majority vote (pooled
+        metric breaks ties), and report the vote distribution on the Plan."""
+        objective = objective if objective is not None else Objective()
+        spectrum = self.sweep_spectrum(spec, objective)
+        votes = self._votes
+        total = sum(votes.values())
+        best_b = max(
+            (p.n_batches for p in spectrum.points),
+            key=lambda b: (
+                votes.get(b, 0),
+                -metric_value(spectrum.at(b), objective.metric),
+            ),
+        )
+        best = spectrum.at(best_b)
+        assignment = self.assignment_for(spec, best_b)
+        return Plan(
+            spec=spec,
+            objective=objective,
+            replication=ReplicationPlan(
+                n_data=spec.n_workers, n_batches=best_b
+            ),
+            assignment=assignment,
+            predicted=best,
+            spectrum=spectrum,
+            planner=self.name,
+            closed_form_mean=self._closed_form_mean(spec, assignment),
+            speculation_quantile=self._speculation_for(best_b),
+            confidence=votes.get(best_b, 0) / total,
+            vote_share=tuple(
+                (p.n_batches, votes.get(p.n_batches, 0) / total)
+                for p in spectrum.points
+            ),
+        )
+
+
 def make_planner(
     mode: str = "analytic",
     heterogeneous: bool = False,
     n_trials: int = 20_000,
     seed: int = 0,
     backend: str = "numpy",
+    n_resamples: int = 20,
 ) -> Planner:
     """Map the legacy tuner knobs (mode / heterogeneous / sim_*) to a Planner.
 
     >>> make_planner(mode="simulate", heterogeneous=True).name
     'heterogeneous'
+    >>> make_planner(mode="empirical").name
+    'empirical'
     """
     if mode == "analytic":
         if heterogeneous:
@@ -728,4 +991,17 @@ def make_planner(
     if mode == "simulate":
         cls = HeterogeneousPlanner if heterogeneous else SimulatedPlanner
         return cls(n_trials=n_trials, seed=seed, backend=backend)
-    raise ValueError(f"unknown planner mode {mode!r} (use 'analytic'|'simulate')")
+    if mode == "empirical":
+        if heterogeneous:
+            raise ValueError(
+                "rate-aware planning has no empirical path yet — "
+                "EmpiricalPlanner bootstraps the service distribution, not "
+                "per-worker skew; use mode='simulate' with heterogeneous=True"
+            )
+        return EmpiricalPlanner(
+            n_trials=n_trials, seed=seed, backend=backend,
+            n_resamples=n_resamples,
+        )
+    raise ValueError(
+        f"unknown planner mode {mode!r} (use 'analytic'|'simulate'|'empirical')"
+    )

@@ -29,6 +29,18 @@ of data at rate multiplier ``c`` draws ``s*Delta + E / (mu*c/s)`` with
 ``E ~ Exp(1)`` — i.e. ``dist.scaled(s)`` with its exponential part slowed by
 ``1/c``.
 
+The engine is distribution-agnostic: besides the paper's Exp/SExp families
+it accepts :class:`~repro.core.order_stats.Empirical` (ECDF) distributions
+on EVERY sampling path — batch-completion sweeps (numpy and jax backends),
+sojourn/queueing sweeps, speculative sweeps, and the runtime
+:class:`StepTimeSimulator`.  Empirical sampling stays on the shared CRN
+draw matrix via quantile coupling (see :func:`_empirical_coupled_times`):
+uniform positions derived from the shared exponential draws are pushed
+through the empirical quantile function, so empirical and parametric sweep
+cells remain directly comparable — and an empirical pool built from an
+exact monotone transform of the draws is bit-identical to the parametric
+sweep, the parity contract ``tests/test_sim_engine.py`` pins.
+
 Also provides :class:`StepTimeSimulator` — the runtime-facing generator of
 per-step, per-worker service times (with optional persistent slow nodes,
 per-worker base rates, and transient failures) used by the fault-tolerance
@@ -43,7 +55,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .order_stats import ServiceDistribution
+from .order_stats import Empirical, ServiceDistribution
 from .policies import Assignment, _validate_rates, divisors
 
 __all__ = [
@@ -98,28 +110,106 @@ def _dist_params(dist: ServiceDistribution) -> tuple[float, float]:
 
     The engine exploits that Exp/SExp scale affinely with load:
     ``scaled(s) = s*shift + Exp(1)*s/mu``.  Any distribution exposing ``mu``
-    (and optionally ``delta``) participates; others are rejected.
+    (and optionally ``delta``) participates; :class:`~repro.core.order_stats
+    .Empirical` takes the quantile-lookup path instead; others are rejected.
     """
     mu = getattr(dist, "mu", None)
     if mu is None:
         raise TypeError(
             f"{type(dist).__name__} must expose 'mu' (and optional 'delta') "
-            "for the vectorized engine"
+            "for the vectorized engine (or be an Empirical distribution)"
         )
     return float(getattr(dist, "delta", 0.0)), float(mu)
 
 
-def _unit_times(
-    unit: np.ndarray, dist: ServiceDistribution, rates: np.ndarray | None
+def _empirical_coupled_times(
+    dist: Empirical, unit: np.ndarray, order: np.ndarray | None = None
 ) -> np.ndarray:
-    """Unit-load service times from shared Exp(1) draws: shift + E/(mu*rate).
+    """Quantile-coupled empirical times from the SHARED Exp(1) draw matrix.
 
-    ``rates=None`` and ``rates=ones`` are bit-identical (``mu * 1.0 == mu``
-    exactly, so the elementwise divisor is the same float either way).
+    The CRN contract of the engine: every cell of a sweep consumes the same
+    draw matrix, so cross-cell differences are pure policy/distribution
+    effects.  For an empirical distribution that coupling is realized by
+    RANK: the flattened draws are replaced by the inverse weighted-ECDF
+    evaluated at the stratified levels ``(2k+1)/(2M)`` in draw-rank order —
+    draw ``k``-th-smallest maps to the ``k``-th stratified ECDF quantile.
+    Equivalently: uniform draws (the probability-integral transform of the
+    shared exponentials) pushed through the empirical quantile function,
+    with the uniforms' VALUES replaced by their plotting positions.
+
+    Two properties make this the right coupling:
+
+    * comparisons against any parametric cell of the same sweep see the
+      same randomness (the arrangement across trials/workers is exactly the
+      shared draws' rank pattern), and
+    * a pool that IS a monotone transform of the exact draws reproduces
+      that transform **bit-for-bit** — the uniform-weight fast path indexes
+      with pure-integer arithmetic (``(2k+1)*n // (2M)`` = ``k`` when
+      ``n == M``), so ``Empirical((shift + unit/mu).ravel())`` yields
+      ``shift + unit/mu`` exactly.  That is the parity pin keeping the
+      empirical engine path honest against the parametric one.
     """
+    flat = unit.ravel()
+    m = flat.size
+    if order is None:
+        order = np.argsort(flat, kind="stable")
+    n = dist.n_atoms
+    if dist.weights is None:
+        idx = (2 * np.arange(m) + 1) * n // (2 * m)
+        vals = dist._atoms_arr[idx]
+    else:
+        levels = (2.0 * np.arange(m) + 1.0) / (2.0 * m)
+        vals = dist.ppf(levels)
+    out = np.empty(m)
+    out[order] = vals
+    return out.reshape(unit.shape)
+
+
+def _unit_times(
+    unit: np.ndarray,
+    dist: ServiceDistribution,
+    rates: np.ndarray | None,
+    iid: bool = False,
+    order: np.ndarray | None = None,
+) -> np.ndarray:
+    """Unit-load service times from shared Exp(1) draws.
+
+    Parametric (Exp/SExp-shaped): ``shift + E/(mu*rate)``.  ``rates=None``
+    and ``rates=ones`` are bit-identical (``mu * 1.0 == mu`` exactly, so
+    the elementwise divisor is the same float either way).
+
+    Empirical: inverse-ECDF on the shared draws — rank-coupled
+    (:func:`_empirical_coupled_times`) for the batched sweep matrices,
+    plain i.i.d. probability-integral lookup with ``iid=True`` (the
+    per-step :class:`StepTimeSimulator` path, where a rank coupling over a
+    single N-vector would degenerate to the same N quantiles every step).
+    An empirical time has no shift/exponential decomposition, so a rate
+    multiplier scales the WHOLE draw (``t / rate``).
+    """
+    if isinstance(dist, Empirical):
+        if iid:
+            core = dist.ppf(-np.expm1(-unit))
+        else:
+            core = _empirical_coupled_times(dist, unit, order=order)
+        return core if rates is None else core / rates
     shift, mu = _dist_params(dist)
     denom = mu if rates is None else mu * rates
     return shift + unit / denom
+
+
+def _shared_draw_order(
+    dists: Sequence[ServiceDistribution], unit: np.ndarray
+) -> np.ndarray | None:
+    """Hoist the coupling argsort of one shared draw matrix.
+
+    The rank pattern of the draws is distribution-independent, so a sweep
+    over many empirical dists (K bootstrap resamples of one telemetry pool
+    is the common case) sorts ONCE instead of once per dist — the argsort
+    is the dominant per-resample cost at planner trial counts.
+    """
+    if any(isinstance(d, Empirical) for d in dists):
+        return np.argsort(unit.ravel(), kind="stable")
+    return None
 
 
 def _times_from_unit(
@@ -127,14 +217,15 @@ def _times_from_unit(
     loads: np.ndarray,
     dist: ServiceDistribution,
     rates: np.ndarray | None,
+    iid: bool = False,
 ) -> np.ndarray:
-    """Worker service times ``loads_j * (shift + unit_j / (mu * rates_j))``.
+    """Worker service times ``loads_j * unit_time_j``.
 
     Factored so the batched sweep can hoist the load-independent inner
     matrix; multiplying by a constant-load vector equals the scalar multiply
     bit-for-bit, which keeps sweep cells identical to simulate_maxmin.
     """
-    return _unit_times(unit, dist, rates) * loads
+    return _unit_times(unit, dist, rates, iid=iid) * loads
 
 
 def _draw_worker_times(
@@ -343,32 +434,32 @@ _JAX_KERNEL_CACHE: dict = {}
 
 
 def _sweep_jax(
-    unit: np.ndarray,
+    cores: np.ndarray,
     loads: np.ndarray,
     wb: np.ndarray,
     valid: np.ndarray,
-    shifts: np.ndarray,
-    mus: np.ndarray,
-    rates: np.ndarray,
 ) -> np.ndarray:
     """JAX backend: vmap over distributions x splits, jit-compiled.
 
-    Per split the min-over-replicas is a ``segment_min`` keyed by the
-    worker->batch map (padded to N segments, invalid slots masked to -inf
-    before the max), which keeps every split the same shape and therefore
-    vmappable.
+    ``cores`` is the (n_dists, T, N) stack of load-independent unit-load
+    times, precomputed in numpy by the SAME :func:`_unit_times` the numpy
+    backend uses — which is what lets parametric and empirical
+    distributions share one kernel (and keeps empirical-vs-parametric
+    bit-parity intact through the jit boundary: identical f64 cores cast
+    to the device dtype identically).  Per split the min-over-replicas is
+    a ``segment_min`` keyed by the worker->batch map (padded to N
+    segments, invalid slots masked to -inf before the max), which keeps
+    every split the same shape and therefore vmappable.
     """
     import jax
     import jax.numpy as jnp
 
     if "kernel" not in _JAX_KERNEL_CACHE:
 
-        def kernel(unit, loads, wb, valid, shifts, mus, rates):
-            n = unit.shape[1]
+        def kernel(cores, loads, wb, valid):
+            n = cores.shape[2]
 
-            def one_dist(shift, mu):
-                core = shift + unit / (mu * rates)  # load-independent (T, N)
-
+            def one_dist(core):
                 def one_split(loads_row, wb_row, valid_row):
                     times = core * loads_row  # (T, N)
                     bmin = jax.ops.segment_min(
@@ -379,11 +470,11 @@ def _sweep_jax(
 
                 return jax.vmap(one_split)(loads, wb, valid)
 
-            return jax.vmap(one_dist)(shifts, mus)
+            return jax.vmap(one_dist)(cores)
 
         _JAX_KERNEL_CACHE["kernel"] = jax.jit(kernel)
 
-    out = _JAX_KERNEL_CACHE["kernel"](unit, loads, wb, valid, shifts, mus, rates)
+    out = _JAX_KERNEL_CACHE["kernel"](cores, loads, wb, valid)
     return np.asarray(out, dtype=float)
 
 
@@ -420,22 +511,25 @@ def sweep_simulate(
     rng = np.random.default_rng(seed)
     unit = rng.standard_exponential((n_trials, n_workers))
 
+    order = _shared_draw_order(dist_seq, unit)
     if backend == "jax":
+        import jax
+
         loads, wb, valid = _split_arrays(n_workers, splits)
-        params = np.array([_dist_params(d) for d in dist_seq])
-        samples = _sweep_jax(
-            unit,
-            loads,
-            wb,
-            valid,
-            params[:, 0],
-            params[:, 1],
-            rates_arr if rates_arr is not None else np.ones(n_workers),
-        )
+        # (n_dists, T, N) load-independent cores, same math as the numpy
+        # backend (that unification is the empirical/parametric parity
+        # contract).  Allocated directly in the device dtype: the cast per
+        # entry is identical to the one the jit boundary would apply, and
+        # a many-resample sweep does not hold a second full-size f64 copy.
+        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+        cores = np.empty((len(dist_seq), n_trials, n_workers), dtype=dtype)
+        for di, d in enumerate(dist_seq):
+            cores[di] = _unit_times(unit, d, rates_arr, order=order)
+        samples = _sweep_jax(cores, loads, wb, valid)
     elif backend == "numpy":
         samples = np.empty((len(dist_seq), len(splits), n_trials))
         for di, dist in enumerate(dist_seq):
-            core = _unit_times(unit, dist, rates_arr)  # load-independent
+            core = _unit_times(unit, dist, rates_arr, order=order)
             for si, b in enumerate(splits):
                 r = n_workers // b
                 times = core * (n_workers / b)
@@ -783,9 +877,10 @@ def sweep_sojourn(
     arrivals = np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
     unit = rng.standard_exponential((n_jobs, n_workers))
 
+    order = _shared_draw_order(dist_seq, unit)
     samples = np.empty((len(dist_seq), len(splits), n_jobs - warm))
     for di, dist in enumerate(dist_seq):
-        core = _unit_times(unit, dist, rates_arr) * job_load
+        core = _unit_times(unit, dist, rates_arr, order=order) * job_load
         for si, b in enumerate(splits):
             r = n_workers // b
             svc = core.reshape(n_jobs, b, r).min(axis=2)
@@ -879,11 +974,16 @@ def sweep_sojourn_speculative(
     unit = rng.standard_exponential((n_jobs, n_workers))
     clone_unit = rng.standard_exponential((n_jobs, n_workers))
 
+    order = _shared_draw_order(dist_seq, unit)
+    clone_order = _shared_draw_order(dist_seq, clone_unit)
     samples = np.empty((len(dist_seq), len(splits), len(q_seq), n_jobs - warm))
     clones = np.zeros((len(dist_seq), len(splits), len(q_seq)))
     for di, dist in enumerate(dist_seq):
-        core = _unit_times(unit, dist, rates_arr) * job_load
-        clone_core = _unit_times(clone_unit, dist, rates_arr) * job_load
+        core = _unit_times(unit, dist, rates_arr, order=order) * job_load
+        clone_core = (
+            _unit_times(clone_unit, dist, rates_arr, order=clone_order)
+            * job_load
+        )
         for si, b in enumerate(splits):
             r = n_workers // b
             svc = core.reshape(n_jobs, b, r).min(axis=2)
@@ -970,8 +1070,11 @@ class StepTimeSimulator:
         loads = np.asarray(loads, dtype=float)
         if loads.shape != (self._n,):
             raise ValueError(f"loads shape {loads.shape} != ({self._n},)")
+        # iid=True: empirical dists draw independent inverse-ECDF samples per
+        # step (the sweep's rank coupling over one N-vector would repeat the
+        # same N quantiles forever); parametric dists are unaffected
         unit = self._rng.standard_exponential(self._n)
-        times = _times_from_unit(unit, loads, self._dist, self._rates)
+        times = _times_from_unit(unit, loads, self._dist, self._rates, iid=True)
         for w, factor in self._slow.items():
             times[w] *= factor
         for ev in self._faults:

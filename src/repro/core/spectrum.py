@@ -187,10 +187,12 @@ def sweep_simulated(
 
     Where the closed forms of :func:`sweep` only cover homogeneous Exp/SExp,
     this path also handles heterogeneous per-worker ``rates`` — the tuner
-    uses it for online re-planning when the fleet is skewed.  All B cells
-    share one draw matrix (common random numbers via
-    ``simulator.sweep_simulate``), so the argmin across B is far less noisy
-    than independent simulations would be.
+    uses it for online re-planning when the fleet is skewed — and ANY
+    distribution the engine samples, including telemetry-fitted
+    :class:`~repro.core.order_stats.Empirical` ECDFs (quantile-coupled to
+    the shared draws).  All B cells share one draw matrix (common random
+    numbers via ``simulator.sweep_simulate``), so the argmin across B is
+    far less noisy than independent simulations would be.
     """
     from .simulator import sweep_simulate  # local: avoid import cycle
 

@@ -23,6 +23,18 @@ sojourn quantiles — and hysteresis measures the predicted win against the
 sojourn requests ACTUALLY experienced at the current B.  A breached
 ``TunerConfig.miss_rate_target`` waives the hysteresis threshold: when the
 fleet is missing its SLO, any predicted improvement justifies the move.
+
+**Goodness-of-fit gate.**  The parametric fit is only as good as the
+assumption that the fleet is Exp/SExp-shaped.  With ``TunerConfig.gof_alpha``
+set, every re-plan attempt first checks the fitted distribution against the
+observation window (censoring-aware KS, :func:`~repro.core.estimator
+.goodness_of_fit`); a REJECTED fit reroutes that re-plan through the
+empirical path automatically — the window becomes an
+:class:`~repro.core.order_stats.Empirical` distribution (Kaplan-Meier, so
+censored replicas still count) and an
+:class:`~repro.core.planner.EmpiricalPlanner` plans over bootstrap
+resamples of it.  ``TunerConfig(mode='empirical')`` makes that path the
+primary planner instead of the fallback.
 """
 
 from __future__ import annotations
@@ -35,7 +47,8 @@ from typing import Literal, Optional
 
 import numpy as np
 
-from .estimator import FitResult, fit_best
+from .estimator import FitResult, GofResult, fit_best, goodness_of_fit
+from .order_stats import Empirical
 from .planner import (
     ClusterSpec,
     Objective,
@@ -59,7 +72,9 @@ class TunerConfig:
     # "analytic": closed-form sweep (homogeneous Exp/SExp only).
     # "simulate": one batched sweep_simulate call, optionally with the
     # per-worker rate estimates from the observation window (heterogeneous).
-    mode: Literal["analytic", "simulate"] = "analytic"
+    # "empirical": bootstrap-resample the observation window itself
+    # (EmpiricalPlanner) — no parametric family assumed at all.
+    mode: Literal["analytic", "simulate", "empirical"] = "analytic"
     heterogeneous: bool = False  # feed worker_rates() into the simulated sweep
     sim_trials: int = 4_000
     sim_backend: str = "numpy"
@@ -67,6 +82,14 @@ class TunerConfig:
     # SLO trigger: when the observed deadline-miss rate exceeds this target,
     # the hysteresis threshold is waived for the next re-plan (None = off)
     miss_rate_target: Optional[float] = None
+    # goodness-of-fit gate: when set, each re-plan attempt KS-tests the
+    # parametric fit against the observation window (censoring-aware) at
+    # this significance level; a rejected fit reroutes THAT re-plan through
+    # the empirical path (EmpiricalPlanner over the window's Kaplan-Meier
+    # ECDF).  None = gate off (always trust the parametric fit).
+    gof_alpha: Optional[float] = None
+    # bootstrap resamples for the empirical path (primary or gate fallback)
+    bootstrap_resamples: int = 20
 
     def objective(self) -> Objective:
         """The planner Objective this config describes."""
@@ -100,6 +123,7 @@ class TunerConfig:
             n_trials=self.sim_trials,
             seed=self.sim_seed,
             backend=self.sim_backend,
+            n_resamples=self.bootstrap_resamples,
         )
 
 
@@ -122,6 +146,11 @@ class RescalePlan:
 
 class StragglerTuner:
     """Observe-window + re-plan trigger around a :class:`Planner`."""
+
+    # verdict of the goodness-of-fit gate at the last re-plan attempt (None
+    # while the gate is off or before the first attempt); class-level default
+    # so the attribute is part of the documented API surface
+    last_gof: Optional[GofResult] = None
 
     def __init__(
         self,
@@ -165,6 +194,8 @@ class StragglerTuner:
         self._last_attempt = -(10**9)
         self.last_fit: Optional[FitResult] = None
         self.last_plan: Optional[Plan] = None
+        self.last_gof = None
+        self._gof_fallback: Optional[Planner] = None  # lazy EmpiricalPlanner
 
     def observe(
         self, step_times: np.ndarray, censored: np.ndarray | None = None
@@ -268,15 +299,43 @@ class StragglerTuner:
     def n_samples(self) -> int:
         return int(sum(t.size for t in self._times))
 
+    def window_observations(self) -> tuple[np.ndarray, np.ndarray]:
+        """The flattened observation window: (times, censored_mask)."""
+        x = np.concatenate([t.ravel() for t in self._times])
+        c = np.concatenate([m.ravel() for m in self._censored])
+        return x, c
+
     def fit(self) -> Optional[FitResult]:
         if self.n_samples < self.config.min_samples:
             return None
-        x = np.concatenate([t.ravel() for t in self._times])
-        c = np.concatenate([m.ravel() for m in self._censored])
+        x, c = self.window_observations()
         if (~c).sum() == 0:
             return None
         self.last_fit = fit_best(x, c)
         return self.last_fit
+
+    def empirical_dist(self) -> Empirical:
+        """The observation window as a censoring-aware Empirical (KM ECDF).
+
+        The distribution the empirical re-plan path hands to
+        :class:`~repro.core.planner.EmpiricalPlanner` — the fleet as
+        measured, no parametric family assumed.
+        """
+        x, c = self.window_observations()
+        return Empirical.from_censored(x, c)
+
+    def _empirical_fallback_planner(self) -> Planner:
+        """The EmpiricalPlanner used when the GoF gate rejects the fit
+        (built once, from the config's sim budget)."""
+        if self._gof_fallback is None:
+            self._gof_fallback = make_planner(
+                mode="empirical",
+                n_trials=self.config.sim_trials,
+                seed=self.config.sim_seed,
+                backend=self.config.sim_backend,
+                n_resamples=self.config.bootstrap_resamples,
+            )
+        return self._gof_fallback
 
     def worker_rates(self) -> Optional[np.ndarray]:
         """Per-worker relative service rates estimated from the window.
@@ -323,17 +382,21 @@ class StragglerTuner:
             batch_divisor=self.batch_divisor,
         )
 
-    def objective(self) -> Objective:
+    def objective(self, planner: Optional[Planner] = None) -> Objective:
         """The re-plan Objective: the config's, upgraded with observed load.
 
         When the planner can score load-aware objectives and the engine has
         fed arrival-rate telemetry (:meth:`observe_load`), the objective
         carries the OBSERVED offered load — the planner then optimizes
         sojourn under real traffic rather than batch completion.
+        ``planner`` is the planner this attempt will actually use (the GoF
+        gate may have swapped in the empirical fallback); defaults to the
+        primary.
         """
+        planner = planner if planner is not None else self.planner
         objective = self.config.objective()
         rate = self.observed_arrival_rate
-        if self.planner.consumes_load and rate is not None:
+        if planner.consumes_load and rate is not None:
             objective = dataclasses.replace(
                 objective,
                 arrival_rate=rate,
@@ -355,11 +418,46 @@ class StragglerTuner:
         # data (no fit yet) do not count.
         if self._step - self._last_attempt < self.config.cooldown_steps:
             return None
-        fit = self.fit()
-        if fit is None:
+        if self.n_samples < self.config.min_samples:
             return None
-        objective = self.objective()
-        plan = self.planner.plan(self.cluster_spec(fit), objective)
+        x, c = self.window_observations()
+        if (~c).sum() == 0:
+            return None
+        planner = self.planner
+        use_empirical = planner.consumes_empirical
+        self.last_gof = None
+        fit: Optional[FitResult] = None
+        if not use_empirical:
+            fit = self.fit()
+            if fit is None:
+                return None
+            # goodness-of-fit gate: a parametric fit the window rejects must
+            # not drive the B decision — reroute THIS attempt through the
+            # empirical path (the primary planner stays installed; a later
+            # well-fitting window flows back to it automatically)
+            if self.config.gof_alpha is not None:
+                self.last_gof = goodness_of_fit(
+                    x, fit.dist, c, alpha=self.config.gof_alpha
+                )
+                if self.last_gof.rejected:
+                    planner = self._empirical_fallback_planner()
+                    use_empirical = True
+        objective = self.objective(planner)
+        if use_empirical:
+            # the spec's dist is the window itself (KM ECDF); rates are
+            # dropped — EmpiricalPlanner quantifies distributional
+            # uncertainty, not per-worker skew.  On the empirical-PRIMARY
+            # path no parametric MLE runs at all (the fit would be thrown
+            # away); the RescalePlan's fit record is computed lazily below,
+            # only when a move is actually emitted.
+            spec = ClusterSpec(
+                n_workers=self.plan.n_data,
+                dist=self.empirical_dist(),
+                batch_divisor=self.batch_divisor,
+            )
+        else:
+            spec = self.cluster_spec(fit)
+        plan = planner.plan(spec, objective)
         self.last_plan = plan
         self._last_attempt = self._step
         if plan.n_batches == self.plan.n_batches:
@@ -407,6 +505,8 @@ class StragglerTuner:
         if improvement < threshold:
             return None
         self._last_replan = self._step
+        if fit is None:  # empirical-primary path: fit only for the record
+            fit = self.fit()
         return RescalePlan(
             old_batches=self.plan.n_batches,
             new_batches=plan.n_batches,

@@ -89,8 +89,12 @@ class TrainerConfig:
     # these knobs (see repro.core.planner.make_planner)
     tuner: bool = False
     tuner_metric: str = "mean"
-    planner_mode: str = "analytic"  # 'analytic' | 'simulate'
+    # 'empirical' plans over bootstrap resamples of the observed window
+    planner_mode: str = "analytic"  # 'analytic' | 'simulate' | 'empirical'
     planner_heterogeneous: bool = False  # rate-aware simulated re-plans
+    # KS goodness-of-fit gate: rejected parametric fits make the tuner
+    # re-plan through the empirical path for that attempt (None = off)
+    gof_alpha: Optional[float] = None
     drop_stragglers: bool = True
     grad_compression: bool = False
     checkpoint_dir: Optional[str] = None
@@ -152,7 +156,8 @@ class Trainer:
             tc.n_workers, tc.n_batches
         )
         self.tuner = StragglerTuner(
-            self.plan, TunerConfig(metric=tc.tuner_metric),
+            self.plan,
+            TunerConfig(metric=tc.tuner_metric, gof_alpha=tc.gof_alpha),
             planner=self.planner,
             batch_divisor=self.cluster_spec.batch_divisor,
         )
@@ -432,9 +437,12 @@ def main():
     ap.add_argument("--mu", type=float, default=2.0)
     ap.add_argument("--tuner", action="store_true")
     ap.add_argument("--planner-mode", default="analytic",
-                    choices=["analytic", "simulate"])
+                    choices=["analytic", "simulate", "empirical"])
     ap.add_argument("--rate-aware", action="store_true",
                     help="heterogeneous (rate-aware) simulated re-plans")
+    ap.add_argument("--gof-alpha", type=float, default=None,
+                    help="KS goodness-of-fit gate significance: rejected "
+                         "parametric fits re-plan through the empirical path")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -451,6 +459,7 @@ def main():
         tuner=args.tuner,
         planner_mode=args.planner_mode,
         planner_heterogeneous=args.rate_aware,
+        gof_alpha=args.gof_alpha,
         grad_compression=args.compress,
         checkpoint_dir=args.ckpt_dir,
     )

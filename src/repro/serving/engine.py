@@ -82,14 +82,21 @@ class ServeEngineConfig:
     # control plane: the ONE shared Metric literal + planner mode; B adapts
     # online through Planner.plan when ``tuner`` is on, and ``plan_initial``
     # lets the planner also pick the STARTING B from the ClusterSpec.
+    # 'empirical' plans over bootstrap resamples of the observed service
+    # times instead of a parametric fit (core.planner.EmpiricalPlanner).
     tuner: bool = False
     metric: Metric = "mean"
-    planner_mode: str = "analytic"  # 'analytic' | 'simulate'
+    planner_mode: str = "analytic"  # 'analytic' | 'simulate' | 'empirical'
     plan_initial: bool = False
+    # goodness-of-fit gate: KS-test the parametric fit against the observed
+    # service-time window at this significance; a rejected fit makes the
+    # tuner re-plan through the empirical path for that attempt (None = off)
+    gof_alpha: Optional[float] = None
     # --- discrete-event serving (arrival + queue knobs) ---------------------
     # offered load, either as REQUESTS per unit sim-time or as a fraction of
     # the fleet's no-replication capacity; either one makes the planner
-    # objective load-aware (scored on sojourn, needs planner_mode='simulate')
+    # objective load-aware (scored on sojourn, needs a simulation-capable
+    # planner_mode: 'simulate' or 'empirical')
     # NOTE: the load-aware objective converts the REQUEST rate to a
     # batch-JOB rate as arrival_rate / batch_size, i.e. it assumes full
     # batches.  With a tight max_wait (or drop_expired) the master forms
@@ -190,6 +197,7 @@ class ReplicatedServingEngine:
             TunerConfig(
                 window_steps=256, min_samples=64, cooldown_steps=16,
                 metric=sc.metric, miss_rate_target=sc.miss_rate_target,
+                gof_alpha=sc.gof_alpha,
             ),
             planner=self.planner,
             job_load=self._work(sc.batch_size),

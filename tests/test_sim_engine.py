@@ -6,6 +6,7 @@ import pytest
 from _prop import given, settings, st
 
 from repro.core import (
+    Empirical,
     Exponential,
     ShiftedExponential,
     StepTimeSimulator,
@@ -20,8 +21,10 @@ from repro.core import (
     simulate_coverage,
     simulate_coverage_reference,
     simulate_maxmin,
+    simulate_sojourn,
     sweep_simulate,
     sweep_simulated,
+    sweep_sojourn,
     unbalanced_nonoverlapping,
 )
 from repro.core.tuner import StragglerTuner, TunerConfig
@@ -199,6 +202,112 @@ def test_simulator_rejects_bad_rates():
         simulate_maxmin(EXP, 8, 4, n_trials=10, rates=np.zeros(8))
     with pytest.raises(ValueError):
         StepTimeSimulator(EXP, 4, rates=np.ones(3))
+
+
+# -- empirical distributions on the shared-CRN engine -------------------------
+#
+# The coupling contract: an Empirical pool that IS a monotone transform of
+# the engine's exact shared draws reproduces that transform bit-for-bit, so
+# the empirical sweep is bit-identical to the parametric sweep at the same
+# seed — on every entry point and on both backends.
+
+
+def _exact_draw_pool(dist, n_trials, n_workers, seed, skip_arrivals=0):
+    """Replicate the engine's draw order and return (unit matrix, Empirical
+    pool that applies ``dist`` to those exact draws)."""
+    rng = np.random.default_rng(seed)
+    if skip_arrivals:  # the sojourn entry points draw arrivals first
+        rng.standard_exponential(skip_arrivals)
+    unit = rng.standard_exponential((n_trials, n_workers))
+    pool = dist.delta + unit / dist.mu if hasattr(dist, "delta") else unit / dist.mu
+    return unit, Empirical(tuple(pool.ravel()))
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 1000), mu=st.floats(0.5, 3.0))
+def test_empirical_sweep_bit_identical_to_parametric_numpy(seed, mu):
+    t, n = 250, 16
+    for dist in (Exponential(mu=mu), ShiftedExponential(delta=0.3, mu=mu)):
+        _, emp = _exact_draw_pool(dist, t, n, seed)
+        par = sweep_simulate(dist, n, n_trials=t, seed=seed)
+        em = sweep_simulate(emp, n, n_trials=t, seed=seed)
+        assert np.array_equal(par.samples, em.samples)
+
+
+def test_empirical_sweep_bit_identical_to_parametric_jax():
+    t, n, seed = 200, 16, 5
+    _, emp = _exact_draw_pool(SEXP, t, n, seed)
+    par = sweep_simulate(SEXP, n, n_trials=t, seed=seed, backend="jax")
+    em = sweep_simulate(emp, n, n_trials=t, seed=seed, backend="jax")
+    assert np.array_equal(par.samples, em.samples)
+    # jax agrees with numpy to backend precision on the empirical path too
+    em_np = sweep_simulate(emp, n, n_trials=t, seed=seed)
+    np.testing.assert_allclose(em.means(), em_np.means(), rtol=1e-4)
+
+
+def test_empirical_maxmin_and_coverage_share_sweep_draws():
+    t, n, seed = 300, 16, 9
+    _, emp = _exact_draw_pool(SEXP, t, n, seed)
+    res = sweep_simulate(emp, n, n_trials=t, seed=seed)
+    for b in res.splits:
+        mm = simulate_maxmin(emp, n, b, n_trials=t, seed=seed)
+        assert np.array_equal(res.result(b).samples, mm.samples)
+    # the coverage rule on the balanced assignment = maxmin, for empirical
+    a = balanced_nonoverlapping(n, 4)
+    cov = simulate_coverage(emp, a, n_trials=t, seed=seed)
+    ref = simulate_coverage_reference(emp, a, n_trials=t, seed=seed)
+    assert np.array_equal(cov.samples, ref.samples)
+
+
+def test_empirical_sojourn_sweep_bit_identical_to_parametric():
+    n, jobs, rate, seed = 16, 400, 2.0, 11
+    _, emp = _exact_draw_pool(SEXP, jobs, n, seed, skip_arrivals=jobs)
+    par = sweep_sojourn(SEXP, n, arrival_rate=rate, n_jobs=jobs, seed=seed)
+    em = sweep_sojourn(emp, n, arrival_rate=rate, n_jobs=jobs, seed=seed)
+    assert np.array_equal(par.samples, em.samples)
+    sj_par = simulate_sojourn(SEXP, n, 4, arrival_rate=rate, n_jobs=jobs, seed=seed)
+    sj_em = simulate_sojourn(emp, n, 4, arrival_rate=rate, n_jobs=jobs, seed=seed)
+    assert np.array_equal(sj_par.samples, sj_em.samples)
+
+
+def test_empirical_and_parametric_cells_share_one_draw_matrix():
+    # mixed dist list: the empirical cell rides the same CRN sweep as the
+    # parametric cells (one call, one draw matrix) and lands close to its
+    # source distribution's cell
+    pool = Empirical(tuple(SEXP.sample(np.random.default_rng(0), 30_000)))
+    res = sweep_simulate([SEXP, pool], 16, n_trials=4_000, seed=3)
+    assert res.samples.shape[0] == 2
+    np.testing.assert_allclose(
+        res.means()[0], res.means()[1], rtol=0.05
+    )
+
+
+def test_empirical_hetero_rates_scale_whole_draw():
+    # rates=ones is bit-identical to rates=None; a slow worker's draws are
+    # scaled up by 1/rate (whole-draw semantics for empirical dists)
+    emp = Empirical(tuple(np.random.default_rng(1).lognormal(0.0, 0.8, 2_000)))
+    s0 = sweep_simulate(emp, 8, n_trials=400, seed=2)
+    s1 = sweep_simulate(emp, 8, n_trials=400, seed=2, rates=np.ones(8))
+    assert np.array_equal(s0.samples, s1.samples)
+    sim0 = StepTimeSimulator(emp, 4, seed=3)
+    rates = np.ones(4)
+    rates[2] = 0.5
+    sim1 = StepTimeSimulator(emp, 4, seed=3, rates=rates)
+    t0 = np.stack([sim0.next_step() for _ in range(50)])
+    t1 = np.stack([sim1.next_step() for _ in range(50)])
+    assert np.array_equal(t0[:, :2], t1[:, :2])
+    assert np.array_equal(2.0 * t0[:, 2], t1[:, 2])
+
+
+def test_step_time_simulator_empirical_draws_are_iid():
+    # the per-step path must NOT reuse the sweep's rank coupling: successive
+    # steps draw different values (a coupled N-vector would repeat the same
+    # N quantiles every step)
+    emp = Empirical(tuple(np.random.default_rng(4).gamma(2.0, 1.0, 1_000)))
+    sim = StepTimeSimulator(emp, 8, seed=5)
+    steps = np.stack([sim.next_step() for _ in range(20)])
+    assert len({tuple(np.sort(row)) for row in steps}) > 1
+    assert np.isin(steps, np.asarray(emp.atoms)).all()
 
 
 # -- tuner on the batched sweep ----------------------------------------------
