@@ -29,6 +29,7 @@ from .order_stats import (
 )
 from .policies import (
     Assignment,
+    PolicyCandidate,
     balanced_nonoverlapping,
     divisors,
     overlapping_cyclic,
@@ -47,6 +48,7 @@ from .replication import (
 )
 from .simulator import (
     FaultEvent,
+    PolicySweepResult,
     SimResult,
     SpeculativeSweepResult,
     StepTimeSimulator,
@@ -57,8 +59,10 @@ from .simulator import (
     simulate_coverage_reference,
     simulate_maxmin,
     simulate_sojourn,
+    simulate_sojourn_policies,
     sweep_simulate,
     sweep_sojourn,
+    sweep_sojourn_policies,
     sweep_sojourn_speculative,
 )
 from .spectrum import (

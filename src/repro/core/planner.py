@@ -67,6 +67,7 @@ from .order_stats import (
 )
 from .policies import (
     Assignment,
+    PolicyCandidate,
     _validate_rates,
     divisors,
     rate_aware_assignment,
@@ -109,9 +110,12 @@ def _best_speculative_point(
     quantiles: Sequence[Optional[float]],
     metric: Metric,
 ) -> tuple[SpectrumPoint, Optional[float]]:
-    """Pick one B's best clone trigger: build a SpectrumPoint per candidate
-    sample set (one per trigger, None = plain replication) and return the
-    (point, trigger) minimizing the objective metric."""
+    """Pick one B's best candidate: build a SpectrumPoint per candidate
+    sample set and return the (point, label) minimizing the objective
+    metric.  Label-generic — ``quantiles`` holds clone triggers on the
+    legacy speculation axis (None = plain replication) and
+    :class:`~repro.core.policies.PolicyCandidate` objects on the policy
+    axis."""
     candidates = [
         point_from_samples(n_batches, replication, s) for s in sample_sets
     ]
@@ -192,6 +196,13 @@ class ClusterSpec:
             r != self.rates[0] for r in self.rates
         )
 
+    @property
+    def has_skewed_rates(self) -> bool:
+        """Alias of :attr:`heterogeneous` (the name capability checks and
+        error messages use: 'this spec carries rate skew a planner must
+        either consume or explicitly reject')."""
+        return self.heterogeneous
+
     def feasible_batches(self) -> tuple[int, ...]:
         """Candidate B values after applying every constraint."""
         base = self.feasible_b if self.feasible_b is not None else tuple(
@@ -270,6 +281,22 @@ class Objective:
     then carries the winning trigger as
     :attr:`Plan.speculation_quantile` (``None`` when plain replication won).
 
+    **Straggler-policy portfolio.**  ``policies`` (load-aware objectives
+    only; mutually exclusive with ``speculation_quantiles``) asks the
+    simulated planners to score each candidate B under each listed
+    :class:`~repro.core.policies.PolicyCandidate` — clone vs relaunch vs
+    hedged vs none, one batched CRN call
+    (:func:`~repro.core.simulator.sweep_sojourn_policies`) — and the plan
+    carries the winning candidate as :attr:`Plan.policy`.  A ``'none'``
+    baseline is prepended automatically when absent, so "do nothing" always
+    competes.
+
+    **Arrival process.**  ``arrivals`` (load-aware objectives only) carries
+    the serving engine's ACTUAL arrival offsets (MMPP / bursty / trace)
+    into every sojourn sweep — without it the planner silently scores
+    Poisson arrivals the engine never runs (the bug this field fixes).
+    Offsets shorter than the sweep's job count are cycled trace-style.
+
     >>> Objective(metric="p99", utilization=0.7).load_aware
     True
     >>> Objective(metric="mean").load_aware
@@ -283,6 +310,8 @@ class Objective:
     utilization: Optional[float] = None
     job_load: float = 1.0
     speculation_quantiles: Optional[tuple[float, ...]] = None
+    policies: Optional[tuple[PolicyCandidate, ...]] = None
+    arrivals: Optional[tuple[float, ...]] = None
 
     def __post_init__(self):
         if self.metric not in METRICS:
@@ -334,6 +363,48 @@ class Objective:
                     "(arrival_rate or utilization): speculation is scored "
                     "on sojourn under queueing"
                 )
+        if self.policies is not None:
+            if self.speculation_quantiles is not None:
+                raise ValueError(
+                    "give policies OR speculation_quantiles, not both — a "
+                    "clone trigger is expressed as "
+                    "PolicyCandidate('clone', quantile=q) on the policy axis"
+                )
+            pols = tuple(self.policies)
+            if not pols:
+                raise ValueError("policies must be non-empty when given")
+            for p in pols:
+                if not isinstance(p, PolicyCandidate):
+                    raise TypeError(
+                        "policies entries must be PolicyCandidate, got "
+                        f"{type(p).__name__}"
+                    )
+            if not any(p.kind == "none" for p in pols):
+                # 'do nothing' always competes: the argmin over the policy
+                # axis must be able to reject every intervention
+                pols = (PolicyCandidate(), *pols)
+            object.__setattr__(self, "policies", pols)
+            if not self.load_aware:
+                raise ValueError(
+                    "policies needs a load-aware objective (arrival_rate or "
+                    "utilization): straggler policies are scored on sojourn "
+                    "under queueing"
+                )
+        if self.arrivals is not None:
+            arr = np.asarray(self.arrivals, dtype=float)
+            if arr.ndim != 1 or arr.size == 0:
+                raise ValueError("arrivals must be a non-empty 1-D sequence")
+            if np.any(~np.isfinite(arr)) or np.any(np.diff(arr) < 0):
+                raise ValueError("arrivals must be finite and non-decreasing")
+            object.__setattr__(
+                self, "arrivals", tuple(float(t) for t in arr)
+            )
+            if not self.load_aware:
+                raise ValueError(
+                    "arrivals needs a load-aware objective (arrival_rate or "
+                    "utilization): arrival offsets only matter for sojourn "
+                    "scoring"
+                )
 
     @property
     def load_aware(self) -> bool:
@@ -365,6 +436,12 @@ class Plan:
     ``speculation_quantiles``); ``None`` means plain replication scored
     best and the serving engine should not speculate.
 
+    ``policy`` is the winning :class:`~repro.core.policies.PolicyCandidate`
+    at the emitted B (only when the Objective offered ``policies``); a
+    ``kind='none'`` candidate means every intervention lost to plain
+    replication.  When a clone candidate wins, ``speculation_quantile``
+    mirrors its trigger so pre-portfolio consumers keep working.
+
     ``confidence`` and ``vote_share`` are the bootstrap-uncertainty report
     of :class:`EmpiricalPlanner` (None from every other planner):
     ``vote_share`` maps each swept B to the fraction of bootstrap
@@ -383,6 +460,7 @@ class Plan:
     planner: str  # name of the Planner that produced this
     closed_form_mean: Optional[float] = None  # hetero closed-form companion
     speculation_quantile: Optional[float] = None  # chosen clone trigger
+    policy: Optional[PolicyCandidate] = None  # chosen straggler policy
     confidence: Optional[float] = None  # bootstrap vote share at B*
     vote_share: Optional[tuple[tuple[int, float], ...]] = None  # per-B votes
 
@@ -473,6 +551,22 @@ class Planner:
         (None unless a speculative sweep ran and speculation won there)."""
         return None
 
+    def _policy_for(self, n_batches: int) -> Optional[PolicyCandidate]:
+        """The straggler policy chosen for ``n_batches`` by the last sweep
+        (None unless the objective carried a policy portfolio)."""
+        return None
+
+    def _decision_fields(self, n_batches: int) -> dict:
+        """Plan fields carrying the per-B sweep decisions: the winning
+        policy candidate and — when a clone candidate won, or the legacy
+        speculation sweep ran — the clone trigger mirror."""
+        pol = self._policy_for(n_batches)
+        if pol is not None:
+            spec_q = pol.quantile if pol.kind == "clone" else None
+        else:
+            spec_q = self._speculation_for(n_batches)
+        return {"policy": pol, "speculation_quantile": spec_q}
+
     def plan(
         self, spec: ClusterSpec, objective: Optional[Objective] = None
     ) -> Plan:
@@ -493,7 +587,7 @@ class Planner:
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
-            speculation_quantile=self._speculation_for(best.n_batches),
+            **self._decision_fields(best.n_batches),
         )
 
 
@@ -563,6 +657,9 @@ class SimulatedPlanner(Planner):
     def _speculation_for(self, n_batches: int) -> Optional[float]:
         return getattr(self, "_spec_q_by_b", {}).get(n_batches)
 
+    def _policy_for(self, n_batches: int) -> Optional[PolicyCandidate]:
+        return getattr(self, "_policy_by_b", {}).get(n_batches)
+
     def _sweep_sojourn(
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
@@ -574,12 +671,46 @@ class SimulatedPlanner(Planner):
         (B, clone-trigger) pairs — every B is also scored with a speculative
         clone at each listed late-quantile (plus the no-speculation
         baseline), each B keeps its best trigger, and the winners are
-        recorded for :attr:`Plan.speculation_quantile`."""
+        recorded for :attr:`Plan.speculation_quantile`.
+
+        With ``objective.policies`` the candidates become (B, policy) pairs
+        scored in one :func:`~repro.core.simulator.sweep_sojourn_policies`
+        call; each B keeps its best :class:`PolicyCandidate` and the
+        winners are recorded for :attr:`Plan.policy`.  ``objective.
+        arrivals``, when present, replaces the Poisson arrival sequence in
+        every branch."""
         from .simulator import (  # local: avoid import cycle
             sweep_sojourn,
+            sweep_sojourn_policies,
             sweep_sojourn_speculative,
         )
 
+        if objective.policies:
+            res = sweep_sojourn_policies(
+                spec.dist,
+                spec.n_workers,
+                arrival_rate=objective.offered_rate(spec),
+                policies=objective.policies,
+                n_jobs=self.n_trials,
+                seed=self.seed,
+                feasible_b=spec.feasible_batches(),
+                rates=self._sweep_rates(spec),
+                job_load=objective.job_load,
+                arrivals=objective.arrivals,
+            )
+            pts = []
+            self._policy_by_b = {}
+            for i, b in enumerate(res.splits):
+                point, best_p = _best_speculative_point(
+                    b,
+                    spec.n_workers // b,
+                    [res.samples[0, i, pi] for pi in range(len(res.policies))],
+                    res.policies,
+                    objective.metric,
+                )
+                self._policy_by_b[b] = best_p
+                pts.append(point)
+            return result_from_points(pts)
         if objective.speculation_quantiles:
             quantiles = (None, *objective.speculation_quantiles)
             res = sweep_sojourn_speculative(
@@ -592,6 +723,7 @@ class SimulatedPlanner(Planner):
                 feasible_b=spec.feasible_batches(),
                 rates=self._sweep_rates(spec),
                 job_load=objective.job_load,
+                arrivals=objective.arrivals,
             )
             pts = []
             self._spec_q_by_b = {}
@@ -616,6 +748,7 @@ class SimulatedPlanner(Planner):
             feasible_b=spec.feasible_batches(),
             rates=self._sweep_rates(spec),
             job_load=objective.job_load,
+            arrivals=objective.arrivals,
         )
         return result_from_points(
             point_from_samples(b, spec.n_workers // b, res.samples[0, i])
@@ -626,6 +759,7 @@ class SimulatedPlanner(Planner):
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
         self._spec_q_by_b = {}
+        self._policy_by_b = {}
         if objective.load_aware:
             return self._sweep_sojourn(spec, objective)
         return sweep_simulated(
@@ -678,6 +812,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
         self._spec_q_by_b = {}
+        self._policy_by_b = {}
         if not spec.heterogeneous:
             return super().sweep_spectrum(spec, objective)
         if objective.load_aware:
@@ -687,10 +822,41 @@ class HeterogeneousPlanner(SimulatedPlanner):
             # matrix common across B, exactly like the batched sweeps.
             # speculation_quantiles extends the candidates to (B, trigger)
             # pairs — all triggers of one B share one draw set
-            # (simulate_sojourn_quantiles), same as the homogeneous sweep.
-            from .simulator import simulate_sojourn_quantiles  # avoid cycle
+            # (simulate_sojourn_quantiles), same as the homogeneous sweep;
+            # a policy portfolio rides simulate_sojourn_policies the same
+            # way, one draw set per B shared by every candidate.
+            from .simulator import (  # local: avoid import cycle
+                simulate_sojourn_policies,
+                simulate_sojourn_quantiles,
+            )
 
             rate = objective.offered_rate(spec)
+            if objective.policies:
+                pts = []
+                for b in spec.feasible_batches():
+                    assignment = rate_aware_assignment(
+                        spec.n_workers, b, spec.rates
+                    )
+                    sample_sets = simulate_sojourn_policies(
+                        spec.dist,
+                        spec.n_workers,
+                        b,
+                        arrival_rate=rate,
+                        policies=objective.policies,
+                        n_jobs=self.n_trials,
+                        seed=self.seed,
+                        rates=spec.rates,
+                        job_load=objective.job_load,
+                        worker_batch=assignment.worker_batch,
+                        arrivals=objective.arrivals,
+                    )
+                    point, best_p = _best_speculative_point(
+                        b, spec.n_workers // b, sample_sets,
+                        objective.policies, objective.metric,
+                    )
+                    self._policy_by_b[b] = best_p
+                    pts.append(point)
+                return result_from_points(pts)
             quantiles: tuple[Optional[float], ...] = (None,)
             if objective.speculation_quantiles:
                 quantiles = (None, *objective.speculation_quantiles)
@@ -710,6 +876,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
                     rates=spec.rates,
                     job_load=objective.job_load,
                     worker_batch=assignment.worker_batch,
+                    arrivals=objective.arrivals,
                 )
                 point, best_q = _best_speculative_point(
                     b, spec.n_workers // b, sample_sets, quantiles,
@@ -753,11 +920,14 @@ class EmpiricalPlanner(SimulatedPlanner):
     per B (the bootstrap-smoothed estimate).  A parametric ``spec.dist`` is
     accepted for convenience (a ``pool_size`` synthetic pool is drawn from
     it first) — the statistical-recovery tests feed known Exp/SExp fleets
-    through exactly that path.  Load-aware objectives and speculation
-    triggers are supported through the same sojourn sweeps as
-    :class:`SimulatedPlanner`; per-worker rates are not consumed (the
-    bootstrap quantifies distributional uncertainty, not skew — placement
-    still honours rates via the shared ``assignment_for``).
+    through exactly that path.  Load-aware objectives, speculation
+    triggers, and straggler-policy portfolios are supported through the
+    same sojourn sweeps as :class:`SimulatedPlanner`.  Per-worker rate
+    skew is REJECTED loudly (``ValueError``): the bootstrap sweep
+    quantifies distributional uncertainty only and would silently score
+    every B as if the fleet were uniform while still emitting rate-aware
+    placements — a silently wrong answer.  Plan skewed fleets with
+    :class:`HeterogeneousPlanner` instead.
 
     >>> import numpy as np
     >>> pool = np.random.default_rng(0).lognormal(0.0, 1.0, 2_000)
@@ -833,12 +1003,86 @@ class EmpiricalPlanner(SimulatedPlanner):
         from .simulator import (  # local: avoid import cycle
             sweep_simulate,
             sweep_sojourn,
+            sweep_sojourn_policies,
             sweep_sojourn_speculative,
         )
 
         self._spec_q_by_b = {}
+        self._policy_by_b = {}
+        if spec.has_skewed_rates:
+            raise ValueError(
+                "EmpiricalPlanner cannot plan a rate-skewed fleet: the "
+                "bootstrap sweep scores every B as if workers were uniform "
+                "while the emitted placement is rate-aware, which would be "
+                "a silently wrong answer.  Use HeterogeneousPlanner "
+                "(make_planner('heterogeneous')) for skewed specs, or drop "
+                "spec.rates to plan the uniform approximation explicitly."
+            )
         dists = self._bootstrap_dists(spec)
         splits = spec.feasible_batches()
+        if objective.load_aware and objective.policies:
+            res = sweep_sojourn_policies(
+                dists,
+                spec.n_workers,
+                arrival_rate=objective.offered_rate(spec),
+                policies=objective.policies,
+                n_jobs=self.n_trials,
+                seed=self.seed,
+                feasible_b=splits,
+                job_load=objective.job_load,
+                arrivals=objective.arrivals,
+            )
+            # each resample scores every B at its best candidate; the
+            # candidate REPORTED per B comes from the pooled samples (one
+            # consistent answer for the engine to adopt)
+            best_p_index: dict[int, int] = {}
+            for s, b in enumerate(splits):
+                pooled_pts = [
+                    point_from_samples(
+                        b,
+                        spec.n_workers // b,
+                        res.samples[:, s, pi, :].ravel(),
+                    )
+                    for pi in range(len(res.policies))
+                ]
+                pi_best = min(
+                    range(len(res.policies)),
+                    key=lambda pi: metric_value(
+                        pooled_pts[pi], objective.metric
+                    ),
+                )
+                best_p_index[b] = pi_best
+                self._policy_by_b[b] = res.policies[pi_best]
+
+            def cell(k: int, s: int):
+                # per-resample best candidate for voting (a resample votes
+                # for the B it would run, under the policy it would pick)
+                pts = [
+                    point_from_samples(
+                        splits[s],
+                        spec.n_workers // splits[s],
+                        res.samples[k, s, pi],
+                    )
+                    for pi in range(len(res.policies))
+                ]
+                pi = min(
+                    range(len(res.policies)),
+                    key=lambda i: metric_value(pts[i], objective.metric),
+                )
+                return res.samples[k, s, pi]
+
+            self._reduce_votes(
+                splits, spec.n_workers, cell, objective.metric, pooled=False
+            )
+            # the pooled spectrum must describe the policy the plan adopts
+            return result_from_points(
+                point_from_samples(
+                    b,
+                    spec.n_workers // b,
+                    res.samples[:, s, best_p_index[b], :].ravel(),
+                )
+                for s, b in enumerate(splits)
+            )
         if objective.load_aware and objective.speculation_quantiles:
             quantiles = (None, *objective.speculation_quantiles)
             res = sweep_sojourn_speculative(
@@ -850,6 +1094,7 @@ class EmpiricalPlanner(SimulatedPlanner):
                 seed=self.seed,
                 feasible_b=splits,
                 job_load=objective.job_load,
+                arrivals=objective.arrivals,
             )
             # each resample scores every B at its best trigger; the trigger
             # REPORTED per B comes from the pooled samples (one consistent
@@ -911,6 +1156,7 @@ class EmpiricalPlanner(SimulatedPlanner):
                 seed=self.seed,
                 feasible_b=splits,
                 job_load=objective.job_load,
+                arrivals=objective.arrivals,
             )
         else:
             res = sweep_simulate(
@@ -957,7 +1203,7 @@ class EmpiricalPlanner(SimulatedPlanner):
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
-            speculation_quantile=self._speculation_for(best_b),
+            **self._decision_fields(best_b),
             confidence=votes.get(best_b, 0) / total,
             vote_share=tuple(
                 (p.n_batches, votes.get(p.n_batches, 0) / total)

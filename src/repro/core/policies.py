@@ -25,6 +25,7 @@ import numpy as np
 
 __all__ = [
     "Assignment",
+    "PolicyCandidate",
     "balanced_nonoverlapping",
     "replica_major_nonoverlapping",
     "unbalanced_nonoverlapping",
@@ -33,6 +34,66 @@ __all__ = [
     "rate_aware_assignment",
     "divisors",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyCandidate:
+    """One straggler-mitigation policy setting for the planner to score.
+
+    The planner's policy axis (Behrouzi-Far & Soljanin 2020: replicate-
+    from-start vs relaunch win in different service regimes; Aktaş et al.:
+    the clone trigger matters as much as the redundancy level).  Kinds:
+
+    * ``'none'``     — dispatch once, wait (the baseline every sweep keeps);
+    * ``'clone'``    — speculative re-dispatch: a job late past the
+      ``quantile`` of its set-service distribution grabs an idle set for a
+      clone, first-response-wins;
+    * ``'relaunch'`` — cancel the late attempt and re-draw fresh on the
+      SAME set (no extra capacity; pays off only when service has memory);
+    * ``'hedged'``   — dispatch to TWO replica-sets up front for a
+      ``hedge_fraction`` of jobs (deterministic stride), racing from t=0.
+
+    ``quantile`` is the late-trigger for clone/relaunch (``None`` = the
+    trigger never fires, i.e. the disabled setting); ``hedge_fraction`` is
+    meaningful only for ``'hedged'`` (0.0 disables hedging entirely).
+    """
+
+    kind: str = "none"  # 'none' | 'clone' | 'relaunch' | 'hedged'
+    quantile: float | None = None  # late trigger (clone/relaunch only)
+    hedge_fraction: float = 1.0  # fraction of jobs hedged ('hedged' only)
+
+    def __post_init__(self):
+        if self.kind not in ("none", "clone", "relaunch", "hedged"):
+            raise ValueError(
+                f"unknown policy kind {self.kind!r} "
+                "(use 'none'|'clone'|'relaunch'|'hedged')"
+            )
+        if self.quantile is not None:
+            if self.kind not in ("clone", "relaunch"):
+                raise ValueError(
+                    f"{self.kind!r} policy takes no trigger quantile"
+                )
+            if not 0.0 < self.quantile < 1.0:
+                raise ValueError(
+                    f"trigger quantile must be in (0, 1), got {self.quantile}"
+                )
+        if not 0.0 <= self.hedge_fraction <= 1.0:
+            raise ValueError(
+                f"hedge_fraction must be in [0, 1], got {self.hedge_fraction}"
+            )
+        if self.kind != "hedged" and self.hedge_fraction != 1.0:
+            raise ValueError(
+                f"hedge_fraction only applies to 'hedged', not {self.kind!r}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        """False when the setting can never fire (the baseline cells)."""
+        if self.kind == "none":
+            return False
+        if self.kind in ("clone", "relaunch"):
+            return self.quantile is not None
+        return self.hedge_fraction > 0.0
 
 
 def divisors(n: int) -> list[int]:

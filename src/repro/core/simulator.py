@@ -56,20 +56,23 @@ from typing import Sequence
 import numpy as np
 
 from .order_stats import Empirical, ServiceDistribution
-from .policies import Assignment, _validate_rates, divisors
+from .policies import Assignment, PolicyCandidate, _validate_rates, divisors
 
 __all__ = [
     "SimResult",
     "SweepSimResult",
     "SpeculativeSweepResult",
+    "PolicySweepResult",
     "simulate_maxmin",
     "simulate_coverage",
     "simulate_coverage_reference",
     "simulate_sojourn",
     "simulate_sojourn_quantiles",
+    "simulate_sojourn_policies",
     "sweep_simulate",
     "sweep_sojourn",
     "sweep_sojourn_speculative",
+    "sweep_sojourn_policies",
     "censored_observations",
     "StepTimeSimulator",
     "FaultEvent",
@@ -688,6 +691,251 @@ def _sojourn_recursion_speculative(
     return out, n_clones
 
 
+def _sojourn_recursion_relaunch(
+    arrivals: np.ndarray,
+    svc: np.ndarray,
+    alt_svc: np.ndarray,
+    n_groups: int,
+    threshold: float,
+) -> tuple[np.ndarray, int]:
+    """FIFO multi-server queue WITH relaunch-on-straggle (event-driven).
+
+    The queueing model of the master's :class:`~repro.serving.queueing
+    .RelaunchPolicy`: a job whose response has not arrived ``threshold``
+    after its start CANCELS its in-flight attempt and re-draws a fresh one
+    on the SAME replica-set (from the independent ``alt_svc`` matrix) —
+    no extra capacity is consumed, so unlike cloning there is no idle-set
+    gate and no busy re-arm.  The fresh attempt may finish LATER than the
+    cancelled one would have (the gamble relaunch takes); stale depart
+    events are skipped by the ``done[i] > t`` guard.  One relaunch per job
+    (the engine's default budget).  With ``threshold=inf`` no trigger ever
+    fires and the recursion is bit-identical to :func:`_sojourn_recursion`
+    (the disabled-settings parity contract).
+
+    Returns (per-job sojourns, number of relaunches).
+    """
+    import heapq as _hq
+    import itertools as _it
+
+    svc_rows = svc.tolist()
+    alt_rows = alt_svc.tolist()
+    n_jobs = len(arrivals)
+    out = np.empty(n_jobs)
+    free = [0.0] * n_groups
+    idle = set(range(n_groups))
+    queue: deque[int] = deque()
+    start = [0.0] * n_jobs
+    done = [0.0] * n_jobs
+    held: list[tuple[int, ...]] = [()] * n_jobs
+    relaunched = [False] * n_jobs
+    departed = [False] * n_jobs
+    seq = _it.count()
+    events: list = []  # (time, seq, kind, job): kind 0=arrive 1=depart 2=spec
+    for i, a in enumerate(arrivals.tolist()):
+        _hq.heappush(events, (a, next(seq), 0, i))
+    n_relaunches = 0
+
+    def dispatch(i: int, t: float) -> None:
+        g = min(idle, key=lambda h: (free[h], h))
+        idle.discard(g)
+        start[i] = t
+        done[i] = t + svc_rows[i][g]
+        held[i] = (g,)
+        _hq.heappush(events, (done[i], next(seq), 1, i))
+        if np.isfinite(threshold):
+            _hq.heappush(events, (t + threshold, next(seq), 2, i))
+
+    while events:
+        t, _, kind, i = _hq.heappop(events)
+        if kind == 0:  # arrival
+            if idle:
+                dispatch(i, t)
+            else:
+                queue.append(i)
+        elif kind == 1:  # depart (stale after a relaunch moved completion)
+            if departed[i] or done[i] > t:
+                continue
+            departed[i] = True
+            out[i] = done[i] - arrivals[i]
+            for g in held[i]:
+                free[g] = done[i]
+                idle.add(g)
+            while queue and idle:
+                dispatch(queue.popleft(), t)
+        else:  # relaunch check
+            if departed[i] or done[i] <= t or relaunched[i]:
+                continue
+            g = held[i][0]
+            relaunched[i] = True
+            n_relaunches += 1
+            # cancel + fresh draw on the same set; may land later than the
+            # cancelled attempt would have
+            done[i] = t + alt_rows[i][g]
+            _hq.heappush(events, (done[i], next(seq), 1, i))
+    return out, n_relaunches
+
+
+def _sojourn_recursion_hedged(
+    arrivals: np.ndarray,
+    svc: np.ndarray,
+    alt_svc: np.ndarray,
+    n_groups: int,
+    hedge_fraction: float,
+) -> tuple[np.ndarray, int]:
+    """FIFO multi-server queue WITH hedged dispatch (event-driven).
+
+    The queueing model of the master's :class:`~repro.serving.queueing
+    .HedgedDispatchPolicy` at ``k=2``: a deterministic-stride
+    ``hedge_fraction`` of dispatches (the n-th dispatched job is hedged iff
+    ``floor((n+1)f) > floor(nf)``, the master's exact rule) grabs ONE
+    additional idle replica-set at dispatch time, drawn from the
+    independent ``alt_svc`` matrix; both sets race from t=0, the earlier
+    response wins, and both free at the winner's time.  Hedges only take
+    sets idle at the dispatch instant, so queued work is never displaced.
+    With ``hedge_fraction=0`` no job is hedged and the recursion is
+    bit-identical to :func:`_sojourn_recursion` (the disabled-settings
+    parity contract).
+
+    Returns (per-job sojourns, number of hedges launched).
+    """
+    import heapq as _hq
+    import itertools as _it
+    import math as _math
+
+    svc_rows = svc.tolist()
+    alt_rows = alt_svc.tolist()
+    n_jobs = len(arrivals)
+    out = np.empty(n_jobs)
+    free = [0.0] * n_groups
+    idle = set(range(n_groups))
+    queue: deque[int] = deque()
+    done = [0.0] * n_jobs
+    held: list[tuple[int, ...]] = [()] * n_jobs
+    departed = [False] * n_jobs
+    seq = _it.count()
+    events: list = []  # (time, seq, kind, job): kind 0=arrive 1=depart
+    for i, a in enumerate(arrivals.tolist()):
+        _hq.heappush(events, (a, next(seq), 0, i))
+    n_hedges = 0
+    dispatch_count = 0
+
+    def dispatch(i: int, t: float) -> None:
+        nonlocal n_hedges, dispatch_count
+        g = min(idle, key=lambda h: (free[h], h))
+        idle.discard(g)
+        done[i] = t + svc_rows[i][g]
+        held[i] = (g,)
+        n = dispatch_count
+        dispatch_count += 1
+        hedge = _math.floor((n + 1) * hedge_fraction) > _math.floor(
+            n * hedge_fraction
+        )
+        if hedge and idle:
+            g2 = min(idle, key=lambda h: (free[h], h))
+            idle.discard(g2)
+            n_hedges += 1
+            held[i] = (g, g2)
+            hedge_done = t + alt_rows[i][g2]
+            if hedge_done < done[i]:
+                done[i] = hedge_done
+        _hq.heappush(events, (done[i], next(seq), 1, i))
+
+    while events:
+        t, _, kind, i = _hq.heappop(events)
+        if kind == 0:  # arrival
+            if idle:
+                dispatch(i, t)
+            else:
+                queue.append(i)
+        else:  # depart
+            if departed[i]:
+                continue
+            departed[i] = True
+            out[i] = done[i] - arrivals[i]
+            for g in held[i]:
+                free[g] = done[i]
+                idle.add(g)
+            while queue and idle:
+                dispatch(queue.popleft(), t)
+    return out, n_hedges
+
+
+def _policy_sojourn(
+    pol: PolicyCandidate,
+    arrivals: np.ndarray,
+    svc: np.ndarray,
+    alt_svc: np.ndarray | None,
+    n_groups: int,
+) -> tuple[np.ndarray, int]:
+    """Route one policy candidate to its sojourn recursion.
+
+    Returns (per-job sojourns, number of extra interventions — clones,
+    relaunches, or hedges).  ``alt_svc`` may be None only for ``'none'``.
+    """
+    if pol.kind == "none":
+        return _sojourn_recursion(arrivals, svc, n_groups), 0
+    if pol.kind == "hedged":
+        return _sojourn_recursion_hedged(
+            arrivals, svc, alt_svc, n_groups, pol.hedge_fraction
+        )
+    threshold = (
+        np.inf if pol.quantile is None else float(np.quantile(svc, pol.quantile))
+    )
+    if pol.kind == "clone":
+        return _sojourn_recursion_speculative(
+            arrivals, svc, alt_svc, n_groups, threshold
+        )
+    return _sojourn_recursion_relaunch(
+        arrivals, svc, alt_svc, n_groups, threshold
+    )
+
+
+def _validate_policies(
+    policies: Sequence[PolicyCandidate],
+) -> tuple[PolicyCandidate, ...]:
+    seq = tuple(policies)
+    if not seq:
+        raise ValueError("at least one policy candidate required")
+    for p in seq:
+        if not isinstance(p, PolicyCandidate):
+            raise TypeError(
+                f"policies must be PolicyCandidate instances, got {type(p).__name__}"
+            )
+    return seq
+
+
+def _resolve_arrivals(
+    arrivals: Sequence[float] | None,
+    n_jobs: int,
+    arrival_rate: float,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """The sweep's arrival sequence: the caller's offsets, else Poisson.
+
+    When ``arrivals`` is None the legacy behavior (and the legacy RNG
+    consumption: n_jobs exponentials BEFORE the service draws) is kept
+    bit-for-bit.  A provided sequence must be 1-D, finite, non-decreasing;
+    shorter-than-``n_jobs`` sequences are CYCLED, each lap offset by the
+    trace span plus one mean gap (the :class:`~repro.serving.arrivals
+    .TraceArrivals` replay rule), so a finite engine trace can drive a
+    planner sweep of any length.  No RNG is consumed on this path, so the
+    service-draw matrices are identical with and without an override.
+    """
+    if arrivals is None:
+        return np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
+    arr = np.asarray(arrivals, dtype=float)
+    if arr.ndim != 1 or arr.size == 0:
+        raise ValueError("arrivals must be a non-empty 1-D sequence")
+    if np.any(~np.isfinite(arr)) or np.any(np.diff(arr) < 0):
+        raise ValueError("arrivals must be finite and non-decreasing")
+    if arr.size < n_jobs:
+        span = float(arr[-1] - arr[0])
+        lap = span + span / (arr.size - 1) if span > 0 else 1.0
+        reps = -(-n_jobs // arr.size)  # ceil
+        arr = np.concatenate([arr + k * lap for k in range(reps)])
+    return arr[:n_jobs]
+
+
 def _group_min_times(
     core: np.ndarray, worker_batch: np.ndarray, n_groups: int
 ) -> np.ndarray:
@@ -720,6 +968,7 @@ def simulate_sojourn(
     warmup: int | None = None,
     worker_batch: Sequence[int] | None = None,
     speculation_quantile: float | None = None,
+    arrivals: Sequence[float] | None = None,
 ) -> SimResult:
     """Sojourn times of one (B, r) split under Poisson batch-job arrivals.
 
@@ -738,6 +987,12 @@ def simulate_sojourn(
     empirical quantile of its set-service distribution grabs an idle set
     for one speculative clone.  ``None`` (default) is bit-identical to the
     pre-speculation path — the clone draws are only consumed when enabled.
+
+    ``arrivals`` overrides the Poisson arrival sequence with explicit
+    absolute offsets (e.g. the serving engine's MMPP/trace offsets, cycled
+    to ``n_jobs`` — see :func:`_resolve_arrivals`), so the planner scores
+    the process the engine actually runs instead of silently assuming
+    Poisson.
     """
     wb, rates_arr, warm = _resolve_sojourn_args(
         n_workers, n_batches, arrival_rate, (speculation_quantile,),
@@ -745,7 +1000,7 @@ def simulate_sojourn(
     )
     samples = _sojourn_quantile_samples(
         dist, n_workers, n_batches, arrival_rate, (speculation_quantile,),
-        n_jobs, seed, rates_arr, job_load, warm, wb,
+        n_jobs, seed, rates_arr, job_load, warm, wb, arrivals=arrivals,
     )
     return SimResult(samples[0])
 
@@ -782,14 +1037,14 @@ def _resolve_sojourn_args(
 
 def _sojourn_quantile_samples(
     dist, n_workers, n_batches, arrival_rate, quantiles,
-    n_jobs, seed, rates_arr, job_load, warm, wb,
+    n_jobs, seed, rates_arr, job_load, warm, wb, arrivals=None,
 ) -> list[np.ndarray]:
     """Post-warmup sojourns for ONE (B, placement) at several speculation
     triggers, from one draw set (arrivals + primary matrix + — lazily, only
     when some trigger is not None — one clone matrix).  The lazy clone draw
     keeps the ``(None,)`` call bit-identical to the pre-speculation path."""
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
+    arrivals = _resolve_arrivals(arrivals, n_jobs, arrival_rate, rng)
     unit = rng.standard_exponential((n_jobs, n_workers))
     core = _unit_times(unit, dist, rates_arr) * job_load
     svc = _group_min_times(core, wb, n_batches)
@@ -823,6 +1078,7 @@ def simulate_sojourn_quantiles(
     job_load: float = 1.0,
     warmup: int | None = None,
     worker_batch: Sequence[int] | None = None,
+    arrivals: Sequence[float] | None = None,
 ) -> list[np.ndarray]:
     """Sojourn samples of ONE (B, placement) at several clone triggers.
 
@@ -830,7 +1086,8 @@ def simulate_sojourn_quantiles(
     that supply an explicit ``worker_batch`` (the rate-aware planner): all
     triggers share one arrival sequence + draw matrix + clone matrix, and
     entry ``k`` is bit-identical to ``simulate_sojourn(...,
-    speculation_quantile=quantiles[k])`` at the same seed.
+    speculation_quantile=quantiles[k])`` at the same seed.  ``arrivals``
+    overrides the Poisson arrival sequence (see :func:`simulate_sojourn`).
     """
     wb, rates_arr, warm = _resolve_sojourn_args(
         n_workers, n_batches, arrival_rate, quantiles,
@@ -838,7 +1095,7 @@ def simulate_sojourn_quantiles(
     )
     return _sojourn_quantile_samples(
         dist, n_workers, n_batches, arrival_rate, tuple(quantiles),
-        n_jobs, seed, rates_arr, job_load, warm, wb,
+        n_jobs, seed, rates_arr, job_load, warm, wb, arrivals=arrivals,
     )
 
 
@@ -852,6 +1109,7 @@ def sweep_sojourn(
     rates: Sequence[float] | None = None,
     job_load: float = 1.0,
     warmup: int | None = None,
+    arrivals: Sequence[float] | None = None,
 ) -> SweepSimResult:
     """Sojourn times for ALL feasible (B, r) splits x distributions, batched.
 
@@ -860,7 +1118,9 @@ def sweep_sojourn(
     (common random numbers), so cross-B sojourn comparisons are
     variance-reduced exactly like the batch-completion sweep.  Each cell is
     bit-identical to ``simulate_sojourn(dist, N, B, ...)`` with the default
-    contiguous grouping and the same seed.
+    contiguous grouping and the same seed.  ``arrivals`` overrides the
+    Poisson arrival sequence with explicit offsets (the engine's actual
+    MMPP/trace process, cycled to ``n_jobs``).
     """
     dist_seq = _normalize_dists(dists)
     splits = list(feasible_b) if feasible_b is not None else divisors(n_workers)
@@ -874,7 +1134,7 @@ def sweep_sojourn(
     warm = _resolve_warmup(n_jobs, warmup)
 
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
+    arrivals = _resolve_arrivals(arrivals, n_jobs, arrival_rate, rng)
     unit = rng.standard_exponential((n_jobs, n_workers))
 
     order = _shared_draw_order(dist_seq, unit)
@@ -940,6 +1200,7 @@ def sweep_sojourn_speculative(
     rates: Sequence[float] | None = None,
     job_load: float = 1.0,
     warmup: int | None = None,
+    arrivals: Sequence[float] | None = None,
 ) -> SpeculativeSweepResult:
     """Sojourns for ALL (B, speculation-quantile) pairs x distributions.
 
@@ -950,7 +1211,8 @@ def sweep_sojourn_speculative(
     policy effect, not sampling noise.  Each ``quantile=None`` cell is
     bit-identical to the matching :func:`sweep_sojourn` cell at the same
     seed; each ``quantile=q`` cell matches ``simulate_sojourn(...,
-    speculation_quantile=q)``.
+    speculation_quantile=q)``.  ``arrivals`` overrides the Poisson arrival
+    sequence (see :func:`sweep_sojourn`).
     """
     dist_seq = _normalize_dists(dists)
     splits = list(feasible_b) if feasible_b is not None else divisors(n_workers)
@@ -970,7 +1232,7 @@ def sweep_sojourn_speculative(
     warm = _resolve_warmup(n_jobs, warmup)
 
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.standard_exponential(n_jobs)) / arrival_rate
+    arrivals = _resolve_arrivals(arrivals, n_jobs, arrival_rate, rng)
     unit = rng.standard_exponential((n_jobs, n_workers))
     clone_unit = rng.standard_exponential((n_jobs, n_workers))
 
@@ -1007,6 +1269,164 @@ def sweep_sojourn_speculative(
         dists=dist_seq,
         samples=samples,
         clone_fraction=clones,
+    )
+
+
+def simulate_sojourn_policies(
+    dist: ServiceDistribution,
+    n_workers: int,
+    n_batches: int,
+    arrival_rate: float,
+    policies: Sequence[PolicyCandidate],
+    n_jobs: int = 4_000,
+    seed: int = 0,
+    rates: Sequence[float] | None = None,
+    job_load: float = 1.0,
+    warmup: int | None = None,
+    worker_batch: Sequence[int] | None = None,
+    arrivals: Sequence[float] | None = None,
+) -> list[np.ndarray]:
+    """Sojourn samples of ONE (B, placement) under several straggler
+    policies.
+
+    The policy-portfolio companion of :func:`simulate_sojourn_quantiles`
+    (and the per-B path the rate-aware planner uses): every candidate
+    shares one arrival sequence + primary draw matrix + — lazily, only
+    when some candidate is not ``'none'`` — one alternate draw matrix (the
+    clone/relaunch/hedge draws).  A ``PolicyCandidate('clone', q)`` entry
+    is bit-identical to ``simulate_sojourn_quantiles`` at quantile ``q``
+    and the same seed; disabled relaunch/hedged candidates are
+    bit-identical to the plain path (the CRN parity contracts the tests
+    pin).
+    """
+    pol_seq = _validate_policies(policies)
+    wb, rates_arr, warm = _resolve_sojourn_args(
+        n_workers, n_batches, arrival_rate, (None,),
+        n_jobs, rates, job_load, warmup, worker_batch,
+    )
+    rng = np.random.default_rng(seed)
+    arr = _resolve_arrivals(arrivals, n_jobs, arrival_rate, rng)
+    unit = rng.standard_exponential((n_jobs, n_workers))
+    core = _unit_times(unit, dist, rates_arr) * job_load
+    svc = _group_min_times(core, wb, n_batches)
+    alt_svc = None
+    out = []
+    for pol in pol_seq:
+        if alt_svc is None and pol.kind != "none":
+            alt_unit = rng.standard_exponential((n_jobs, n_workers))
+            alt_core = _unit_times(alt_unit, dist, rates_arr) * job_load
+            alt_svc = _group_min_times(alt_core, wb, n_batches)
+        sojourn, _ = _policy_sojourn(pol, arr, svc, alt_svc, n_batches)
+        out.append(sojourn[warm:])
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySweepResult:
+    """Sojourn samples for every (distribution, B, policy) cell.
+
+    The policy-portfolio twin of :class:`SpeculativeSweepResult`:
+    ``samples[d, s, p]`` holds the post-warmup sojourns of ``dists[d]`` at
+    ``splits[s]`` batches under ``policies[p]``, all from ONE shared
+    arrival sequence + primary draw matrix + alternate draw matrix, so
+    (B, policy) comparisons are variance-reduced.
+    ``extra_fraction[d, s, p]`` is the fraction of jobs that launched an
+    extra intervention (clone, relaunch, or hedge) — the capacity/work
+    price of each policy setting.
+    """
+
+    n_workers: int
+    splits: tuple[int, ...]
+    policies: tuple[PolicyCandidate, ...]
+    dists: tuple[ServiceDistribution, ...]
+    samples: np.ndarray  # (n_dists, n_splits, n_policies, n_jobs - warmup)
+    extra_fraction: np.ndarray  # (n_dists, n_splits, n_policies)
+
+    def result(
+        self,
+        n_batches: int,
+        policy: PolicyCandidate,
+        dist_index: int = 0,
+    ) -> SimResult:
+        return SimResult(
+            self.samples[
+                dist_index,
+                self.splits.index(n_batches),
+                self.policies.index(policy),
+            ]
+        )
+
+
+def sweep_sojourn_policies(
+    dists: ServiceDistribution | Sequence[ServiceDistribution],
+    n_workers: int,
+    arrival_rate: float,
+    policies: Sequence[PolicyCandidate],
+    n_jobs: int = 4_000,
+    seed: int = 0,
+    feasible_b: Sequence[int] | None = None,
+    rates: Sequence[float] | None = None,
+    job_load: float = 1.0,
+    warmup: int | None = None,
+    arrivals: Sequence[float] | None = None,
+) -> PolicySweepResult:
+    """Sojourns for ALL (B, straggler-policy) pairs x distributions.
+
+    The planner's scoring engine for the adaptive policy portfolio: every
+    cell shares ONE arrival sequence, ONE primary draw matrix, and ONE
+    alternate draw matrix (common random numbers), so the argmin over
+    (B, policy) — clone vs relaunch vs hedged vs none — measures pure
+    policy effect, not sampling noise.  Each ``PolicyCandidate('none')``
+    cell is bit-identical to the matching :func:`sweep_sojourn` cell at
+    the same seed; each ``('clone', q)`` cell matches the
+    :func:`sweep_sojourn_speculative` cell at quantile ``q``; disabled
+    relaunch/hedged candidates match the ``'none'`` cells bit-for-bit.
+    ``arrivals`` overrides the Poisson arrival sequence (see
+    :func:`sweep_sojourn`).
+    """
+    dist_seq = _normalize_dists(dists)
+    splits = list(feasible_b) if feasible_b is not None else divisors(n_workers)
+    if not splits:
+        raise ValueError("no feasible B values")
+    for b in splits:
+        if n_workers % b:
+            raise ValueError(f"B={b} infeasible: must divide N={n_workers}")
+    pol_seq = _validate_policies(policies)
+    _validate_load(arrival_rate, job_load)
+    rates_arr = _validate_rates(rates, n_workers)
+    warm = _resolve_warmup(n_jobs, warmup)
+
+    rng = np.random.default_rng(seed)
+    arr = _resolve_arrivals(arrivals, n_jobs, arrival_rate, rng)
+    unit = rng.standard_exponential((n_jobs, n_workers))
+    alt_unit = rng.standard_exponential((n_jobs, n_workers))
+
+    order = _shared_draw_order(dist_seq, unit)
+    alt_order = _shared_draw_order(dist_seq, alt_unit)
+    samples = np.empty(
+        (len(dist_seq), len(splits), len(pol_seq), n_jobs - warm)
+    )
+    extra = np.zeros((len(dist_seq), len(splits), len(pol_seq)))
+    for di, dist in enumerate(dist_seq):
+        core = _unit_times(unit, dist, rates_arr, order=order) * job_load
+        alt_core = (
+            _unit_times(alt_unit, dist, rates_arr, order=alt_order) * job_load
+        )
+        for si, b in enumerate(splits):
+            r = n_workers // b
+            svc = core.reshape(n_jobs, b, r).min(axis=2)
+            alt_svc = alt_core.reshape(n_jobs, b, r).min(axis=2)
+            for pi, pol in enumerate(pol_seq):
+                soj, n_extra = _policy_sojourn(pol, arr, svc, alt_svc, b)
+                samples[di, si, pi] = soj[warm:]
+                extra[di, si, pi] = n_extra / n_jobs
+    return PolicySweepResult(
+        n_workers=n_workers,
+        splits=tuple(splits),
+        policies=pol_seq,
+        dists=dist_seq,
+        samples=samples,
+        extra_fraction=extra,
     )
 
 

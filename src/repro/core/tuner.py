@@ -160,6 +160,8 @@ class StragglerTuner:
         batch_divisor: int | None = None,
         job_load: float = 1.0,
         speculation_quantiles: tuple[float, ...] | None = None,
+        policy_candidates: tuple | None = None,
+        arrival_offsets: np.ndarray | None = None,
     ):
         self.plan = plan
         self.config = config or TunerConfig()
@@ -177,6 +179,28 @@ class StragglerTuner:
         self.speculation_quantiles = (
             tuple(float(q) for q in speculation_quantiles)
             if speculation_quantiles
+            else None
+        )
+        # straggler-policy portfolio: when set, load-aware re-plans score
+        # every (B, candidate) cell and land the winner on Plan.policy —
+        # this is how the tuner switches policy online when the fitted /
+        # empirical distribution drifts across a regime boundary.
+        # Mutually exclusive with speculation_quantiles (Objective enforces).
+        self.policy_candidates = (
+            tuple(policy_candidates) if policy_candidates else None
+        )
+        if self.policy_candidates and self.speculation_quantiles:
+            raise ValueError(
+                "policy_candidates and speculation_quantiles are mutually "
+                "exclusive: the portfolio subsumes the clone-trigger sweep "
+                "(use PolicyCandidate('clone', quantile=q) candidates)"
+            )
+        # measured job-arrival offsets (non-Poisson traffic): threaded into
+        # the load-aware sweep so candidates are scored under the arrival
+        # process the engine actually runs, not a Poisson stand-in
+        self.arrival_offsets = (
+            tuple(float(a) for a in np.asarray(arrival_offsets, float).ravel())
+            if arrival_offsets is not None and np.asarray(arrival_offsets).size
             else None
         )
         self._times: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
@@ -403,6 +427,8 @@ class StragglerTuner:
                 utilization=None,
                 job_load=self.job_load,
                 speculation_quantiles=self.speculation_quantiles,
+                policies=self.policy_candidates,
+                arrivals=self.arrival_offsets,
             )
         return objective
 

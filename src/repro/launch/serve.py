@@ -30,6 +30,7 @@ from repro.configs import get_config, reduced_config
 from repro.core import (
     ClusterSpec,
     Objective,
+    PolicyCandidate,
     ReplicationPlan,
     ShiftedExponential,
     SimulatedPlanner,
@@ -55,9 +56,28 @@ class ServeConfig:
     mu: float = 20.0
     # offered load for the queueing-aware (sojourn) sweep
     utilization: float = 0.7
-    # late-quantile clone triggers offered to the load-aware planner (the
-    # plan reports which — if any — beats plain replication)
+    # straggler-policy portfolio offered to the load-aware planner: clone /
+    # relaunch triggers at these late-quantiles plus hedged dispatch at
+    # these tail fractions (a plain-replication 'none' candidate is always
+    # in the race); the plan reports the winning candidate on Plan.policy
     speculation_quantiles: tuple[float, ...] = (0.8, 0.9, 0.95)
+    hedge_fractions: tuple[float, ...] = (0.1, 0.3)
+
+    def policy_candidates(self) -> tuple[PolicyCandidate, ...]:
+        return (
+            *(
+                PolicyCandidate("clone", quantile=q)
+                for q in self.speculation_quantiles
+            ),
+            *(
+                PolicyCandidate("relaunch", quantile=q)
+                for q in self.speculation_quantiles
+            ),
+            *(
+                PolicyCandidate("hedged", hedge_fraction=f)
+                for f in self.hedge_fractions
+            ),
+        )
 
 
 def run_serving(sc: ServeConfig):
@@ -100,17 +120,18 @@ def run_serving(sc: ServeConfig):
     lat = {p.n_batches: {"mean": p.mean, "p99": p.p99} for p in res.points}
     # ... and the queueing twin: per-request sojourn under Poisson arrivals
     # at the configured utilization, scored through the load-aware planner
-    # offering clone-attack triggers.  ONE sweep covers everything: the
-    # speculative sweep's no-speculation cells ARE the plain sojourn sweep,
-    # so each reported B carries its best policy (trigger or plain), and
-    # the winner's trigger says whether speculation beat static replication
+    # offering the full straggler-policy portfolio (clone / relaunch /
+    # hedged / plain).  ONE sweep covers everything: all candidates of one
+    # B share one CRN draw set, so each reported B carries its best policy
+    # and the winner on Plan.policy says which mitigation — if any — beat
+    # static replication
     spec = ClusterSpec(n_workers=sc.n_servers, dist=dist)
     plan = SimulatedPlanner(n_trials=20_000, seed=7).plan(
         spec,
         Objective(
             metric="p99",
             utilization=sc.utilization,
-            speculation_quantiles=sc.speculation_quantiles,
+            policies=sc.policy_candidates(),
         ),
     )
     sojourn = {
@@ -124,6 +145,7 @@ def run_serving(sc: ServeConfig):
         "latency_by_B": lat,
         "sojourn_by_B": sojourn,
         "sojourn_best_B": plan.n_batches,
+        "policy": plan.policy,
         "speculation_quantile": plan.speculation_quantile,
         "speculative_p99": plan.score,
     }
@@ -147,15 +169,18 @@ def main():
     for b, d in out["sojourn_by_B"].items():
         print(f"  B={b:3d}  mean={d['mean']*1e3:7.2f}ms  p99={d['p99']*1e3:7.2f}ms"
               f"  p999={d['p999']*1e3:7.2f}ms")
-    q = out["speculation_quantile"]
+    pol = out["policy"]
+    if pol is not None and pol.enabled:
+        what = {
+            "clone": f"clone at the q={pol.quantile:g} late-quantile",
+            "relaunch": f"relaunch at the q={pol.quantile:g} late-quantile",
+            "hedged": f"hedged dispatch of {pol.hedge_fraction:.0%} of jobs",
+        }[pol.kind]
+    else:
+        what = "plain replication (no mitigation candidate pays off)"
     print(
-        f"load-aware p99-optimal B* = {out['sojourn_best_B']}: "
-        + (
-            f"speculative re-dispatch at the q={q:g} late-quantile "
-            f"(predicted p99 {out['speculative_p99']*1e3:.2f}ms)"
-            if q is not None
-            else "plain replication (no clone trigger pays off)"
-        )
+        f"load-aware p99-optimal B* = {out['sojourn_best_B']}: {what} "
+        f"(predicted p99 {out['speculative_p99']*1e3:.2f}ms)"
     )
 
 

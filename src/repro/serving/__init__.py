@@ -15,26 +15,36 @@ from repro.serving.engine import (
 )
 from repro.serving.queueing import (
     BatchJob,
+    ClonePolicy,
     EventDrivenMaster,
+    HedgedDispatchPolicy,
+    NoOpPolicy,
     QueuePolicy,
+    RelaunchPolicy,
     Request,
     SpeculationPolicy,
+    StragglerPolicy,
     partition_requests,
 )
 
 __all__ = [
     "ArrivalProcess",
     "BatchJob",
+    "ClonePolicy",
     "DeterministicArrivals",
     "EventDrivenMaster",
+    "HedgedDispatchPolicy",
     "MMPPArrivals",
+    "NoOpPolicy",
     "PoissonArrivals",
     "QueuePolicy",
+    "RelaunchPolicy",
     "ReplicatedServingEngine",
     "Request",
     "RequestStats",
     "ServeEngineConfig",
     "SpeculationPolicy",
+    "StragglerPolicy",
     "TraceArrivals",
     "make_arrivals",
     "partition_requests",

@@ -44,6 +44,7 @@ from repro.core import (
     ClusterSpec,
     Metric,
     Objective,
+    PolicyCandidate,
     ReplicationPlan,
     ServiceDistribution,
     ShiftedExponential,
@@ -54,10 +55,13 @@ from repro.core import (
 from repro.serving.arrivals import ArrivalProcess, make_arrivals
 from repro.serving.queueing import (
     BatchJob,
+    ClonePolicy,
     EventDrivenMaster,
+    HedgedDispatchPolicy,
     QueuePolicy,
+    RelaunchPolicy,
     Request,
-    SpeculationPolicy,
+    StragglerPolicy,
     partition_requests,
 )
 
@@ -118,6 +122,18 @@ class ServeEngineConfig:
     # so plan_initial / tuner re-plans score candidate B with speculation on.
     speculation_quantile: Optional[float] = None
     clone_budget: int = 1
+    # which mitigation the live trigger drives: 'clone' copies a late batch
+    # onto an idle set (original keeps running), 'relaunch' cancels the late
+    # attempt and re-draws fresh on the same set, 'hedged' dispatches a
+    # hedge_fraction of jobs to two sets up front (no trigger involved),
+    # 'none' disables mitigation regardless of speculation_quantile
+    straggler_policy: str = "clone"
+    hedge_fraction: float = 1.0  # fraction of jobs hedged ('hedged' only)
+    # adaptive portfolio: PolicyCandidate tuple the tuner's load-aware
+    # re-plans score per candidate B; the winner lands on Plan.policy and
+    # the engine adopts it live (the online policy-switch loop).  Overrides
+    # the speculation_quantile-seeded trigger sweep in re-plan objectives.
+    policy_candidates: Optional[tuple[PolicyCandidate, ...]] = None
     # --- deadlines / SLOs ---------------------------------------------------
     # uniform RELATIVE deadline applied to every request (arrival + deadline;
     # None = no SLO).  Per-request deadlines go through serve(deadlines=...).
@@ -170,6 +186,15 @@ class ReplicatedServingEngine:
         self.cluster_spec = ClusterSpec(
             n_workers=sc.n_server_groups, dist=self.dist
         )
+        # the LIVE straggler policy: starts at the config's, and adopts the
+        # candidate chosen by each load-aware re-plan (which may be None —
+        # the planner found plain replication better at the new B).  Set
+        # before the objective/tuner: both are seeded from it.
+        self.policy: Optional[PolicyCandidate] = self._initial_policy()
+        # job-arrival offsets for non-Poisson traffic, filled by
+        # _build_objective and threaded into tuner re-plans (bugfix: sweeps
+        # used to assume Poisson arrivals whatever the engine actually ran)
+        self._job_arrival_offsets: Optional[tuple[float, ...]] = None
         self.objective = self._build_objective()
         # online re-plans re-score the whole sweep (sojourn-simulated when
         # the objective is load-aware), so size it like the tuner's default
@@ -201,21 +226,17 @@ class ReplicatedServingEngine:
             ),
             planner=self.planner,
             job_load=self._work(sc.batch_size),
-            # load-aware re-plans score candidate B with the SAME clone
-            # trigger the master runs (else a fleet stable only because it
-            # speculates looks saturated and re-plans to no-replication)
-            speculation_quantiles=(
-                (sc.speculation_quantile,)
-                if sc.speculation_quantile is not None
-                else None
-            ),
+            # load-aware re-plans score candidate B with the SAME straggler
+            # mitigation the master runs (else a fleet stable only because
+            # it mitigates looks saturated and re-plans to no-replication):
+            # an explicit portfolio when configured, a single-candidate
+            # portfolio for relaunch/hedged, the legacy clone-trigger sweep
+            # otherwise
+            **self._tuner_decision_kwargs(),
+            arrival_offsets=self._job_arrival_offsets,
         )
         self.clock = 0.0
         self._next_id = 0
-        # the LIVE clone trigger: starts at the config's, and adopts the
-        # trigger chosen by each load-aware re-plan (which may be None —
-        # the planner found plain replication better at the new B)
-        self.speculation_quantile = sc.speculation_quantile
         self.last_master: Optional[EventDrivenMaster] = None
         self._tokens: dict[int, np.ndarray] = {}
         self._formations: deque[float] = deque(maxlen=32)
@@ -237,10 +258,108 @@ class ReplicatedServingEngine:
             self.cfg = None
             self.params = None
 
+    # -- straggler policy (live state) ---------------------------------------
+    def _initial_policy(self) -> Optional[PolicyCandidate]:
+        """The config's straggler mitigation as a PolicyCandidate (None =
+        mitigation off)."""
+        sc = self.sc
+        if sc.straggler_policy not in ("none", "clone", "relaunch", "hedged"):
+            raise ValueError(
+                "ServeEngineConfig.straggler_policy must be 'none', "
+                f"'clone', 'relaunch' or 'hedged', got {sc.straggler_policy!r}"
+            )
+        if sc.straggler_policy == "none":
+            return None
+        if sc.straggler_policy == "hedged":
+            pol = PolicyCandidate("hedged", hedge_fraction=sc.hedge_fraction)
+            return pol if pol.enabled else None
+        if sc.speculation_quantile is None:
+            return None  # trigger-driven kinds need a trigger
+        return PolicyCandidate(
+            sc.straggler_policy, quantile=sc.speculation_quantile
+        )
+
+    @property
+    def speculation_quantile(self) -> Optional[float]:
+        """The live CLONE trigger (legacy mirror — None whenever the live
+        policy is anything other than a trigger-driven clone, same rule as
+        ``Plan.speculation_quantile``)."""
+        pol = self.policy
+        if pol is not None and pol.kind == "clone":
+            return pol.quantile
+        return None
+
+    @speculation_quantile.setter
+    def speculation_quantile(self, q: Optional[float]) -> None:
+        # legacy shim: assigning a trigger installs/uninstalls a clone policy
+        self.policy = (
+            PolicyCandidate("clone", quantile=float(q))
+            if q is not None
+            else None
+        )
+
+    def _trigger_quantile(self) -> Optional[float]:
+        """The live policy's late trigger (clone OR relaunch; None = off)."""
+        pol = self.policy
+        if pol is not None and pol.kind in ("clone", "relaunch"):
+            return pol.quantile
+        return None
+
+    def _adopt_policy(self, plan) -> None:
+        """Run the mitigation the winning sweep score assumed — including
+        'no mitigation at this B' (a disabled/None candidate)."""
+        pol = plan.policy
+        self.policy = pol if pol is not None and pol.enabled else None
+
+    def _tuner_decision_kwargs(self) -> dict:
+        """Straggler-mitigation axis of tuner re-plan objectives (mirrors
+        ``_build_objective``'s choice)."""
+        sc = self.sc
+        if sc.policy_candidates:
+            return {"policy_candidates": tuple(sc.policy_candidates)}
+        pol = self.policy
+        if pol is not None and pol.kind in ("relaunch", "hedged"):
+            return {"policy_candidates": (pol,)}
+        return {
+            "speculation_quantiles": (
+                (pol.quantile,)
+                if pol is not None and pol.kind == "clone"
+                else None
+            )
+        }
+
     # -- objective / arrivals ------------------------------------------------
     def _work(self, n_reqs: int) -> float:
         """Units of data one batch of ``n_reqs`` requests carries."""
         return n_reqs * (self.sc.prompt_len + self.sc.gen_tokens) / 100.0
+
+    def _job_offsets_for(self, request_rate: float) -> Optional[tuple[float, ...]]:
+        """Batch-JOB arrival offsets implied by a non-Poisson config.
+
+        The load-aware sweeps default to Poisson job arrivals; when the
+        engine runs MMPP/bursty/deterministic/trace traffic that default
+        silently mis-scores every candidate (burstiness inflates queueing
+        far beyond the Poisson prediction).  Sampling the configured
+        process and keeping every ``batch_size``-th arrival (the instant a
+        full batch forms) gives the sweep the job stream the master will
+        actually see.  None for Poisson (the sweep's native default).
+        """
+        sc = self.sc
+        if sc.arrival_kind == "poisson":
+            return None
+        if sc.arrival_kind == "trace":
+            if sc.arrival_offsets is None:
+                return None
+            times = np.asarray(sc.arrival_offsets, dtype=float)
+        else:
+            proc = make_arrivals(sc.arrival_kind, rate=request_rate)
+            # dedicated stream: must not perturb serve()'s arrival draws
+            rng = np.random.default_rng((sc.seed, 0xA221))
+            times = proc.sample(rng, 2_048 * sc.batch_size)
+        jobs = times[sc.batch_size - 1 :: sc.batch_size]
+        if jobs.size < 2:
+            return None
+        return tuple(float(t) for t in jobs)
 
     def _build_objective(self) -> Objective:
         sc = self.sc
@@ -250,7 +369,21 @@ class ReplicatedServingEngine:
                 "both (same rule as Objective)"
             )
         load_aware = sc.arrival_rate is not None or sc.utilization is not None
-        return Objective(
+        pol = self.policy
+        policies: Optional[tuple[PolicyCandidate, ...]] = None
+        spec_qs: Optional[tuple[float, ...]] = None
+        if load_aware:
+            # the planner scores candidate B under the SAME mitigation the
+            # master runs: an explicit portfolio when configured, a single-
+            # candidate portfolio for relaunch/hedged, the legacy clone-
+            # trigger sweep otherwise
+            if sc.policy_candidates:
+                policies = tuple(sc.policy_candidates)
+            elif pol is not None and pol.kind in ("relaunch", "hedged"):
+                policies = (pol,)
+            elif pol is not None and pol.kind == "clone":
+                spec_qs = (pol.quantile,)
+        objective = Objective(
             metric=sc.metric,
             arrival_rate=(
                 sc.arrival_rate / sc.batch_size
@@ -259,14 +392,20 @@ class ReplicatedServingEngine:
             ),
             utilization=sc.utilization,
             job_load=self._work(sc.batch_size),
-            # with speculation on and a load-aware objective, the planner
-            # scores candidate B with the SAME clone trigger the master runs
-            speculation_quantiles=(
-                (sc.speculation_quantile,)
-                if sc.speculation_quantile is not None and load_aware
-                else None
-            ),
+            speculation_quantiles=spec_qs,
+            policies=policies,
         )
+        if load_aware and sc.arrival_kind != "poisson":
+            rate = (
+                sc.arrival_rate
+                if sc.arrival_rate is not None
+                else objective.offered_rate(self.cluster_spec) * sc.batch_size
+            )
+            offs = self._job_offsets_for(rate)
+            if offs is not None:
+                self._job_arrival_offsets = offs
+                objective = dataclasses.replace(objective, arrivals=offs)
+        return objective
 
     def _request_rate(self) -> float:
         """Offered REQUEST arrival rate implied by the config."""
@@ -346,28 +485,38 @@ class ReplicatedServingEngine:
         service draws; for the (shifted-)exponential straggler model that
         min keeps the shift and multiplies the rate by r, so its q-quantile
         is ``shift + -ln(1-q) / (r * mu)``.  A response later than this is
-        late with model probability 1 - q — the clone trigger.  Reads the
-        LIVE ``speculation_quantile``/plan, so a mid-run re-plan that
-        changed B or disabled speculation (inf threshold) takes effect on
-        the next dispatch.
+        late with model probability 1 - q — the clone/relaunch trigger.
+        Reads the LIVE policy/plan, so a mid-run re-plan that changed B or
+        disabled mitigation (inf threshold) takes effect on the next
+        dispatch.
         """
-        q = self.speculation_quantile
+        q = self._trigger_quantile()
         if q is None:
-            return math.inf  # re-plan disabled speculation mid-run
+            return math.inf  # re-plan disabled mitigation mid-run
         scaled = self.dist.scaled(self._work(job.size))
         r = max(self.plan.replication, 1)
         shift = float(getattr(scaled, "delta", 0.0))
         return shift + (-math.log1p(-q)) / (scaled.mu * r)
 
-    def _speculation_policy(self) -> Optional[SpeculationPolicy]:
-        """The master's clone policy implied by the live trigger (None = off)."""
-        if self.speculation_quantile is None:
+    def _speculation_policy(self) -> Optional[StragglerPolicy]:
+        """The master's straggler policy implied by the live candidate
+        (None = mitigation off)."""
+        pol = self.policy
+        if pol is None or not pol.enabled:
             return None
-        return SpeculationPolicy(
-            late_quantile=self.speculation_quantile,
-            max_clones=self.sc.clone_budget,
-            threshold=self._speculation_threshold,
-        )
+        if pol.kind == "clone":
+            return ClonePolicy(
+                late_quantile=pol.quantile,
+                max_clones=self.sc.clone_budget,
+                threshold=self._speculation_threshold,
+            )
+        if pol.kind == "relaunch":
+            return RelaunchPolicy(
+                late_quantile=pol.quantile,
+                max_relaunches=self.sc.clone_budget,
+                threshold=self._speculation_threshold,
+            )
+        return HedgedDispatchPolicy(k=2, hedge_fraction=pol.hedge_fraction)
 
     def _on_job_complete(self, job: BatchJob) -> Optional[dict]:
         """Telemetry + model work + (maybe) a drain-then-swap re-plan."""
@@ -378,8 +527,21 @@ class ReplicatedServingEngine:
         # as censored lower bounds would drag the fitted mu down by the
         # censoring fraction)
         used = job.used_mask()
-        observed = np.minimum(job.service_times, job.service)
+        # a relaunched job's live draw only ran since its LAST (re)dispatch;
+        # censoring at job.service would credit the discarded attempts' wall
+        # time to the live replicas (attempt_service == service when the job
+        # never relaunched)
+        observed = np.minimum(job.service_times, job.attempt_service)
         self.tuner.observe(observed / work, censored=~used)
+        # relaunch-discarded attempts are telemetry too: every replica of a
+        # cancelled attempt is censored at its cancellation instant
+        starts = [job.dispatched, *job.relaunched_at]
+        for k, attempt in enumerate(job.discarded_service_times):
+            horizon = starts[k + 1] - starts[k]
+            self.tuner.observe(
+                np.minimum(attempt, horizon) / work,
+                censored=np.ones(len(attempt), dtype=bool),
+            )
         # speculative clones are telemetry too: each clone's replicas are
         # censored at ITS cancellation time (completion - clone dispatch),
         # and only the winning clone's fastest replica is uncensored
@@ -417,25 +579,26 @@ class ReplicatedServingEngine:
             rp = self.tuner.maybe_replan()
             if rp is not None:
                 self.plan = self.tuner.apply(rp)
-                # adopt the trigger the winning score assumed: when the
-                # re-plan swept (B, trigger) pairs, run what it scored —
-                # including "don't speculate at this B" (None)
-                if (
+                # adopt the mitigation the winning score assumed: when the
+                # re-plan swept (B, policy) or (B, trigger) cells, run what
+                # it scored — including "don't mitigate at this B" (None)
+                if rp.plan is not None and rp.plan.objective.policies:
+                    self._adopt_policy(rp.plan)
+                elif (
                     rp.plan is not None
                     and rp.plan.objective.speculation_quantiles
                 ):
                     self.speculation_quantile = rp.plan.speculation_quantile
                 return {"n_groups": self.plan.n_batches}
             # no B move, but the last evaluated sweep may still have found
-            # a better trigger AT the current B — adopting it needs no
-            # drain/reconfig, so it is free (cooldown paces evaluations)
+            # a better policy/trigger AT the current B — adopting it needs
+            # no drain/reconfig, so it is free (cooldown paces evaluations)
             lp = self.tuner.last_plan
-            if (
-                lp is not None
-                and lp.objective.speculation_quantiles
-                and lp.n_batches == self.plan.n_batches
-            ):
-                self.speculation_quantile = lp.speculation_quantile
+            if lp is not None and lp.n_batches == self.plan.n_batches:
+                if lp.objective.policies:
+                    self._adopt_policy(lp)
+                elif lp.objective.speculation_quantiles:
+                    self.speculation_quantile = lp.speculation_quantile
         return None
 
     def serve(
@@ -564,6 +727,11 @@ class ReplicatedServingEngine:
             "speculations": (
                 self.last_master.speculations if self.last_master else 0
             ),
+            "relaunches": (
+                self.last_master.relaunches if self.last_master else 0
+            ),
+            "hedges": self.last_master.hedges if self.last_master else 0,
+            "policy": self.policy.kind if self.policy is not None else "none",
             "stats": stats,
         }
 

@@ -26,14 +26,30 @@ groups.  The master's event loop:
   earlier-formed pending ones); its ``r`` replicas all start, the FASTEST
   one's response completes the batch and the rest are cancelled (the paper's
   ``min``-over-replicas rule), so the whole set frees at the winner's time.
-* **Speculative re-dispatch** — with a :class:`SpeculationPolicy`, a batch
-  whose first response is LATE (no response by the policy's late-quantile
-  threshold after dispatch) is cloned onto an idle replica-set, Aktaş et
-  al. clone-attack style: the clone's ``r`` replicas race the originals,
-  whichever responds first completes the batch, and every other replica is
-  cancelled.  Clones only ever take sets that are idle at the trigger
-  instant (a queued batch is never displaced), and each job spends at most
-  ``max_clones`` from its clone budget.
+* **Straggler mitigation** — a :class:`StragglerPolicy` decides what to do
+  about late responses, all variants sharing the same event clock,
+  first-completion-wins cancellation, and censored-telemetry accounting:
+
+  - :class:`ClonePolicy` (speculative re-dispatch, the PR-4 behavior and
+    the alias :class:`SpeculationPolicy`): a batch whose first response is
+    LATE (no response by the policy's late-quantile threshold after
+    dispatch) is cloned onto an idle replica-set, Aktaş et al.
+    clone-attack style — the clone's ``r`` replicas race the originals,
+    whichever responds first completes the batch, and every other replica
+    is cancelled.  Clones only ever take sets that are idle at the trigger
+    instant (a queued batch is never displaced), and each job spends at
+    most ``max_clones`` from its clone budget.
+  - :class:`RelaunchPolicy`: a late batch's in-flight replica set is
+    CANCELLED and the batch re-dispatches fresh on the same set (no extra
+    capacity consumed; Behrouzi-Far/Soljanin 2020's relaunch arm, which
+    pays off only when service has memory — under Exp it is a
+    distributional no-op).  Discarded attempts are kept, censored at the
+    relaunch instant, for telemetry.
+  - :class:`HedgedDispatchPolicy`: a deterministic-stride fraction of jobs
+    dispatches to ``k`` replica-sets UP FRONT (primary + hedges racing
+    from t=0), spending idle capacity at dispatch time instead of waiting
+    for a late signal.
+  - :class:`NoOpPolicy`: never intervene (explicit baseline).
 * **Sojourn accounting** — every request records arrival, dispatch, and
   completion; sojourn = queue wait + service, the metric the load-aware
   planner objectives act on.  Requests carrying a finite ``deadline`` also
@@ -59,7 +75,12 @@ import numpy as np
 
 __all__ = [
     "QueuePolicy",
+    "StragglerPolicy",
+    "NoOpPolicy",
+    "ClonePolicy",
     "SpeculationPolicy",
+    "RelaunchPolicy",
+    "HedgedDispatchPolicy",
     "Request",
     "BatchJob",
     "EventDrivenMaster",
@@ -134,7 +155,39 @@ class QueuePolicy:
 
 
 @dataclasses.dataclass(frozen=True)
-class SpeculationPolicy:
+class StragglerPolicy:
+    """Base class of the master's straggler-mitigation policies.
+
+    One policy instance is wired into :class:`EventDrivenMaster` (the
+    ``speculation=`` / ``straggler_policy=`` knob); concrete subclasses are
+    :class:`ClonePolicy` (and its legacy alias :class:`SpeculationPolicy`),
+    :class:`RelaunchPolicy`, :class:`HedgedDispatchPolicy`, and
+    :class:`NoOpPolicy`.  All share the master's event clock,
+    first-completion-wins cancellation, and censored-telemetry accounting.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class NoOpPolicy(StragglerPolicy):
+    """Never intervene — the explicit do-nothing baseline (equivalent to
+    running the master with no policy at all, but nameable in configs and
+    planner sweeps)."""
+
+
+def _validate_trigger_fields(pol) -> None:
+    """Shared validation of the late-trigger knobs (clone + relaunch)."""
+    if not 0.0 < pol.late_quantile < 1.0:
+        raise ValueError(
+            f"late_quantile must be in (0, 1), got {pol.late_quantile}"
+        )
+    if pol.min_observations < 1:
+        raise ValueError(
+            f"min_observations must be >= 1, got {pol.min_observations}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClonePolicy(StragglerPolicy):
     """When (and how much) to clone a late batch (speculative re-dispatch).
 
     A batch dispatched at time ``t`` whose first response has not arrived by
@@ -154,8 +207,8 @@ class SpeculationPolicy:
     are launched ONLY onto sets idle at the trigger instant — speculation
     spends spare capacity, never displaces queued work.
 
-    >>> SpeculationPolicy(late_quantile=0.9, max_clones=1)
-    SpeculationPolicy(late_quantile=0.9, max_clones=1, min_observations=8, threshold=None)
+    >>> ClonePolicy(late_quantile=0.9, max_clones=1)
+    ClonePolicy(late_quantile=0.9, max_clones=1, min_observations=8, threshold=None)
     """
 
     late_quantile: float = 0.9  # trigger when the response is this late
@@ -164,17 +217,77 @@ class SpeculationPolicy:
     threshold: Optional[Callable[["BatchJob"], float]] = None
 
     def __post_init__(self):
-        if not 0.0 < self.late_quantile < 1.0:
-            raise ValueError(
-                f"late_quantile must be in (0, 1), got {self.late_quantile}"
-            )
+        _validate_trigger_fields(self)
         if self.max_clones < 0:
             raise ValueError(
                 f"max_clones must be >= 0, got {self.max_clones}"
             )
-        if self.min_observations < 1:
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationPolicy(ClonePolicy):
+    """Pre-portfolio name of :class:`ClonePolicy`, kept as an alias so
+    existing configs and pickles keep working (see docs/migration.md)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RelaunchPolicy(StragglerPolicy):
+    """Cancel a late batch's in-flight attempt and re-dispatch it FRESH.
+
+    Same late-trigger machinery as :class:`ClonePolicy` (caller-supplied
+    ``threshold`` model, else the empirical ``late_quantile`` of observed
+    batch services), but instead of spending an extra replica-set the
+    master CANCELS the running replicas and draws a brand-new attempt on
+    the same set.  No extra capacity is consumed, so relaunch helps exactly
+    when service has memory (the elapsed wait predicts a long remainder) —
+    under exponential service it is a distributional no-op, the regime
+    boundary Behrouzi-Far/Soljanin 2020 pins.  ``max_relaunches`` bounds
+    attempts per job; discarded attempts are kept on the job, censored at
+    the relaunch instant, for telemetry.
+
+    >>> RelaunchPolicy(late_quantile=0.9)
+    RelaunchPolicy(late_quantile=0.9, max_relaunches=1, min_observations=8, threshold=None)
+    """
+
+    late_quantile: float = 0.9  # trigger when the response is this late
+    max_relaunches: int = 1  # per-job relaunch budget
+    min_observations: int = 8  # window size gating the empirical fallback
+    threshold: Optional[Callable[["BatchJob"], float]] = None
+
+    def __post_init__(self):
+        _validate_trigger_fields(self)
+        if self.max_relaunches < 0:
             raise ValueError(
-                f"min_observations must be >= 1, got {self.min_observations}"
+                f"max_relaunches must be >= 0, got {self.max_relaunches}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgedDispatchPolicy(StragglerPolicy):
+    """Dispatch a job to ``k`` replica-sets UP FRONT (hedged requests).
+
+    A deterministic-stride ``hedge_fraction`` of dispatched jobs grabs up
+    to ``k - 1`` ADDITIONAL idle replica-sets at dispatch time (job ``n``
+    is hedged iff ``floor((n+1)f) > floor(nf)`` — reproducible, no RNG);
+    all sets race from t=0, first response wins, the rest are cancelled.
+    Hedges only take sets idle at the dispatch instant, so queued work is
+    never displaced — hedging converts spare capacity into tail latency up
+    front instead of waiting for a late signal, which wins under
+    heavy-tailed service and loses under light load-sensitive regimes.
+
+    >>> HedgedDispatchPolicy(k=2, hedge_fraction=0.5)
+    HedgedDispatchPolicy(k=2, hedge_fraction=0.5)
+    """
+
+    k: int = 2  # replica-sets per hedged job (primary + k-1 hedges)
+    hedge_fraction: float = 1.0  # fraction of jobs hedged (stride-selected)
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if not 0.0 <= self.hedge_fraction <= 1.0:
+            raise ValueError(
+                f"hedge_fraction must be in [0, 1], got {self.hedge_fraction}"
             )
 
 
@@ -230,11 +343,15 @@ class BatchJob:
     """A formed batch of requests and its dispatch/telemetry record.
 
     One job occupies one replica-set (``group``) from ``dispatched`` until
-    ``completed``; speculative clones occupy additional sets, recorded in
-    the parallel lists ``clone_groups`` / ``clone_dispatched`` /
-    ``clone_service_times``.  ``winner`` is the fastest ORIGINAL replica;
-    ``winner_clone`` is -1 when an original won and otherwise the index of
-    the winning clone (whose fastest replica supplied the result).
+    ``completed``; speculative clones AND up-front hedges occupy additional
+    sets, recorded in the parallel lists ``clone_groups`` /
+    ``clone_dispatched`` / ``clone_service_times``.  ``winner`` is the
+    fastest ORIGINAL replica; ``winner_clone`` is -1 when an original won
+    and otherwise the index of the winning clone/hedge (whose fastest
+    replica supplied the result).  Under :class:`RelaunchPolicy`, cancelled
+    attempts move to ``discarded_service_times`` (their relaunch instants
+    in ``relaunched_at``) and ``service_times`` always holds the CURRENT
+    attempt's draws.
     """
 
     batch_id: int
@@ -252,6 +369,11 @@ class BatchJob:
         default_factory=list
     )
     winner_clone: int = -1  # -1: an original replica won; else clone index
+    # relaunch record (parallel lists, one entry per cancelled attempt)
+    relaunched_at: list[float] = dataclasses.field(default_factory=list)
+    discarded_service_times: list[np.ndarray] = dataclasses.field(
+        default_factory=list
+    )
     departed: bool = False  # internal: guards stale depart events
 
     @property
@@ -275,8 +397,26 @@ class BatchJob:
 
     @property
     def n_clones(self) -> int:
-        """How many speculative clones this job launched."""
+        """How many speculative clones / hedges this job launched."""
         return len(self.clone_groups)
+
+    @property
+    def n_relaunches(self) -> int:
+        """How many times this job's attempt was cancelled and re-drawn."""
+        return len(self.relaunched_at)
+
+    @property
+    def attempt_dispatched(self) -> float:
+        """Dispatch time of the CURRENT attempt on the original set (equals
+        ``dispatched`` unless the job relaunched)."""
+        return self.relaunched_at[-1] if self.relaunched_at else self.dispatched
+
+    @property
+    def attempt_service(self) -> float:
+        """Current-attempt dispatch-to-completion time — the censoring bound
+        for the live ``service_times`` draws (equals ``service`` unless the
+        job relaunched)."""
+        return self.completed - self.attempt_dispatched
 
     @property
     def groups(self) -> list[int]:
@@ -317,14 +457,22 @@ class EventDrivenMaster:
         policy: Optional[QueuePolicy] = None,
         clock: float = 0.0,
         on_job_complete: Optional[JobCallback] = None,
-        speculation: Optional[SpeculationPolicy] = None,
+        speculation: Optional[StragglerPolicy] = None,
         on_drop: Optional[Callable[[Request], None]] = None,
+        straggler_policy: Optional[StragglerPolicy] = None,
     ):
         if n_groups < 1:
             raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+        if speculation is not None and straggler_policy is not None:
+            raise ValueError(
+                "pass either speculation= or its alias straggler_policy=, "
+                "not both"
+            )
         self.n_groups = n_groups
         self.policy = policy or QueuePolicy()
-        self.speculation = speculation
+        self.speculation = (
+            speculation if speculation is not None else straggler_policy
+        )
         self._sampler = service_sampler
         self.clock = float(clock)
         self.on_job_complete = on_job_complete
@@ -349,6 +497,9 @@ class EventDrivenMaster:
         self.dropped_requests: list[Request] = []
         self.reconfigurations = 0
         self.speculations = 0  # clones actually launched
+        self.relaunches = 0  # late attempts cancelled + re-drawn
+        self.hedges = 0  # extra sets taken at dispatch time
+        self._hedge_count = 0  # dispatch counter driving the hedge stride
         # observed batch service times: the empirical late-threshold fallback
         self._service_window: deque[float] = deque(maxlen=64)
 
@@ -508,13 +659,32 @@ class EventDrivenMaster:
         return None
 
     def _arm_speculation(self, job: BatchJob) -> None:
-        """Schedule the late-response check for a just-(re)dispatched job."""
+        """Schedule the late-response check for a just-(re)dispatched job.
+
+        Only the trigger-driven policies (clone, relaunch) arm; hedging
+        acts at dispatch time and NoOp never acts.
+        """
         pol = self.speculation
-        if pol is None or pol.max_clones <= job.n_clones:
+        if isinstance(pol, ClonePolicy):
+            if pol.max_clones <= job.n_clones:
+                return
+        elif isinstance(pol, RelaunchPolicy):
+            if pol.max_relaunches <= job.n_relaunches:
+                return
+        else:
             return
         threshold = self._spec_threshold(job)
         if threshold is not None and math.isfinite(threshold) and threshold > 0:
             self._push(self.clock + threshold, "spec", job)
+
+    def _hedge_selected(self) -> bool:
+        """Deterministic stride over dispatches: job n is hedged iff
+        floor((n+1)f) > floor(nf), hitting exactly a ``hedge_fraction`` of
+        jobs with no RNG (reproducible, CRN-friendly)."""
+        f = self.speculation.hedge_fraction
+        n = self._hedge_count
+        self._hedge_count += 1
+        return math.floor((n + 1) * f) > math.floor(n * f)
 
     def _try_dispatch(self) -> None:
         if self._reconfig is not None:
@@ -535,16 +705,39 @@ class EventDrivenMaster:
             # the remaining replicas are cancelled
             job.completed = self.clock + float(job.service_times[job.winner])
             self._in_flight[group] = job
+            if (
+                isinstance(self.speculation, HedgedDispatchPolicy)
+                and self._hedge_selected()
+            ):
+                # hedged dispatch: grab up to k-1 ADDITIONAL idle sets now,
+                # racing from t=0 (idle-only, queued work never displaced)
+                for _ in range(self.speculation.k - 1):
+                    if not self._idle:
+                        break
+                    g2 = heapq.heappop(self._idle)
+                    times = np.asarray(self._sampler(job, g2), dtype=float)
+                    job.clone_groups.append(g2)
+                    job.clone_dispatched.append(self.clock)
+                    job.clone_service_times.append(times)
+                    self._in_flight[g2] = job
+                    self.hedges += 1
+                    done = self.clock + float(times.min())
+                    if done < job.completed:
+                        job.completed = done
+                        job.winner_clone = job.n_clones - 1
             self._push(job.completed, "depart", job)
             self._arm_speculation(job)
 
     def _on_spec(self, job: BatchJob) -> None:
         """Late-response check: the job's first response has not arrived by
-        the speculation threshold -> clone it onto an idle set (if any)."""
+        the policy threshold -> clone onto an idle set, or relaunch."""
         if job.departed or job.completed <= self.clock:
-            return  # the original responded first: speculation is a no-op
+            return  # the original responded first: the trigger is a no-op
         if self._reconfig is not None:
-            return  # draining: never grow the in-flight footprint
+            return  # draining: never grow/redraw the in-flight footprint
+        if isinstance(self.speculation, RelaunchPolicy):
+            self._relaunch(job)
+            return
         if job.n_clones >= self.speculation.max_clones:
             return  # clone budget exhausted
         if self._idle:
@@ -565,9 +758,31 @@ class EventDrivenMaster:
         # re-arm while budget remains (also covers "no idle set right now")
         self._arm_speculation(job)
 
+    def _relaunch(self, job: BatchJob) -> None:
+        """Cancel the job's in-flight attempt and re-dispatch it fresh on
+        the SAME replica-set (no extra capacity; the cancelled attempt is
+        kept, censored at the relaunch instant, for telemetry)."""
+        if job.n_relaunches >= self.speculation.max_relaunches:
+            return  # relaunch budget exhausted
+        job.discarded_service_times.append(job.service_times)
+        job.relaunched_at.append(self.clock)
+        job.service_times = np.asarray(
+            self._sampler(job, job.group), dtype=float
+        )
+        job.winner = int(np.argmin(job.service_times))
+        # the fresh attempt may finish LATER than the cancelled one would
+        # have; the old depart event is skipped by the completed > clock
+        # stale guard in _on_depart
+        job.completed = self.clock + float(job.service_times[job.winner])
+        self.relaunches += 1
+        self._push(job.completed, "depart", job)
+        self._arm_speculation(job)
+
     def _on_depart(self, job: BatchJob) -> None:
-        if job.departed:
-            return  # stale event: a winning clone already departed this job
+        if job.departed or job.completed > self.clock:
+            # stale event: a winning clone already departed this job, or a
+            # relaunch moved its completion past this event's time
+            return
         job.departed = True
         for group in job.groups:
             del self._in_flight[group]

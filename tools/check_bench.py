@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Benchmark regression guard: pin the tracked benches against committed
+snapshots and fail the nightly build on a >20% latency regression.
+
+For each guarded module (``benchmarks/bench_<name>.py``) this script
+
+1. imports the module and calls its ``run()`` (the same ``(name,
+   us_per_call, derived)`` row contract as ``benchmarks/run.py`` — so every
+   correctness assertion inside the bench still gates the build);
+2. always leaves an inspectable artifact of the fresh run —
+   ``benchmarks/BENCH_<name>.json`` under ``--update`` (the committed
+   baseline), ``BENCH_<name>.latest.json`` otherwise (gitignored);
+3. unless ``--update`` is given, compares each row's ``us_per_call``
+   against the committed baseline: a row more than ``--tolerance`` (default
+   20%) slower than its baseline FAILS, a row missing from the current run
+   FAILS (a silently dropped headline is a regression too), and a row new
+   to the current run only warns (commit an updated baseline to start
+   tracking it).
+
+Timings are wall-clock and noisy; the 20% band is wide on purpose — the
+guard exists to catch algorithmic blowups (a sweep going quadratic, a CRN
+matrix being redrawn per cell), not scheduler jitter.
+
+Run:    PYTHONPATH=src python tools/check_bench.py
+Update: PYTHONPATH=src python tools/check_bench.py --update   (then commit)
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH_DIR = REPO / "benchmarks"
+
+# modules guarded with committed baselines; the rest of benchmarks/run.py
+# still runs nightly but is not regression-pinned
+GUARDED = ("planner", "serving_latency")
+
+
+def run_module(name: str) -> list[dict]:
+    mod = importlib.import_module(f"benchmarks.bench_{name}")
+    return [
+        {"name": row, "us_per_call": us, "derived": derived}
+        for row, us, derived in mod.run()
+    ]
+
+
+def compare(name: str, baseline: list[dict], fresh: list[dict],
+            tolerance: float) -> list[str]:
+    errors = []
+    base = {r["name"]: r["us_per_call"] for r in baseline}
+    seen = set()
+    for row in fresh:
+        seen.add(row["name"])
+        ref = base.get(row["name"])
+        if ref is None:
+            print(f"NOTE {name}: new row {row['name']} (not in baseline; "
+                  f"run --update to pin it)")
+            continue
+        if row["us_per_call"] > ref * (1.0 + tolerance):
+            errors.append(
+                f"{name}/{row['name']}: {row['us_per_call']:.1f}us vs "
+                f"baseline {ref:.1f}us "
+                f"(+{row['us_per_call'] / ref - 1.0:.0%} > "
+                f"{tolerance:.0%} tolerance)"
+            )
+    for missing in sorted(set(base) - seen):
+        errors.append(f"{name}/{missing}: row present in baseline but "
+                      f"absent from the current run")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines instead of comparing")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional slowdown per row (default 0.20)")
+    args = ap.parse_args()
+    sys.path.insert(0, str(REPO))
+
+    errors: list[str] = []
+    for name in GUARDED:
+        snap = BENCH_DIR / f"BENCH_{name}.json"
+        try:
+            fresh = run_module(name)
+        except Exception as exc:  # noqa: BLE001 - bench assertions gate too
+            errors.append(f"{name}: run() raised {type(exc).__name__}: {exc}")
+            continue
+        if not args.update and snap.exists():
+            baseline = json.loads(snap.read_text())["rows"]
+            errors.extend(compare(name, baseline, fresh, args.tolerance))
+        elif not args.update:
+            errors.append(f"{name}: no committed baseline at {snap.name} "
+                          f"(run with --update and commit it)")
+        out = snap if args.update else snap.with_suffix(".latest.json")
+        out.write_text(json.dumps({"module": f"bench_{name}",
+                                   "rows": fresh}, indent=2) + "\n")
+        print(f"wrote {out.relative_to(REPO)} ({len(fresh)} rows)")
+
+    for err in errors:
+        print(f"FAIL {err}")
+    if errors:
+        return 1
+    print(f"bench guard OK: {len(GUARDED)} modules within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
