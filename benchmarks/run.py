@@ -7,6 +7,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_cluster,
         bench_collectives,
         bench_fig2_spectrum,
         bench_gradient_coding,
@@ -32,6 +33,7 @@ def main() -> None:
         bench_serving_latency,
         bench_gradient_coding,
         bench_roofline,
+        bench_cluster,
     ]
     print("name,us_per_call,derived")
     failures = 0

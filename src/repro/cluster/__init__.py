@@ -1,0 +1,49 @@
+"""Multi-process cluster runtime: the serving master on real sockets.
+
+The simulated master (:mod:`repro.serving.queueing`) and this package share
+one policy layer; here the workers are OS processes, the clock is the wall
+clock, and the telemetry that feeds :class:`~repro.core.tuner.StragglerTuner`
+is measured, censored at real cancellation instants.  See
+``docs/architecture.md`` ("Cluster runtime") for the protocol and the
+failure model, and ``python -m repro.launch.cluster --help`` for the CLI.
+"""
+
+from repro.cluster.chaos import ChaosEvent, ChaosInjector, drive
+from repro.cluster.coordinator import (
+    ClusterConfig,
+    ClusterCoordinator,
+    ClusterJob,
+    WorkerHandle,
+)
+from repro.cluster.harness import LocalCluster, reap_orphans
+from repro.cluster.payloads import (
+    make_deterministic_spec,
+    make_matmul_spec,
+    make_sleep_spec,
+    payload_duration,
+    run_payload,
+)
+# NOTE: repro.cluster.worker is deliberately NOT imported here — worker
+# processes start via ``python -m repro.cluster.worker`` and importing the
+# module from the package would make runpy execute it twice.
+from repro.cluster.protocol import FrameDecoder, encode_message, send_message
+
+__all__ = [
+    "ChaosEvent",
+    "ChaosInjector",
+    "drive",
+    "ClusterConfig",
+    "ClusterCoordinator",
+    "ClusterJob",
+    "WorkerHandle",
+    "LocalCluster",
+    "reap_orphans",
+    "make_deterministic_spec",
+    "make_matmul_spec",
+    "make_sleep_spec",
+    "payload_duration",
+    "run_payload",
+    "FrameDecoder",
+    "encode_message",
+    "send_message",
+]

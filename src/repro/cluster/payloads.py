@@ -1,0 +1,154 @@
+"""Worker-side batch payloads: what a DISPATCH actually executes.
+
+A payload spec is a plain JSON-able dict (it rides the DISPATCH message);
+:func:`run_payload` executes it on the worker and returns the measured
+wall-clock elapsed time.  Three kinds:
+
+* ``sleep``         — service time drawn worker-side from a calibrated
+  straggler distribution (Exp / shifted-Exp / deterministic), seeded per
+  (job, attempt, replica) so replicas are iid draws and whole runs are
+  reproducible.  This is the calibration payload: the coordinator never
+  learns the draw, only the measured completion — exactly the telemetry a
+  real fleet produces.
+* ``deterministic`` — fixed duration; the CI payload (timing-assertable).
+* ``matmul``        — real compute: repeated JAX matmul + trace reduction
+  on an (n x n) shard, for runs where the "service distribution" must come
+  from actual hardware contention rather than a model.  JAX is imported
+  lazily so sleep/deterministic workers never pay the import.
+
+Cancellation: payloads poll a :class:`threading.Event` (sleeps wait ON it),
+so a CANCEL interrupts within one slice.  A chaos slowdown factor
+multiplies the duration (sleep kinds) or the repeat count (matmul) —
+straggling is injected INSIDE the worker, where the coordinator cannot see
+it except through telemetry.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["make_sleep_spec", "make_deterministic_spec", "make_matmul_spec",
+           "payload_duration", "run_payload"]
+
+_SLICE = 0.02  # max uninterruptible wait (s): bounds cancel latency
+
+
+def make_sleep_spec(
+    family: str, work: float = 1.0, *, delta: float = 0.0, mu: float = 1.0
+) -> dict:
+    """Sleep-from-distribution spec: service for ``work`` units of data.
+
+    ``family`` is ``'exp'`` or ``'sexp'`` (shifted exponential, the paper's
+    model); the draw follows the affine load model used everywhere else in
+    the repo — ``dist.scaled(work)`` — i.e. ``work * (delta + Exp(mu))``.
+    """
+    if family not in ("exp", "sexp"):
+        raise ValueError(f"unknown sleep family {family!r} (use 'exp'|'sexp')")
+    if mu <= 0 or work <= 0 or delta < 0:
+        raise ValueError(
+            f"need mu > 0, work > 0, delta >= 0; got {mu}, {work}, {delta}"
+        )
+    return {
+        "kind": "sleep",
+        "family": family,
+        "delta": float(delta),
+        "mu": float(mu),
+        "work": float(work),
+    }
+
+
+def make_deterministic_spec(duration: float) -> dict:
+    """Fixed-duration spec (CI: completion times are assertable)."""
+    if duration < 0:
+        raise ValueError(f"duration must be >= 0, got {duration}")
+    return {"kind": "deterministic", "duration": float(duration)}
+
+
+def make_matmul_spec(size: int = 256, repeats: int = 4) -> dict:
+    """Real-compute spec: ``repeats`` (size x size) matmuls + trace."""
+    if size < 1 or repeats < 1:
+        raise ValueError(f"need size, repeats >= 1; got {size}, {repeats}")
+    return {"kind": "matmul", "size": int(size), "repeats": int(repeats)}
+
+
+def payload_duration(spec: dict, seed: int) -> Optional[float]:
+    """The duration a timed spec will run for under ``seed`` (None for
+    matmul, whose duration is genuinely unknown until executed)."""
+    kind = spec["kind"]
+    if kind == "deterministic":
+        return float(spec["duration"])
+    if kind == "sleep":
+        rng = np.random.default_rng(seed)
+        base = rng.exponential(1.0 / float(spec["mu"]))
+        if spec["family"] == "sexp":
+            base += float(spec["delta"])
+        return base * float(spec["work"])
+    if kind == "matmul":
+        return None
+    raise ValueError(f"unknown payload kind {kind!r}")
+
+
+def _interruptible_sleep(duration: float, cancel: threading.Event) -> bool:
+    """Sleep ``duration`` seconds; True if cancelled before it elapsed."""
+    deadline = time.monotonic() + duration
+    while True:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            return False
+        if cancel.wait(min(remaining, _SLICE)):
+            return True
+
+
+def _run_matmul(spec: dict, seed: int, repeats: int,
+                cancel: threading.Event) -> Optional[float]:
+    import jax
+    import jax.numpy as jnp
+
+    n = int(spec["size"])
+    x = jax.random.normal(jax.random.PRNGKey(seed % (2**31)), (n, n))
+    acc = 0.0
+    for _ in range(repeats):
+        if cancel.is_set():
+            return None
+        x = jnp.tanh(x @ x.T / n)
+        acc += float(jnp.trace(x))
+    return acc
+
+
+def run_payload(
+    spec: dict,
+    *,
+    seed: int,
+    cancel: threading.Event,
+    slowdown: float = 1.0,
+) -> dict:
+    """Execute one payload; returns the RESULT fields the worker reports.
+
+    ``{"elapsed": wall-seconds, "cancelled": bool, "value": float|None}`` —
+    ``elapsed`` is measured even when cancelled (it is the coordinator's
+    censoring bound), ``value`` is a checksum proving real work happened
+    (matmul) or the drawn duration (sleep kinds).
+    """
+    if slowdown <= 0:
+        raise ValueError(f"slowdown must be positive, got {slowdown}")
+    start = time.monotonic()
+    kind = spec["kind"]
+    if kind in ("sleep", "deterministic"):
+        duration = payload_duration(spec, seed) * slowdown
+        was_cancelled = _interruptible_sleep(duration, cancel)
+        value = None if was_cancelled else duration
+    elif kind == "matmul":
+        repeats = max(1, round(int(spec["repeats"]) * slowdown))
+        value = _run_matmul(spec, seed, repeats, cancel)
+        was_cancelled = value is None
+    else:
+        raise ValueError(f"unknown payload kind {kind!r}")
+    return {
+        "elapsed": time.monotonic() - start,
+        "cancelled": bool(was_cancelled),
+        "value": value,
+    }

@@ -205,6 +205,16 @@ class StragglerTuner:
         )
         self._times: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
         self._censored: deque[np.ndarray] = deque(maxlen=self.config.window_steps)
+        # wall-clock (tagged) telemetry: per-worker censored-MLE accumulators
+        # keyed by caller-assigned worker id.  Cluster jobs observe a
+        # VARIABLE number of replicas per completion (r changes with B, the
+        # fleet shrinks on kills), so the fixed-shape window behind
+        # worker_rates() never applies there; each id instead accumulates
+        # (n_uncensored, total_time, n_observations) exactly like the
+        # windowed estimator — see rates_for().
+        self._tagged: deque[tuple[np.ndarray, np.ndarray, np.ndarray]] = (
+            deque(maxlen=self.config.window_steps)
+        )
         self._load: deque[float] = deque(maxlen=self.config.window_steps)
         self._sojourns: deque[np.ndarray] = deque(
             maxlen=self.config.window_steps
@@ -246,6 +256,78 @@ class StragglerTuner:
         self._times.append(t)
         self._censored.append(c)
         self._step += 1
+
+    def observe_tagged(
+        self,
+        worker_ids: np.ndarray,
+        times: np.ndarray,
+        censored: np.ndarray | None = None,
+    ) -> None:
+        """Record wall-clock observations ATTRIBUTED to specific workers.
+
+        The multi-process cluster runtime feeds per-job telemetry here: a
+        completed batch contributes one (possibly censored) service time per
+        replica that ran it, tagged with the worker id that produced it.
+        Unlike :meth:`observe`, rows may cover any SUBSET of the fleet and
+        any number of replicas — exactly what wall-clock dispatch produces
+        (r changes with B, workers die, clones run on other sets).
+
+        The observations join the same sliding window :meth:`fit` and the
+        re-plan path consume (so fits, KS gates, and empirical re-plans see
+        wall-clock telemetry unchanged), AND accumulate per-worker for
+        :meth:`rates_for` — the kill-/cancellation-censored per-worker rate
+        estimates recovery planning feeds to
+        :meth:`repro.distributed.fault.FaultManager.plan_recovery`.
+        """
+        ids = np.asarray(worker_ids, dtype=int).ravel()
+        t = np.asarray(times, dtype=float).ravel()
+        if ids.shape != t.shape:
+            raise ValueError(
+                f"worker_ids shape {ids.shape} != times shape {t.shape}"
+            )
+        c = (
+            np.zeros(t.shape, dtype=bool)
+            if censored is None
+            else np.asarray(censored, dtype=bool).ravel()
+        )
+        if c.shape != t.shape:
+            raise ValueError(
+                f"censored shape {c.shape} != times shape {t.shape}"
+            )
+        keep = np.isfinite(t) & (t > 0)
+        if not keep.any():
+            return
+        self._tagged.append((ids[keep], t[keep], c[keep]))
+        self.observe(t[keep], censored=c[keep])
+
+    def rates_for(self, worker_ids) -> Optional[np.ndarray]:
+        """Per-worker relative rates for ``worker_ids`` from tagged telemetry.
+
+        Same censored-exponential MLE as :meth:`worker_rates`
+        (``rate ~ n_uncensored / sum(times)``, half a pseudo-observation
+        for all-censored workers, normalized to mean 1) but computed from
+        the :meth:`observe_tagged` accumulators, so it tolerates the
+        variable-shape observations wall-clock dispatch produces.  Returns
+        None until every requested worker has at least one observation —
+        recovery planning falls back to a homogeneous spec rather than
+        guessing rates for an unmeasured worker.
+        """
+        ids = [int(w) for w in worker_ids]
+        if not ids or not self._tagged:
+            return None
+        n_unc: dict[int, float] = {w: 0.0 for w in ids}
+        total: dict[int, float] = {w: 0.0 for w in ids}
+        wanted = set(ids)
+        for row_ids, row_t, row_c in self._tagged:
+            for w, t, c in zip(row_ids, row_t, row_c):
+                w = int(w)
+                if w in wanted:
+                    total[w] += float(t)
+                    n_unc[w] += 0.0 if c else 1.0
+        if any(total[w] <= 0 for w in ids):
+            return None
+        rates = np.array([max(n_unc[w], 0.5) / total[w] for w in ids])
+        return rates / rates.mean()
 
     def observe_load(self, arrival_rate: float) -> None:
         """Record one observation of the batch-job arrival rate.

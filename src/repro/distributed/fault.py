@@ -94,6 +94,21 @@ class FaultManager:
         responded = np.asarray(responded, dtype=bool)
         self._missed = np.where(responded, 0, self._missed + 1)
 
+    def mark_dead(self, worker: int) -> None:
+        """Declare one worker dead IMMEDIATELY (no miss-count grace).
+
+        The wall-clock cluster runtime has death signals stronger than a
+        missed poll — a socket EOF when a worker process is SIGKILLed, or a
+        heartbeat gap past the hard timeout — and routes them here so
+        :meth:`decide` / :meth:`plan_recovery` see the loss on the next
+        step without waiting ``heartbeat_misses_fatal`` polls.
+        """
+        if not 0 <= worker < self.plan.n_data:
+            raise ValueError(
+                f"worker {worker} out of range [0, {self.plan.n_data})"
+            )
+        self._missed[worker] = self.heartbeat_misses_fatal
+
     def dead_mask(self) -> np.ndarray:
         """True = dead."""
         return self._missed >= self.heartbeat_misses_fatal

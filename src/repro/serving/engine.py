@@ -62,6 +62,7 @@ from repro.serving.queueing import (
     RelaunchPolicy,
     Request,
     StragglerPolicy,
+    job_observations,
     partition_requests,
 )
 
@@ -521,40 +522,11 @@ class ReplicatedServingEngine:
     def _on_job_complete(self, job: BatchJob) -> Optional[dict]:
         """Telemetry + model work + (maybe) a drain-then-swap re-plan."""
         work = self._work(job.size)
-        # cancelled replicas are only OBSERVED up to the winner's response —
-        # recording them censored at the cancellation time keeps the
-        # censored MLE unbiased (recording their full would-have-been times
-        # as censored lower bounds would drag the fitted mu down by the
-        # censoring fraction)
-        used = job.used_mask()
-        # a relaunched job's live draw only ran since its LAST (re)dispatch;
-        # censoring at job.service would credit the discarded attempts' wall
-        # time to the live replicas (attempt_service == service when the job
-        # never relaunched)
-        observed = np.minimum(job.service_times, job.attempt_service)
-        self.tuner.observe(observed / work, censored=~used)
-        # relaunch-discarded attempts are telemetry too: every replica of a
-        # cancelled attempt is censored at its cancellation instant
-        starts = [job.dispatched, *job.relaunched_at]
-        for k, attempt in enumerate(job.discarded_service_times):
-            horizon = starts[k + 1] - starts[k]
-            self.tuner.observe(
-                np.minimum(attempt, horizon) / work,
-                censored=np.ones(len(attempt), dtype=bool),
-            )
-        # speculative clones are telemetry too: each clone's replicas are
-        # censored at ITS cancellation time (completion - clone dispatch),
-        # and only the winning clone's fastest replica is uncensored
-        for k in range(job.n_clones):
-            clone_cancel = job.completed - job.clone_dispatched[k]
-            clone_times = job.clone_service_times[k]
-            clone_used = np.zeros(len(clone_times), dtype=bool)
-            if job.winner_clone == k:
-                clone_used[int(np.argmin(clone_times))] = True
-            self.tuner.observe(
-                np.minimum(clone_times, clone_cancel) / work,
-                censored=~clone_used,
-            )
+        # censoring-correct per-replica telemetry across the live attempt,
+        # relaunch-discarded attempts, and clones/hedges — shared with the
+        # wall-clock cluster coordinator (queueing.job_observations)
+        for times, censored in job_observations(job):
+            self.tuner.observe(times / work, censored=censored)
         self.tuner.observe_sojourn(
             np.array([req.sojourn for req in job.requests])
         )

@@ -83,7 +83,10 @@ __all__ = [
     "HedgedDispatchPolicy",
     "Request",
     "BatchJob",
+    "AdmissionQueue",
     "EventDrivenMaster",
+    "job_observations",
+    "late_threshold",
     "partition_requests",
 ]
 
@@ -432,6 +435,121 @@ class BatchJob:
         return used
 
 
+class AdmissionQueue:
+    """The master's admission queue, factored transport-agnostic.
+
+    Orders waiting requests under a :class:`QueuePolicy` discipline —
+    ``'fifo'`` (arrival order), ``'priority'`` (larger
+    :attr:`Request.priority` first, ties FIFO), or ``'edf'`` (earliest
+    :attr:`Request.deadline` first, ties FIFO).  It holds NO clock and NO
+    dispatch state, so the same class backs both the simulated-clock
+    :class:`EventDrivenMaster` and the wall-clock
+    :class:`repro.cluster.coordinator.ClusterCoordinator` (drop-on-expiry
+    stays with the caller, who owns the clock).
+
+    >>> q = AdmissionQueue(QueuePolicy(discipline="edf"))
+    >>> q.push(Request(request_id=0, arrival=0.0, deadline=9.0))
+    >>> q.push(Request(request_id=1, arrival=1.0, deadline=2.0))
+    >>> q.pop().request_id, len(q)
+    (1, 1)
+    """
+
+    def __init__(self, policy: QueuePolicy):
+        self.policy = policy
+        self._queue: deque[Request] = deque()  # fifo order
+        self._prio: list = []  # (key, Request) heap: 'priority'/'edf' order
+        self._queued_ids: set[int] = set()
+
+    def __len__(self) -> int:
+        return (
+            len(self._queue)
+            if self.policy.discipline == "fifo"
+            else len(self._prio)
+        )
+
+    def __contains__(self, request_id: int) -> bool:
+        return request_id in self._queued_ids
+
+    def _key(self, req: Request) -> tuple:
+        if self.policy.discipline == "priority":
+            return (-req.priority, req.arrival, req.request_id)
+        return (req.deadline, req.arrival, req.request_id)  # 'edf'
+
+    def push(self, req: Request) -> None:
+        if self.policy.discipline == "fifo":
+            self._queue.append(req)
+        else:
+            heapq.heappush(self._prio, (self._key(req), req))
+        self._queued_ids.add(req.request_id)
+
+    def pop(self) -> Request:
+        if self.policy.discipline == "fifo":
+            req = self._queue.popleft()
+        else:
+            req = heapq.heappop(self._prio)[1]
+        self._queued_ids.discard(req.request_id)
+        return req
+
+
+def late_threshold(
+    policy: StragglerPolicy,
+    job: "BatchJob",
+    service_window: Sequence[float],
+) -> Optional[float]:
+    """Lateness threshold for one job under a trigger-driven policy.
+
+    Caller-supplied ``policy.threshold`` model first, else the empirical
+    ``late_quantile`` of the caller's window of observed batch service
+    times once ``min_observations`` have accumulated, else None (not yet
+    calibrated -> no trigger).  Shared by the simulated master and the
+    wall-clock cluster coordinator, so both calibrate identically.
+    """
+    if policy.threshold is not None:
+        return float(policy.threshold(job))
+    if len(service_window) >= policy.min_observations:
+        return float(
+            np.quantile(np.asarray(service_window), policy.late_quantile)
+        )
+    return None
+
+
+def job_observations(job: "BatchJob") -> list[tuple[np.ndarray, np.ndarray]]:
+    """Censoring-correct telemetry of one completed job: (times, censored).
+
+    Cancelled replicas are only OBSERVED up to their cancellation instant —
+    recording them censored AT that bound keeps a censored MLE unbiased
+    (their full would-have-been draws would drag the fitted rate down by
+    the censoring fraction).  Covers all three attempt records:
+
+    * the live attempt (winner uncensored; a relaunched job's live draws
+      censor at :attr:`BatchJob.attempt_service`, not the full sojourn);
+    * relaunch-discarded attempts (every replica censored at its relaunch
+      instant);
+    * speculative clones / hedges (censored at THEIR cancellation time;
+      only a winning clone's fastest replica is uncensored).
+
+    Times are unnormalized (the caller divides by the batch's work units
+    before feeding :meth:`repro.core.tuner.StragglerTuner.observe`).
+    """
+    used = job.used_mask()
+    observed = np.minimum(job.service_times, job.attempt_service)
+    out = [(observed, ~used)]
+    starts = [job.dispatched, *job.relaunched_at]
+    for k, attempt in enumerate(job.discarded_service_times):
+        horizon = starts[k + 1] - starts[k]
+        out.append(
+            (np.minimum(attempt, horizon), np.ones(len(attempt), dtype=bool))
+        )
+    for k in range(job.n_clones):
+        clone_cancel = job.completed - job.clone_dispatched[k]
+        clone_times = job.clone_service_times[k]
+        clone_used = np.zeros(len(clone_times), dtype=bool)
+        if job.winner_clone == k:
+            clone_used[int(np.argmin(clone_times))] = True
+        out.append((np.minimum(clone_times, clone_cancel), ~clone_used))
+    return out
+
+
 # sampler(job, group) -> per-replica service times for dispatching `job` on
 # replica-set `group` (clone dispatches use the same sampler)
 ServiceSampler = Callable[[BatchJob, int], np.ndarray]
@@ -481,9 +599,7 @@ class EventDrivenMaster:
         self.on_drop = on_drop
         self._events: list = []  # (time, seq, kind, payload)
         self._seq = itertools.count()
-        self._queue: deque[Request] = deque()  # fifo order
-        self._prio: list = []  # (key, Request) heap: 'priority'/'edf' order
-        self._queued_ids: set[int] = set()
+        self._admission = AdmissionQueue(self.policy)
         # formed batches awaiting an idle set: FIFO, or (under 'priority' /
         # 'edf') a heap keyed so the most urgent batch overtakes
         # earlier-formed ones at dispatch
@@ -569,12 +685,7 @@ class EventDrivenMaster:
         heapq.heappush(self._events, (float(t), next(self._seq), kind, payload))
 
     def _n_queued(self) -> int:
-        return len(self._queue) if self.policy.discipline == "fifo" else len(self._prio)
-
-    def _admission_key(self, req: Request) -> tuple:
-        if self.policy.discipline == "priority":
-            return (-req.priority, req.arrival, req.request_id)
-        return (req.deadline, req.arrival, req.request_id)  # 'edf'
+        return len(self._admission)
 
     def _drop(self, req: Request) -> None:
         req.dropped = True
@@ -587,11 +698,7 @@ class EventDrivenMaster:
             # already expired at admission: never queue dead work
             self._drop(req)
             return
-        if self.policy.discipline == "fifo":
-            self._queue.append(req)
-        else:
-            heapq.heappush(self._prio, (self._admission_key(req), req))
-        self._queued_ids.add(req.request_id)
+        self._admission.push(req)
         if self._n_queued() >= self.policy.max_batch_size:
             self._form(self.policy.max_batch_size)
         elif math.isfinite(self.policy.max_wait):
@@ -600,16 +707,11 @@ class EventDrivenMaster:
     def _on_timer(self, request_id: int) -> None:
         # the max-wait deadline of a request that is still queued fires a
         # batch with whatever is waiting (>= 1 request, <= max size)
-        if request_id in self._queued_ids:
+        if request_id in self._admission:
             self._form(min(self._n_queued(), self.policy.max_batch_size))
 
     def _pop_request(self) -> Request:
-        if self.policy.discipline == "fifo":
-            req = self._queue.popleft()
-        else:
-            req = heapq.heappop(self._prio)[1]
-        self._queued_ids.discard(req.request_id)
-        return req
+        return self._admission.pop()
 
     def _pending_key(self, job: BatchJob) -> tuple:
         if self.policy.discipline == "priority":
@@ -646,17 +748,8 @@ class EventDrivenMaster:
         self._pending_push(job)
 
     def _spec_threshold(self, job: BatchJob) -> Optional[float]:
-        """Lateness threshold for one job: caller model, else the empirical
-        late-quantile of observed batch services, else None (not yet
-        calibrated -> no speculation)."""
-        pol = self.speculation
-        if pol.threshold is not None:
-            return float(pol.threshold(job))
-        if len(self._service_window) >= pol.min_observations:
-            return float(
-                np.quantile(np.asarray(self._service_window), pol.late_quantile)
-            )
-        return None
+        """Lateness threshold for one job (see :func:`late_threshold`)."""
+        return late_threshold(self.speculation, job, self._service_window)
 
     def _arm_speculation(self, job: BatchJob) -> None:
         """Schedule the late-response check for a just-(re)dispatched job.

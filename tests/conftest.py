@@ -10,5 +10,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _reap_cluster_workers():
+    """Kill any worker subprocess a crashed/failed cluster test leaves
+    behind, so one bad test can't strand orphan processes that hold the
+    session (or the CI runner) hostage."""
+    yield
+    from repro.cluster.harness import reap_orphans
+
+    reaped = reap_orphans()
+    if reaped:
+        print(f"\n[conftest] reaped {reaped} orphaned cluster worker(s)")

@@ -1,0 +1,503 @@
+"""Multi-process cluster runtime: protocol, payloads, smoke, heartbeat
+edge cases, chaos matrix.
+
+Every test that opens a socket or spawns a process runs under a SIGALRM
+wall-clock guard (``_alarm_timeout``) — a hung worker or a stuck selector
+loop fails the test instead of hanging the suite; the session-scoped
+reaper in ``conftest.py`` then kills anything a failed test stranded.
+"""
+
+import math
+import os
+import signal
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import protocol
+from repro.cluster.chaos import ChaosEvent, ChaosInjector, drive
+from repro.cluster.coordinator import ClusterConfig, ClusterCoordinator
+from repro.cluster.harness import SPAWNED_WORKER_PIDS, LocalCluster
+from repro.cluster.payloads import (
+    make_deterministic_spec,
+    make_matmul_spec,
+    make_sleep_spec,
+    payload_duration,
+    run_payload,
+)
+from repro.core import PolicyCandidate
+from repro.serving.queueing import Request
+
+TEST_TIMEOUT = 90  # wall seconds per test: generous; failures hit it, not CI
+
+
+@pytest.fixture(autouse=True)
+def _alarm_timeout():
+    """Per-test wall-clock limit for every test in this module."""
+
+    def _handler(signum, frame):
+        raise TimeoutError(f"test exceeded {TEST_TIMEOUT}s wall-clock limit")
+
+    old = signal.signal(signal.SIGALRM, _handler)
+    signal.alarm(TEST_TIMEOUT)
+    yield
+    signal.alarm(0)
+    signal.signal(signal.SIGALRM, old)
+
+
+def _submit_stream(coord, n, gap, **kw):
+    base = coord.now()
+    for i in range(n):
+        coord.submit(Request(request_id=i, arrival=base + i * gap, **kw))
+    return base
+
+
+# ---------------------------------------------------------------- protocol --
+class TestProtocol:
+    def test_roundtrip(self):
+        msg = {"type": protocol.DISPATCH, "job_id": 3, "payload": {"k": [1]}}
+        dec = protocol.FrameDecoder()
+        out = list(dec.feed(protocol.encode_message(msg)))
+        assert out == [msg]
+
+    def test_fragmentation_and_coalescing(self):
+        msgs = [
+            {"type": protocol.HEARTBEAT, "worker_id": i} for i in range(5)
+        ]
+        blob = b"".join(protocol.encode_message(m) for m in msgs)
+        dec = protocol.FrameDecoder()
+        got = []
+        # drip one byte at a time: frames must survive arbitrary splits
+        for i in range(len(blob)):
+            got.extend(dec.feed(blob[i : i + 1]))
+        assert got == msgs
+
+    def test_many_frames_one_feed(self):
+        msgs = [{"type": protocol.CANCEL, "job_id": i} for i in range(10)]
+        blob = b"".join(protocol.encode_message(m) for m in msgs)
+        assert list(protocol.FrameDecoder().feed(blob)) == msgs
+
+    def test_unknown_type_rejected(self):
+        with pytest.raises(ValueError, match="unknown message type"):
+            protocol.encode_message({"type": "GOSSIP"})
+
+    def test_oversize_frame_rejected(self):
+        import struct
+
+        dec = protocol.FrameDecoder()
+        with pytest.raises(ValueError, match="exceeds MAX_FRAME"):
+            list(dec.feed(struct.pack("!I", protocol.MAX_FRAME + 1)))
+
+    def test_malformed_payload_rejected(self):
+        import struct
+
+        payload = b'{"no_type": 1}'
+        dec = protocol.FrameDecoder()
+        with pytest.raises(ValueError, match="malformed"):
+            list(dec.feed(struct.pack("!I", len(payload)) + payload))
+
+    def test_abandoned_iteration_keeps_frames_pending(self):
+        """A take-one consumer (recv_message) must not strand the frames
+        that arrived in the same recv: the next feed() — even with no new
+        bytes — yields them."""
+        msgs = [{"type": protocol.CANCEL, "job_id": i} for i in range(3)]
+        blob = b"".join(protocol.encode_message(m) for m in msgs)
+        dec = protocol.FrameDecoder()
+        first = next(iter(dec.feed(blob)))  # iterator abandoned after one
+        assert first == msgs[0]
+        assert dec.pending == 2
+        assert list(dec.feed(b"")) == msgs[1:]
+        assert dec.pending == 0
+
+    def test_dispatch_riding_with_welcome_is_executed(self):
+        """A busy coordinator DISPATCHes milliseconds after WELCOME; under
+        scheduling delay both frames land in the worker's FIRST recv.  The
+        worker must execute that backlog, not block awaiting new bytes
+        (regression: a stranded DISPATCH left the worker heartbeating
+        forever without ever running its batch)."""
+        from repro.cluster.worker import WorkerRuntime
+
+        coord_sock, worker_sock = socket.socketpair()
+        runtime = WorkerRuntime(worker_sock, heartbeat_interval=0.05)
+        t = threading.Thread(target=runtime.run, daemon=True)
+        t.start()
+        dec = protocol.FrameDecoder()
+        try:
+            reg = protocol.recv_message(coord_sock, dec)
+            assert reg["type"] == protocol.REGISTER
+            # WELCOME + RECONFIGURE + DISPATCH in ONE write = one recv
+            blob = b"".join(
+                protocol.encode_message(m)
+                for m in (
+                    {
+                        "type": protocol.WELCOME,
+                        "worker_id": 0,
+                        "heartbeat_interval": 0.05,
+                        "generation": 0,
+                    },
+                    {"type": protocol.RECONFIGURE, "generation": 1,
+                     "n_groups": 1},
+                    {
+                        "type": protocol.DISPATCH,
+                        "job_id": 7,
+                        "attempt": 0,
+                        "payload": make_deterministic_spec(0.01),
+                        "seed": 0,
+                        "deadline": None,
+                    },
+                )
+            )
+            coord_sock.sendall(blob)
+            deadline = time.time() + 10.0
+            result = None
+            while time.time() < deadline:
+                msg = protocol.recv_message(coord_sock, dec)
+                if msg is None:
+                    break
+                if msg["type"] == protocol.RESULT:
+                    result = msg
+                    break
+            assert result is not None, "stranded DISPATCH never executed"
+            assert result["job_id"] == 7
+            assert result["generation"] == 1  # backlog RECONFIGURE adopted
+            assert not result["cancelled"]
+        finally:
+            try:
+                protocol.send_message(
+                    coord_sock, {"type": protocol.SHUTDOWN}
+                )
+            except OSError:
+                pass
+            t.join(timeout=5.0)
+            coord_sock.close()
+        assert not t.is_alive()
+
+
+# ---------------------------------------------------------------- payloads --
+class TestPayloads:
+    def test_sleep_seeded_reproducible(self):
+        spec = make_sleep_spec("sexp", work=2.0, delta=0.01, mu=10.0)
+        d1 = payload_duration(spec, seed=123)
+        d2 = payload_duration(spec, seed=123)
+        assert d1 == d2
+        assert d1 >= 2.0 * 0.01  # work * delta floor
+        assert payload_duration(spec, seed=124) != d1
+
+    def test_deterministic_runs_for_duration(self):
+        spec = make_deterministic_spec(0.05)
+        out = run_payload(spec, seed=0, cancel=threading.Event())
+        assert not out["cancelled"]
+        assert out["elapsed"] == pytest.approx(0.05, abs=0.04)
+
+    def test_cancel_interrupts_sleep(self):
+        spec = make_deterministic_spec(5.0)
+        cancel = threading.Event()
+        t = threading.Timer(0.05, cancel.set)
+        t.start()
+        out = run_payload(spec, seed=0, cancel=cancel)
+        t.join()
+        assert out["cancelled"]
+        assert out["elapsed"] < 1.0  # interrupted within a few slices
+
+    def test_slowdown_scales_duration(self):
+        spec = make_deterministic_spec(0.03)
+        fast = run_payload(spec, seed=0, cancel=threading.Event())
+        slow = run_payload(
+            spec, seed=0, cancel=threading.Event(), slowdown=3.0
+        )
+        assert slow["elapsed"] > fast["elapsed"] * 1.5
+
+    @pytest.mark.slow
+    def test_matmul_produces_checksum(self):
+        spec = make_matmul_spec(size=32, repeats=2)
+        out = run_payload(spec, seed=7, cancel=threading.Event())
+        assert not out["cancelled"]
+        assert math.isfinite(out["value"])
+
+    def test_invalid_specs_rejected(self):
+        with pytest.raises(ValueError):
+            make_sleep_spec("weibull")
+        with pytest.raises(ValueError):
+            make_sleep_spec("exp", mu=-1.0)
+        with pytest.raises(ValueError):
+            make_deterministic_spec(-0.1)
+
+
+# ------------------------------------------------------------------ config --
+class TestConfig:
+    def test_batches_must_divide_workers(self):
+        with pytest.raises(ValueError, match="divide"):
+            ClusterConfig(n_workers=4, n_batches=3)
+
+    def test_heartbeat_timeout_exceeds_interval(self):
+        with pytest.raises(ValueError, match="heartbeat_timeout"):
+            ClusterConfig(heartbeat_interval=0.5, heartbeat_timeout=0.1)
+
+    def test_registration_timeout(self):
+        cfg = ClusterConfig(n_workers=1, register_timeout=0.2)
+        coord = ClusterCoordinator(cfg)
+        try:
+            with pytest.raises(TimeoutError, match="registered"):
+                coord.wait_for_workers()
+        finally:
+            coord.shutdown()
+
+
+# ------------------------------------------------------------------- smoke --
+class TestClusterSmoke:
+    def test_two_worker_deterministic_roundtrip(self):
+        """Tier-1 smoke: 2 real worker processes, deterministic payload,
+        first-replica-wins on a fully replicated (B=1) fleet."""
+        cfg = ClusterConfig(
+            n_workers=2,
+            n_batches=1,
+            batch_size=1,
+            max_wait=0.01,
+            payload=make_deterministic_spec(0.03),
+        )
+        with LocalCluster(cfg) as cluster:
+            coord = cluster.coordinator
+            _submit_stream(coord, 6, gap=0.02)
+            reqs = coord.run(timeout=20.0)
+            s = coord.summary()
+        assert s["served"] == 6
+        assert all(math.isfinite(r.completion) for r in reqs)
+        # sojourns are real wall time: positive, and far below the run cap
+        assert all(0 < r.sojourn < 5.0 for r in reqs)
+        assert s["deaths"] == 0 and s["redispatches"] == 0
+        # every spawned worker process exited after shutdown
+        for proc in cluster.procs:
+            assert proc.poll() is not None
+
+    def test_batching_coalesces_requests(self):
+        cfg = ClusterConfig(
+            n_workers=2,
+            n_batches=2,
+            batch_size=4,
+            max_wait=0.03,
+            payload=make_deterministic_spec(0.01),
+        )
+        with LocalCluster(cfg) as cluster:
+            coord = cluster.coordinator
+            _submit_stream(coord, 8, gap=0.001)  # burst: should batch by 4
+            coord.run(timeout=20.0)
+            sizes = [j.size for j in coord.completed_jobs]
+        assert sum(sizes) == 8
+        assert max(sizes) > 1  # coalescing actually happened
+
+    def test_telemetry_feeds_tuner(self):
+        """Measured completions (and censored cancels) reach the tuner."""
+        cfg = ClusterConfig(
+            n_workers=2,
+            n_batches=1,  # r=2: every job makes one censored loser
+            batch_size=1,
+            max_wait=0.01,
+            payload=make_sleep_spec("sexp", work=1.0, delta=0.01, mu=100.0),
+        )
+        with LocalCluster(cfg) as cluster:
+            coord = cluster.coordinator
+            _submit_stream(coord, 8, gap=0.01)
+            coord.run(timeout=20.0)
+            assert coord.tuner is not None
+            x, c = coord.tuner.window_observations()
+        assert len(x) >= 8
+        assert c.any()  # cancelled replicas arrived censored
+        assert (~c).sum() >= 8  # one winner per job, uncensored
+        assert np.all(x > 0)
+
+
+# ---------------------------------------------------- heartbeat edge cases --
+class TestHeartbeatEdgeCases:
+    def test_worker_dies_mid_batch(self):
+        """SIGKILL mid-batch: the batch is re-dispatched (no request lost)
+        and the dead replica's time is recorded CENSORED at detection."""
+        cfg = ClusterConfig(
+            n_workers=2,
+            n_batches=2,  # r=1: the killed worker's job has no live replica
+            batch_size=1,
+            max_wait=0.01,
+            payload=make_deterministic_spec(0.4),
+            heartbeat_timeout=0.3,
+        )
+        with LocalCluster(cfg) as cluster:
+            coord = cluster.coordinator
+            _submit_stream(coord, 4, gap=0.01)
+            # let dispatch happen, then kill one worker mid-batch
+            deadline = coord.now() + 5.0
+            while not any(h.outstanding for h in coord.workers.values()):
+                assert coord.now() < deadline, "no worker ever got a dispatch"
+                coord._poll(0.02)
+            busy = [w for w, h in coord.workers.items() if h.outstanding]
+            os.kill(cluster.worker_pid(busy[0]), signal.SIGKILL)
+            coord.run(timeout=30.0)
+            s = coord.summary()
+            x, c = coord.tuner.window_observations()
+        assert s["served"] == 4  # zero accepted-request loss
+        assert s["deaths"] == 1
+        assert s["redispatches"] >= 1
+        assert s["generation"] >= 1  # survivors re-planned
+        assert c.any()  # the kill left a censored observation
+
+    def test_pause_past_timeout_then_resume_no_double_dispatch(self):
+        """SIGSTOP past the heartbeat timeout = declared dead and its batch
+        re-dispatched; SIGCONT = rejoins at the next quiesce.  The flapped
+        worker's stale RESULT must be dropped, not double-complete."""
+        cfg = ClusterConfig(
+            n_workers=2,
+            n_batches=2,
+            batch_size=1,
+            max_wait=0.01,
+            payload=make_deterministic_spec(0.12),
+            heartbeat_timeout=0.25,
+        )
+        with LocalCluster(cfg) as cluster:
+            coord = cluster.coordinator
+            _submit_stream(coord, 24, gap=0.025)
+            # pause at +0.05 while the 0.12s first batch is surely in
+            # flight on worker 0 — the stale-RESULT path must trigger
+            inj = ChaosInjector(
+                cluster,
+                [ChaosEvent(at=coord.now() + 0.05, kind="pause", worker=0,
+                            arg=0.7)],
+            )
+            drive(cluster, inj, timeout=30.0)
+            s = coord.summary()
+            reqs = coord._submitted
+        assert s["served"] == 24
+        # exactly once each: completion set once, never overwritten
+        assert sorted(r.request_id for r in reqs) == list(range(24))
+        assert s["deaths"] == 1 and s["rejoins"] == 1
+        assert s["stale_results"] >= 1  # the flapped worker's late RESULT
+        assert s["generation"] >= 2  # shrink on death + regrow on rejoin
+
+    def test_late_registration_joins_next_generation(self):
+        """A worker that registers after serving started is parked, then
+        folded into the fleet at the next drain-then-swap point."""
+        cfg = ClusterConfig(
+            n_workers=3,
+            batch_size=1,
+            max_wait=0.01,
+            payload=make_deterministic_spec(0.04),
+            heartbeat_timeout=0.5,
+        )
+        # worker 2 registers ~1s late: the startup barrier waits for 2
+        with LocalCluster(cfg, register_delays={2: 1.0}) as cluster:
+            coord = cluster.coordinator
+            assert len(coord.workers) == 2
+            _submit_stream(coord, 40, gap=0.05)
+            coord.run(timeout=30.0)
+            # interpreter startup is unpredictable: keep the loop alive
+            # until the late worker has registered and been folded in
+            deadline = coord.now() + 15.0
+            while len(coord.live_workers()) < 3 and coord.now() < deadline:
+                coord._poll(0.05)
+            s = coord.summary()
+            live = coord.live_workers()
+        assert s["served"] == 40
+        assert len(live) == 3  # the late worker is in the fleet
+        assert s["generation"] >= 1  # a reconfiguration folded it in
+        assert sum(len(g) for g in coord.groups) == 3
+
+
+# ------------------------------------------------------- chaos matrix (slow) --
+@pytest.mark.slow
+class TestChaosMatrix:
+    N = 4
+    REQS = 60
+
+    def _run(self, events, *, policy=None, tuner=False, slowdowns=None,
+             settle=None):
+        cfg = ClusterConfig(
+            n_workers=self.N,
+            n_batches=self.N,
+            batch_size=1,
+            max_wait=0.01,
+            payload=make_sleep_spec("sexp", work=1.0, delta=0.01, mu=50.0),
+            heartbeat_timeout=0.3,
+            policy=policy,
+            tuner=tuner,
+            min_samples=40,
+            planner_mode="analytic",
+            seed=11,
+        )
+        with LocalCluster(cfg, slowdowns=slowdowns or {}) as cluster:
+            coord = cluster.coordinator
+            base = _submit_stream(coord, self.REQS, gap=0.02)
+            inj = ChaosInjector(cluster, events(base))
+            drive(cluster, inj, timeout=60.0)
+            if settle is not None:
+                deadline = coord.now() + 10.0
+                while not settle(coord) and coord.now() < deadline:
+                    coord._poll(0.05)
+            return coord.summary(), coord
+
+    def test_kill(self):
+        s, _ = self._run(
+            lambda base: [ChaosEvent(at=base + 0.3, kind="kill", worker=1)]
+        )
+        assert s["served"] == self.REQS
+        assert s["deaths"] == 1 and s["generation"] >= 1
+
+    def test_pause_resume(self):
+        s, _ = self._run(
+            lambda base: [
+                ChaosEvent(at=base + 0.3, kind="pause", worker=2, arg=0.8)
+            ]
+        )
+        assert s["served"] == self.REQS
+        assert s["deaths"] == 1 and s["rejoins"] == 1
+
+    def test_slowdown_with_clone_policy(self):
+        s, _ = self._run(
+            lambda base: [
+                ChaosEvent(at=base + 0.2, kind="slow", worker=3, arg=10.0)
+            ],
+            policy=PolicyCandidate(kind="clone", quantile=0.9),
+        )
+        assert s["served"] == self.REQS
+        assert s["policy"] == "clone"
+        assert s["clones"] >= 1  # speculation fired against the straggler
+
+    def test_late_spawn_grows_fleet(self):
+        # the spawned process needs interpreter-startup time to register;
+        # settle keeps polling after the stream drains until it joined
+        s, coord = self._run(
+            lambda base: [ChaosEvent(at=base + 0.3, kind="spawn")],
+            settle=lambda c: len(c.live_workers()) == self.N + 1
+            and sum(len(g) for g in c.groups) == self.N + 1,
+        )
+        assert s["served"] == self.REQS
+        assert len(coord.live_workers()) == self.N + 1
+        assert sum(len(g) for g in coord.groups) == self.N + 1
+
+    def test_tuner_replans_from_wall_clock_telemetry(self):
+        s, coord = self._run(lambda base: [], tuner=True)
+        assert s["served"] == self.REQS
+        assert coord.tuner.last_fit is not None  # fitted measured service
+        x, c = coord.tuner.window_observations()
+        assert len(x) >= 40
+
+
+# ----------------------------------------------------------------- hygiene --
+def test_spawned_pids_are_registered_and_dead():
+    """Harness bookkeeping: every spawned pid lands in the registry and is
+    gone after stop() — the conftest reaper then has nothing to do."""
+    cfg = ClusterConfig(
+        n_workers=2,
+        n_batches=2,
+        batch_size=1,
+        max_wait=0.01,
+        payload=make_deterministic_spec(0.01),
+    )
+    with LocalCluster(cfg) as cluster:
+        pids = {p.pid for p in cluster.procs}
+        assert pids <= SPAWNED_WORKER_PIDS
+        coord = cluster.coordinator
+        _submit_stream(coord, 2, gap=0.01)
+        coord.run(timeout=15.0)
+    for pid in pids:
+        with pytest.raises(ProcessLookupError):
+            os.kill(pid, 0)
