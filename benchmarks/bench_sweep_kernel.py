@@ -1,0 +1,145 @@
+"""Accelerator-resident planning sweep vs the legacy numpy path (PR 8).
+
+The tuner's quality-of-decision cost is re-plan latency: the full
+load-aware sweep scores every (bootstrap resample, B, policy) cell, and
+before PR 8 each cell was one Python heap simulation
+(``_sojourn_recursion*``).  This bench pins the headline numbers on the
+fleet-scale configuration — N=10k workers, an Empirical service pool of
+10k atoms, the full (B, policy) grid over B ∈ {50, 100, 200} × 4 policy
+kinds, J=300 jobs per cell:
+
+* ``sweep_numpy_k4`` — the legacy numpy ``sweep_sojourn_policies`` path
+  on a K=4 resample subset.  The numpy path is one independent Python
+  simulation per cell, so its cost is linear in K; the speedup rows
+  scale this measurement to their K (documented in ``derived`` as
+  ``numpy_scaled_s``).
+* ``sweep_accel_fleet_k256`` — the jax backend (jit+vmap scan kernel,
+  grouped per-split/per-policy dispatch) on the full K=256 bootstrap
+  grid: 3072 cells, one sweep call.  Asserts the >=20x acceptance bar
+  over the K-scaled numpy path.
+* ``replan_accel_k20`` — the same fleet and grid at the tuner's DEFAULT
+  bootstrap budget (``TunerConfig.bootstrap_resamples = 20``), i.e. the
+  re-plan the production tuner issues per observation window.  Asserts
+  the <1s acceptance bar (warm caches — the steady state of the tuner
+  loop) and the >=20x ratio at that K.  This is the number that makes
+  ``TunerConfig.replan_time_budget=1.0`` waive cooldown pacing.
+
+Timings here are wall-clock on whatever host runs the bench; the
+committed baseline was produced on a single-core CPU runner, where the
+"accelerator" backend is XLA:CPU — on a real accelerator the gap widens
+(the numpy path cannot use the device at all).
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.order_stats import Empirical
+from repro.core.policies import PolicyCandidate
+from repro.core.simulator import sweep_sojourn_policies
+
+N_WORKERS = 10_000
+SPLITS = (50, 100, 200)
+N_JOBS = 300
+ARRIVAL_RATE = 40.0
+N_ATOMS = 10_000
+K_FLEET = 256
+K_REPLAN = 20  # TunerConfig.bootstrap_resamples default
+K_NUMPY = 4  # numpy subset actually timed (cost is linear in K)
+POLICIES = (
+    PolicyCandidate("none"),
+    PolicyCandidate("clone", quantile=0.85),
+    PolicyCandidate("relaunch", quantile=0.9),
+    PolicyCandidate("hedged", hedge_fraction=0.3),
+)
+
+
+def _resamples(k: int) -> list[Empirical]:
+    rng = np.random.default_rng(0)
+    pool = rng.gamma(2.0, 0.5, N_ATOMS)
+    return [Empirical(rng.choice(pool, pool.size)) for _ in range(k)]
+
+
+def _sweep(dists, backend):
+    return sweep_sojourn_policies(
+        dists,
+        n_workers=N_WORKERS,
+        arrival_rate=ARRIVAL_RATE,
+        policies=POLICIES,
+        n_jobs=N_JOBS,
+        seed=3,
+        feasible_b=list(SPLITS),
+        backend=backend,
+    )
+
+
+def _warm_best(dists, backend, n=3):
+    _sweep(dists, backend)  # compile + populate the shared-CRN caches
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        res = _sweep(dists, backend)
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def run():
+    rows = []
+    pool = _resamples(K_FLEET)
+    grid = f"N={N_WORKERS};B={list(SPLITS)};policies={len(POLICIES)};" \
+           f"jobs={N_JOBS}"
+
+    # min of 3 (the load-spike-resistant timing statistic, and the
+    # CONSERVATIVE side for the speedup asserts below — a single sample
+    # is noisy enough on a shared host to flip them by several x)
+    samples = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _sweep(pool[:K_NUMPY], "numpy")
+        samples.append(time.perf_counter() - t0)
+    t_numpy = min(samples)
+    rows.append((
+        "sweep_numpy_k4",
+        t_numpy * 1e6,
+        f"{grid};K={K_NUMPY};cost linear in K (independent Python sim "
+        f"per cell)",
+    ))
+
+    t_fleet, res = _warm_best(pool, "jax")
+    numpy_fleet = t_numpy * K_FLEET / K_NUMPY
+    speedup = numpy_fleet / t_fleet
+    assert res.backend == "jax", res.backend
+    assert speedup >= 20.0, (
+        f"fleet-scale sweep speedup {speedup:.1f}x below the 20x "
+        f"acceptance bar (accel {t_fleet:.2f}s vs numpy-scaled "
+        f"{numpy_fleet:.1f}s)"
+    )
+    rows.append((
+        "sweep_accel_fleet_k256",
+        t_fleet * 1e6,
+        f"{grid};K={K_FLEET};numpy_scaled_s={numpy_fleet:.1f};"
+        f"speedup={speedup:.1f}x",
+    ))
+
+    t_replan, res = _warm_best(pool[:K_REPLAN], "jax")
+    numpy_replan = t_numpy * K_REPLAN / K_NUMPY
+    speedup = numpy_replan / t_replan
+    assert t_replan < 1.0, (
+        f"warm re-plan took {t_replan:.2f}s, above the 1s acceptance bar"
+    )
+    assert speedup >= 20.0, (
+        f"re-plan speedup {speedup:.1f}x below the 20x acceptance bar"
+    )
+    rows.append((
+        "replan_accel_k20",
+        t_replan * 1e6,
+        f"{grid};K={K_REPLAN} (tuner default bootstrap budget);"
+        f"numpy_scaled_s={numpy_replan:.1f};speedup={speedup:.1f}x;"
+        f"sub_second={t_replan < 1.0}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

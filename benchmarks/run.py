@@ -16,6 +16,7 @@ def main() -> None:
         bench_serving_latency,
         bench_sim_engine,
         bench_step_time,
+        bench_sweep_kernel,
         bench_thm1_assignment,
         bench_thm2_exponential,
         bench_thm4_variance,
@@ -24,6 +25,7 @@ def main() -> None:
     modules = [
         bench_sim_engine,
         bench_planner,
+        bench_sweep_kernel,
         bench_thm1_assignment,
         bench_thm2_exponential,
         bench_fig2_spectrum,

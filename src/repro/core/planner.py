@@ -449,6 +449,12 @@ class Plan:
     fraction at the emitted B* — a plan with confidence 0.5 says the
     observation window genuinely cannot distinguish the top candidates,
     which is exactly when hysteresis should keep the fleet where it is.
+
+    ``backend`` is the RESOLVED simulation backend that actually scored
+    this plan (``"numpy"`` / ``"jax"`` / ``"pallas"``; never ``"auto"``) —
+    provenance for telemetry and for the tuner's re-plan-time budget
+    accounting.  ``None`` from the closed-form planner, which simulates
+    nothing.
     """
 
     spec: ClusterSpec
@@ -463,6 +469,7 @@ class Plan:
     policy: Optional[PolicyCandidate] = None  # chosen straggler policy
     confidence: Optional[float] = None  # bootstrap vote share at B*
     vote_share: Optional[tuple[tuple[int, float], ...]] = None  # per-B votes
+    backend: Optional[str] = None  # resolved sim backend (provenance)
 
     @property
     def n_workers(self) -> int:
@@ -567,6 +574,11 @@ class Planner:
             spec_q = self._speculation_for(n_batches)
         return {"policy": pol, "speculation_quantile": spec_q}
 
+    def _plan_backend(self) -> Optional[str]:
+        """Resolved simulation backend of the last sweep (Plan provenance;
+        None for planners that simulate nothing)."""
+        return None
+
     def plan(
         self, spec: ClusterSpec, objective: Optional[Objective] = None
     ) -> Plan:
@@ -587,6 +599,7 @@ class Planner:
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
+            backend=self._plan_backend(),
             **self._decision_fields(best.n_batches),
         )
 
@@ -660,6 +673,16 @@ class SimulatedPlanner(Planner):
     def _policy_for(self, n_batches: int) -> Optional[PolicyCandidate]:
         return getattr(self, "_policy_by_b", {}).get(n_batches)
 
+    def _plan_backend(self) -> Optional[str]:
+        return getattr(self, "_last_backend", None)
+
+    def _resolve_backend(self) -> str:
+        """Resolve (and record for Plan provenance) the sweep backend."""
+        from .simulator import resolve_sweep_backend  # local: avoid cycle
+
+        self._last_backend = resolve_sweep_backend(self.backend)
+        return self._last_backend
+
     def _sweep_sojourn(
         self, spec: ClusterSpec, objective: Objective
     ) -> SpectrumResult:
@@ -685,6 +708,7 @@ class SimulatedPlanner(Planner):
             sweep_sojourn_speculative,
         )
 
+        backend = self._resolve_backend()
         if objective.policies:
             res = sweep_sojourn_policies(
                 spec.dist,
@@ -697,6 +721,7 @@ class SimulatedPlanner(Planner):
                 rates=self._sweep_rates(spec),
                 job_load=objective.job_load,
                 arrivals=objective.arrivals,
+                backend=backend,
             )
             pts = []
             self._policy_by_b = {}
@@ -724,6 +749,7 @@ class SimulatedPlanner(Planner):
                 rates=self._sweep_rates(spec),
                 job_load=objective.job_load,
                 arrivals=objective.arrivals,
+                backend=backend,
             )
             pts = []
             self._spec_q_by_b = {}
@@ -749,6 +775,7 @@ class SimulatedPlanner(Planner):
             rates=self._sweep_rates(spec),
             job_load=objective.job_load,
             arrivals=objective.arrivals,
+            backend=backend,
         )
         return result_from_points(
             point_from_samples(b, spec.n_workers // b, res.samples[0, i])
@@ -769,7 +796,7 @@ class SimulatedPlanner(Planner):
             n_trials=self.n_trials,
             seed=self.seed,
             rates=self._sweep_rates(spec),
-            backend=self.backend,
+            backend=self._resolve_backend(),
         )
 
 
@@ -792,8 +819,11 @@ class HeterogeneousPlanner(SimulatedPlanner):
     Parity contract: with ``rates=None`` or all-equal rates this class is
     bit-identical to :class:`SimulatedPlanner` — it takes the identical
     batched-sweep path (``mu * 1.0 == mu`` exactly in the engine) and the
-    placement falls back to the same replica-major balanced layout.  The
-    skewed path is numpy-only (``backend`` applies to the homogeneous path).
+    placement falls back to the same replica-major balanced layout.
+    ``backend`` reaches the homogeneous sweeps and the skewed
+    policy-portfolio path; the skewed legacy-speculation and coverage
+    paths stay numpy (the Plan's ``backend`` field records which engine
+    actually ran).
 
     >>> skewed = ClusterSpec(n_workers=8, dist=Exponential(mu=2.0),
     ...                      rates=(0.2, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0))
@@ -832,6 +862,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
 
             rate = objective.offered_rate(spec)
             if objective.policies:
+                backend = self._resolve_backend()
                 pts = []
                 for b in spec.feasible_batches():
                     assignment = rate_aware_assignment(
@@ -849,6 +880,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
                         job_load=objective.job_load,
                         worker_batch=assignment.worker_batch,
                         arrivals=objective.arrivals,
+                        backend=backend,
                     )
                     point, best_p = _best_speculative_point(
                         b, spec.n_workers // b, sample_sets,
@@ -860,6 +892,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
             quantiles: tuple[Optional[float], ...] = (None,)
             if objective.speculation_quantiles:
                 quantiles = (None, *objective.speculation_quantiles)
+            self._last_backend = "numpy"
             pts = []
             for b in spec.feasible_batches():
                 assignment = rate_aware_assignment(
@@ -887,6 +920,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
             return result_from_points(pts)
         from .simulator import simulate_coverage  # local: avoid import cycle
 
+        self._last_backend = "numpy"
         pts = []
         for b in spec.feasible_batches():
             assignment = rate_aware_assignment(spec.n_workers, b, spec.rates)
@@ -922,12 +956,18 @@ class EmpiricalPlanner(SimulatedPlanner):
     it first) — the statistical-recovery tests feed known Exp/SExp fleets
     through exactly that path.  Load-aware objectives, speculation
     triggers, and straggler-policy portfolios are supported through the
-    same sojourn sweeps as :class:`SimulatedPlanner`.  Per-worker rate
-    skew is REJECTED loudly (``ValueError``): the bootstrap sweep
-    quantifies distributional uncertainty only and would silently score
-    every B as if the fleet were uniform while still emitting rate-aware
-    placements — a silently wrong answer.  Plan skewed fleets with
-    :class:`HeterogeneousPlanner` instead.
+    same sojourn sweeps as :class:`SimulatedPlanner`.
+
+    **Rate-aware bootstrap.**  Per-worker rate skew composes with the
+    empirical path: the engine couples each bootstrap resample to the
+    shared draws by rank and divides by the per-worker rate
+    (scaled-quantile coupling, :func:`~repro.core.simulator._unit_times`),
+    and every candidate B is scored under the rate-aware placement the
+    plan actually emits (``worker_batches`` threading).  The one
+    still-unsupported combination — skewed rates with the LEGACY
+    ``speculation_quantiles`` axis — keeps the loud ``ValueError`` guard:
+    express clone triggers as ``PolicyCandidate('clone', q)`` on the
+    policy axis instead.
 
     >>> import numpy as np
     >>> pool = np.random.default_rng(0).lognormal(0.0, 1.0, 2_000)
@@ -943,6 +983,22 @@ class EmpiricalPlanner(SimulatedPlanner):
 
     name = "empirical"
     consumes_empirical = True
+    consumes_rates = True
+
+    def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
+        # only feed rates through when actually skewed: a uniform fleet
+        # keeps the legacy rate-free stream bit-for-bit
+        return np.asarray(spec.rates) if spec.heterogeneous else None
+
+    def _sweep_worker_batches(self, spec: ClusterSpec, splits):
+        """Per-split rate-aware placements, so each candidate B is scored
+        under the worker->set map the plan would actually emit."""
+        if not spec.heterogeneous:
+            return None
+        return tuple(
+            rate_aware_assignment(spec.n_workers, b, spec.rates).worker_batch
+            for b in splits
+        )
 
     def _bootstrap_dists(self, spec: ClusterSpec) -> tuple[Empirical, ...]:
         if self.n_resamples < 1:
@@ -1009,17 +1065,20 @@ class EmpiricalPlanner(SimulatedPlanner):
 
         self._spec_q_by_b = {}
         self._policy_by_b = {}
-        if spec.has_skewed_rates:
+        if spec.has_skewed_rates and objective.speculation_quantiles:
             raise ValueError(
-                "EmpiricalPlanner cannot plan a rate-skewed fleet: the "
-                "bootstrap sweep scores every B as if workers were uniform "
-                "while the emitted placement is rate-aware, which would be "
-                "a silently wrong answer.  Use HeterogeneousPlanner "
-                "(make_planner('heterogeneous')) for skewed specs, or drop "
-                "spec.rates to plan the uniform approximation explicitly."
+                "EmpiricalPlanner cannot combine a rate-skewed fleet with "
+                "the legacy speculation_quantiles axis — express clone "
+                "triggers as PolicyCandidate('clone', q) entries in "
+                "Objective.policies (the policy axis threads the rate-aware "
+                "placement through the bootstrap sweep), or use "
+                "HeterogeneousPlanner (make_planner('heterogeneous'))."
             )
         dists = self._bootstrap_dists(spec)
         splits = spec.feasible_batches()
+        rates = self._sweep_rates(spec)
+        worker_batches = self._sweep_worker_batches(spec, splits)
+        backend = self._resolve_backend()
         if objective.load_aware and objective.policies:
             res = sweep_sojourn_policies(
                 dists,
@@ -1029,8 +1088,11 @@ class EmpiricalPlanner(SimulatedPlanner):
                 n_jobs=self.n_trials,
                 seed=self.seed,
                 feasible_b=splits,
+                rates=rates,
                 job_load=objective.job_load,
                 arrivals=objective.arrivals,
+                backend=backend,
+                worker_batches=worker_batches,
             )
             # each resample scores every B at its best candidate; the
             # candidate REPORTED per B comes from the pooled samples (one
@@ -1095,6 +1157,7 @@ class EmpiricalPlanner(SimulatedPlanner):
                 feasible_b=splits,
                 job_load=objective.job_load,
                 arrivals=objective.arrivals,
+                backend=backend,
             )
             # each resample scores every B at its best trigger; the trigger
             # REPORTED per B comes from the pooled samples (one consistent
@@ -1155,8 +1218,11 @@ class EmpiricalPlanner(SimulatedPlanner):
                 n_jobs=self.n_trials,
                 seed=self.seed,
                 feasible_b=splits,
+                rates=rates,
                 job_load=objective.job_load,
                 arrivals=objective.arrivals,
+                backend=backend,
+                worker_batches=worker_batches,
             )
         else:
             res = sweep_simulate(
@@ -1165,7 +1231,9 @@ class EmpiricalPlanner(SimulatedPlanner):
                 n_trials=self.n_trials,
                 seed=self.seed,
                 feasible_b=splits,
-                backend=self.backend,
+                rates=rates,
+                backend=backend,
+                worker_batches=worker_batches,
             )
         return self._reduce_votes(
             splits,
@@ -1203,6 +1271,7 @@ class EmpiricalPlanner(SimulatedPlanner):
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
+            backend=self._plan_backend(),
             **self._decision_fields(best_b),
             confidence=votes.get(best_b, 0) / total,
             vote_share=tuple(
@@ -1238,12 +1307,9 @@ def make_planner(
         cls = HeterogeneousPlanner if heterogeneous else SimulatedPlanner
         return cls(n_trials=n_trials, seed=seed, backend=backend)
     if mode == "empirical":
-        if heterogeneous:
-            raise ValueError(
-                "rate-aware planning has no empirical path yet — "
-                "EmpiricalPlanner bootstraps the service distribution, not "
-                "per-worker skew; use mode='simulate' with heterogeneous=True"
-            )
+        # heterogeneous is accepted: EmpiricalPlanner consumes rate skew
+        # directly (scaled-quantile coupling + rate-aware placements), so
+        # the knob only matters for mode='analytic'/'simulate' dispatch.
         return EmpiricalPlanner(
             n_trials=n_trials, seed=seed, backend=backend,
             n_resamples=n_resamples,

@@ -11,7 +11,12 @@ actual B decision is NOT made here: the tuner assembles a
 when the predicted improvement clears the Objective's hysteresis threshold
 and a cooldown has elapsed — re-factoring the mesh is not free (it flushes
 compiled executables and reshuffles the data pipeline), so we only move for
-real wins.
+real wins.  With an accelerator-resident sweep backend
+(``TunerConfig.sim_backend='auto'|'jax'|'pallas'``) the sweep itself stops
+being the bottleneck: set ``TunerConfig.replan_time_budget`` and the
+cooldown pacing is waived whenever the measured re-plan time
+(:attr:`StragglerTuner.last_replan_seconds`) comes in under budget —
+hysteresis alone then decides when to move.
 
 Serving feeds three extra telemetry streams: :meth:`StragglerTuner
 .observe_load` (measured batch-job arrival rate), :meth:`StragglerTuner
@@ -41,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 import warnings
 from collections import deque
 from typing import Literal, Optional
@@ -77,8 +83,19 @@ class TunerConfig:
     mode: Literal["analytic", "simulate", "empirical"] = "analytic"
     heterogeneous: bool = False  # feed worker_rates() into the simulated sweep
     sim_trials: int = 4_000
+    # sweep engine for simulated/empirical planners: "numpy", "jax",
+    # "pallas", or "auto" (accelerator when present, numpy otherwise) —
+    # see repro.core.simulator.SWEEP_BACKENDS
     sim_backend: str = "numpy"
     sim_seed: int = 0
+    # wall-clock budget (seconds) for one full re-plan.  The cooldown
+    # exists to amortize EXPENSIVE sweeps; with an accelerator-resident
+    # backend a full re-plan is sub-second, and rate-limiting it only
+    # delays reactions to drift.  When set, any attempt whose measured
+    # plan() time came in at or under this budget stops counting against
+    # the cooldown pacing — re-plans are then gated by hysteresis alone.
+    # None keeps the legacy fixed-cooldown behavior.
+    replan_time_budget: Optional[float] = None
     # SLO trigger: when the observed deadline-miss rate exceeds this target,
     # the hysteresis threshold is waived for the next re-plan (None = off)
     miss_rate_target: Optional[float] = None
@@ -151,6 +168,11 @@ class StragglerTuner:
     # while the gate is off or before the first attempt); class-level default
     # so the attribute is part of the documented API surface
     last_gof: Optional[GofResult] = None
+    # measured wall-clock seconds of the last planner.plan() call (None
+    # before the first attempt).  This is what TunerConfig
+    # .replan_time_budget compares against to decide whether cooldown
+    # pacing is still buying anything.
+    last_replan_seconds: Optional[float] = None
 
     def __init__(
         self,
@@ -229,6 +251,7 @@ class StragglerTuner:
         self.last_fit: Optional[FitResult] = None
         self.last_plan: Optional[Plan] = None
         self.last_gof = None
+        self.last_replan_seconds = None
         self._gof_fallback: Optional[Planner] = None  # lazy EmpiricalPlanner
 
     def observe(
@@ -514,18 +537,38 @@ class StragglerTuner:
             )
         return objective
 
+    def _cooldown_waived(self) -> bool:
+        """Whether re-plan pacing is waived by the measured-time budget.
+
+        True when ``TunerConfig.replan_time_budget`` is set and the last
+        measured ``planner.plan()`` call came in at or under it: the
+        cooldown exists to amortize expensive sweeps, and once the sweep
+        is measured-cheap (accelerator-resident backend) pacing only
+        delays reactions to drift.  Hysteresis still gates the MOVES —
+        only the attempt rate is freed.  The first attempt after
+        construction is never waived (no measurement yet), so a slow
+        numpy sweep can never sneak through on an optimistic default.
+        """
+        budget = self.config.replan_time_budget
+        return (
+            budget is not None
+            and self.last_replan_seconds is not None
+            and self.last_replan_seconds <= budget
+        )
+
     def maybe_replan(self) -> Optional[RescalePlan]:
         """Fit, delegate the B decision to the Planner, and emit a rescale
         plan if the predicted win clears the Objective's hysteresis."""
-        if self._step - self._last_replan < self.config.cooldown_steps:
-            return None
-        # the cooldown also paces plan EVALUATIONS that did not move B: a
-        # load-aware sweep is ~10^2 slower than the closed forms, and
-        # re-scoring the whole spectrum after every observation would make
-        # telemetry ingestion O(sweep).  Attempts that bailed for lack of
-        # data (no fit yet) do not count.
-        if self._step - self._last_attempt < self.config.cooldown_steps:
-            return None
+        if not self._cooldown_waived():
+            if self._step - self._last_replan < self.config.cooldown_steps:
+                return None
+            # the cooldown also paces plan EVALUATIONS that did not move B:
+            # a load-aware sweep is ~10^2 slower than the closed forms, and
+            # re-scoring the whole spectrum after every observation would
+            # make telemetry ingestion O(sweep).  Attempts that bailed for
+            # lack of data (no fit yet) do not count.
+            if self._step - self._last_attempt < self.config.cooldown_steps:
+                return None
         if self.n_samples < self.config.min_samples:
             return None
         x, c = self.window_observations()
@@ -565,7 +608,9 @@ class StragglerTuner:
             )
         else:
             spec = self.cluster_spec(fit)
+        t0 = time.perf_counter()
         plan = planner.plan(spec, objective)
+        self.last_replan_seconds = time.perf_counter() - t0
         self.last_plan = plan
         self._last_attempt = self._step
         if plan.n_batches == self.plan.n_batches:

@@ -1,0 +1,208 @@
+"""jnp cell recursion shared by the vmap and Pallas sweep backends.
+
+:func:`cell_recursion` is the scan formulation documented in
+:mod:`repro.kernels.sojourn_sweep.ref`, written against ``jax.numpy`` so
+the *same* function body runs (a) jit+vmap'd over the cell/policy axes —
+the ``jax`` backend, which is also the ``shard_map`` unit — and (b) as
+the body of a ``pl.pallas_call`` over a ``(cells, policies)`` grid — the
+``pallas`` backend.  Sharing the body is what makes jax↔pallas parity
+structural rather than coincidental.
+
+The Pallas kernel defaults to ``interpret=True`` so tier-1 exercises it
+on CPU.  Compiled-TPU hardening (2-D iota, VMEM-tiled ``(J, G)`` blocks
+for fleet-scale shapes) is deliberately out of scope: on accelerators the
+jit+vmap path is the production backend and the kernel is its
+block-resident counterpart for device-local sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import KIND_CLONE, KIND_HEDGED, KIND_NONE, KIND_RELAUNCH  # noqa: F401
+
+_INT_MAX = 2**31 - 1
+
+
+def cell_recursion(arrivals, svc, alt, kind, threshold, hedge_mask, n_groups,
+                   resolve=True):
+    """Sojourn recursion for one (dist, B, policy) cell, scan-formulated.
+
+    Same contract as :func:`repro.kernels.sojourn_sweep.ref.sojourn_cell_reference`
+    with ``kind``/``threshold``/``n_groups`` as traced scalars; returns
+    ``(out (J,), extra int32)``.
+
+    ``resolve`` is a STATIC flag: pass ``False`` only when no lane in the
+    dispatch can ever arm a trigger (every policy is none/hedged, or every
+    threshold is inf).  In that case the event-resolution pass is an
+    identity — ``trig`` stays inf so ``_resolve_body`` computes ``do ==
+    False`` on its first evaluation and mutates nothing — and skipping it
+    at trace time halves the per-job work without changing a single bit.
+    """
+    dtype = svc.dtype
+    n_jobs, n_g = svc.shape
+    inf = jnp.asarray(jnp.inf, dtype)
+    gidx = jnp.arange(n_g, dtype=jnp.int32)
+    valid = gidx < n_groups
+    threshold = jnp.asarray(threshold, dtype)
+    is_clone = kind == KIND_CLONE
+
+    def _effs(free, doneg, trig):
+        m = jnp.min(jnp.where(valid, free, inf))
+        armed = trig < inf
+
+        def jcond(t):
+            return jnp.any(armed & (t < doneg) & (t < m))
+
+        def jbody(t):
+            return jnp.where(armed & (t < doneg) & (t < m), t + threshold, t)
+
+        jumped = lax.while_loop(jcond, jbody, trig)
+        # A primary departing before its trigger caps the group's next
+        # event at the depart (finalize + disarm), mirroring heap order.
+        eff = jnp.minimum(jnp.where(is_clone, jumped, trig), doneg)
+        eff = jnp.where(armed, eff, inf)
+        return eff, m
+
+    def _resolve_body(state):
+        free, doneg, trig, jobid, out, extra, _ , limit = state
+        eff, m = _effs(free, doneg, trig)
+        t_min = jnp.min(eff)
+        g = jnp.argmin(jnp.where(eff == t_min, jobid, _INT_MAX))
+        t = eff[g]
+        jid = jobid[g]
+        d = doneg[g]
+        disarm = t >= d
+        start = jnp.maximum(limit, m)
+        # t_min == inf means nothing is armed (guards the drain, where
+        # limit == inf would otherwise satisfy the disarm clause forever).
+        do = (t_min < start) | ((t_min <= start) & disarm & (t_min < inf))
+        idle = valid & (free <= t)
+        h = jnp.argmin(jnp.where(idle, free, inf))
+        done_fire = jnp.where(is_clone,
+                              jnp.minimum(d, t + alt[jid, h]),
+                              t + alt[jid, g])
+        done_new = jnp.where(disarm, d, done_fire)
+        clone_set = do & ~disarm & is_clone
+        free_n = free.at[g].set(done_new)
+        free_n = jnp.where(clone_set & (gidx == h), done_new, free_n)
+        free_n = jnp.where(do, free_n, free)
+        doneg_n = jnp.where(do, doneg.at[g].set(done_new), doneg)
+        trig_n = jnp.where(do, trig.at[g].set(inf), trig)
+        out_n = jnp.where(do, out.at[jid].set(done_new - arrivals[jid]), out)
+        extra_n = extra + jnp.where(do & ~disarm, 1, 0).astype(jnp.int32)
+        return free_n, doneg_n, trig_n, jobid, out_n, extra_n, do, limit
+
+    def _resolve(carry, limit):
+        if not resolve:
+            return carry
+        state = carry + (jnp.asarray(True), limit)
+        state = lax.while_loop(lambda s: s[6], _resolve_body, state)
+        return state[:6]
+
+    armed_policy = ((kind == KIND_CLONE) | (kind == KIND_RELAUNCH)) & (
+        threshold < inf)
+
+    def _step(i, carry):
+        carry = _resolve(carry, arrivals[i])
+        free, doneg, trig, jobid, out, extra = carry
+        a = arrivals[i]
+        m = jnp.min(jnp.where(valid, free, inf))
+        start = jnp.maximum(a, m)
+        g = jnp.argmin(jnp.where(valid, free, inf))
+        d0 = start + svc[i, g]
+        idle = valid & (free <= start) & (gidx != g)
+        h = jnp.argmin(jnp.where(idle, free, inf))
+        do_hedge = (kind == KIND_HEDGED) & hedge_mask[i] & jnp.any(idle)
+        d_final = jnp.where(do_hedge, jnp.minimum(d0, start + alt[i, h]), d0)
+        d_primary = jnp.where(armed_policy, d0, d_final)
+        free_n = free.at[g].set(d_primary)
+        free_n = jnp.where(do_hedge & (gidx == h), d_final, free_n)
+        doneg_n = doneg.at[g].set(d_primary)
+        trig_n = trig.at[g].set(jnp.where(armed_policy, start + threshold, inf))
+        jobid_n = jobid.at[g].set(i)
+        out_n = jnp.where(armed_policy, out, out.at[i].set(d_final - a))
+        extra_n = extra + jnp.where(do_hedge, 1, 0).astype(jnp.int32)
+        return free_n, doneg_n, trig_n, jobid_n, out_n, extra_n
+
+    carry = (
+        jnp.where(valid, jnp.zeros(n_g, dtype), inf),
+        jnp.zeros(n_g, dtype),
+        jnp.full(n_g, inf, dtype),
+        jnp.full(n_g, _INT_MAX, dtype=jnp.int32),
+        jnp.zeros(n_jobs, dtype),
+        jnp.asarray(0, jnp.int32),
+    )
+    carry = lax.fori_loop(0, n_jobs, _step, carry)
+    carry = _resolve(carry, inf)
+    return carry[4], carry[5]
+
+
+def _cells_fn(arrivals, svc, alt, kinds, thresholds, hedge_masks, n_groups,
+              resolve=True):
+    """vmap the cell recursion over (cells, policies); svc shared across P."""
+
+    def per_cell(svc_c, alt_c, thr_c, ng_c):
+        def per_policy(kind, thr, hmask):
+            return cell_recursion(arrivals, svc_c, alt_c, kind, thr, hmask,
+                                  ng_c, resolve=resolve)
+
+        return jax.vmap(per_policy)(kinds, thr_c, hedge_masks)
+
+    return jax.vmap(per_cell, in_axes=(0, 0, 0, 0))(svc, alt, thresholds,
+                                                    n_groups)
+
+
+sojourn_cells_vmap = jax.jit(_cells_fn, static_argnames=("resolve",))
+
+
+def _sojourn_kernel(arr_ref, svc_ref, alt_ref, kind_ref, thr_ref, hmask_ref,
+                    ng_ref, out_ref, extra_ref, *, resolve=True):
+    out, extra = cell_recursion(
+        arr_ref[...],
+        svc_ref[0],
+        alt_ref[0],
+        kind_ref[0],
+        thr_ref[0, 0],
+        hmask_ref[0],
+        ng_ref[0],
+        resolve=resolve,
+    )
+    out_ref[0, 0, :] = out
+    extra_ref[0, 0] = extra
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "resolve"))
+def sojourn_cells_pallas(arrivals, svc, alt, kinds, thresholds, hedge_masks,
+                         n_groups, interpret=True, resolve=True):
+    """Pallas grid over (cells, policies); one cell recursion per program."""
+    n_cells, n_jobs, n_g = svc.shape
+    n_pol = kinds.shape[0]
+    grid = (n_cells, n_pol)
+    return pl.pallas_call(
+        functools.partial(_sojourn_kernel, resolve=resolve),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_jobs,), lambda c, p: (0,)),
+            pl.BlockSpec((1, n_jobs, n_g), lambda c, p: (c, 0, 0)),
+            pl.BlockSpec((1, n_jobs, n_g), lambda c, p: (c, 0, 0)),
+            pl.BlockSpec((1,), lambda c, p: (p,)),
+            pl.BlockSpec((1, 1), lambda c, p: (c, p)),
+            pl.BlockSpec((1, n_jobs), lambda c, p: (p, 0)),
+            pl.BlockSpec((1,), lambda c, p: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_jobs), lambda c, p: (c, p, 0)),
+            pl.BlockSpec((1, 1), lambda c, p: (c, p)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_cells, n_pol, n_jobs), svc.dtype),
+            jax.ShapeDtypeStruct((n_cells, n_pol), jnp.int32),
+        ],
+        interpret=interpret,
+    )(arrivals, svc, alt, kinds, thresholds, hedge_masks, n_groups)

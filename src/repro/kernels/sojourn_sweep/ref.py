@@ -1,0 +1,196 @@
+"""Numpy reference for the scan-formulated sojourn/policy cell recursion.
+
+The event-driven recursions in ``repro.core.simulator`` (heap of
+arrive/depart/trigger events) are re-expressed here as a **job-ordered
+scan**, which is what the jnp/Pallas kernels implement.  The two are
+exactly equivalent under the simulator's FIFO master:
+
+* jobs dispatch in arrival order, so the scan axis is the job index;
+* between two dispatches the replica-set ``free`` times are piecewise
+  constant except at trigger firings, so "some set is idle at t" is just
+  ``min(free) <= t`` — no event queue is needed to answer it;
+* a clone trigger armed at ``trig`` with re-arm period ``threshold``
+  fires at the first re-arm instant with an idle set and disarms if the
+  primary departs first, so its effective fire time is found by stepping
+  ``t += threshold`` while ``t < done`` and ``t < min(free)`` — the same
+  float additions the event loop performs, which is what makes the f64
+  outputs *bit-identical* to the event-driven recursions (pinned in
+  ``tests/test_sojourn_kernel.py``);
+* armed triggers across sets are resolved chronologically (ties broken
+  by job id, matching the event heap's push-order sequence numbers)
+  before each dispatch, and drained after the last one.
+
+Policy kinds are encoded as integers shared with the jnp kernels:
+``0=none, 1=clone, 2=relaunch, 3=hedged``.  Hedge decisions are supplied
+as a precomputed per-job boolean mask (the deterministic-stride rule
+``floor((n+1)f) > floor(nf)`` evaluated in f64 on the host) so the f32
+device path cannot diverge from the f64 reference on the stride
+arithmetic.
+
+All arithmetic stays in the dtype of the inputs (numpy scalar ops do not
+upcast), so the same code doubles as the f32 oracle for the jnp backends.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+KIND_NONE = 0
+KIND_CLONE = 1
+KIND_RELAUNCH = 2
+KIND_HEDGED = 3
+
+
+def _effective_fire_times(free, doneg, trig, kind, threshold, inf):
+    """Effective next-event time of each armed trigger under current state.
+
+    For relaunch the trigger fires unconditionally at ``trig``; for clone
+    at the first re-arm instant with an idle set (``min(free)`` at or
+    below it).  If the primary departs first the group's next event is the
+    *depart* at ``doneg`` (which finalizes the job and disarms), so the
+    effective time is capped at ``doneg`` — the event heap processes the
+    depart before any later re-arm check.
+    """
+    m = np.min(free)
+    eff = trig.copy()
+    if kind == KIND_CLONE:
+        for g in range(len(trig)):
+            t = trig[g]
+            while t < doneg[g] and t < m:
+                t = t + threshold
+            eff[g] = t
+    return np.minimum(eff, doneg), m
+
+
+def _resolve_events(free, doneg, trig, jobid, out, arrivals, alt, kind,
+                    threshold, limit_arrival, inf, extra):
+    """Fire/disarm armed triggers chronologically up to the next dispatch.
+
+    ``limit_arrival`` is the pending job's arrival time (``inf`` to drain
+    after the last dispatch); the next dispatch happens at
+    ``max(limit_arrival, min(free))``, re-evaluated after every firing
+    because clones raise ``min(free)`` and relaunches can lower it.
+    """
+    while True:
+        armed = np.isfinite(trig)
+        if not armed.any():
+            return extra
+        eff, m = _effective_fire_times(free, doneg, trig, kind, threshold, inf)
+        eff = np.where(armed, eff, inf)
+        start = max(limit_arrival, m)
+        t_min = eff.min()
+        # Earliest event; ties broken by job id (event-heap push order).
+        cand = np.flatnonzero(eff == t_min)
+        g = cand[np.argmin(jobid[cand])]
+        t = eff[g]
+        jid = int(jobid[g])
+        # Fires happen strictly before the next dispatch; departs (disarm +
+        # finalize) also at the dispatch instant itself — the heap orders a
+        # depart ahead of the dispatch it enables.
+        disarm = t >= doneg[g]
+        if not (t_min < start or (t_min <= start and disarm)):
+            return extra
+        if disarm:
+            done_new = doneg[g]           # primary departed first: disarm
+        elif kind == KIND_CLONE:
+            idle = np.flatnonzero(free <= t)
+            h = idle[np.argmin(free[idle])]
+            done_new = min(doneg[g], t + alt[jid, h])
+            free[h] = done_new
+            extra += 1
+        else:                             # KIND_RELAUNCH: cancel + fresh draw
+            done_new = t + alt[jid, g]
+            extra += 1
+        free[g] = done_new
+        doneg[g] = done_new
+        trig[g] = inf
+        out[jid] = done_new - arrivals[jid]
+
+
+def sojourn_cell_reference(arrivals, svc, alt, kind, threshold, hedge_mask,
+                           n_groups):
+    """Scan-formulated sojourn recursion for one (dist, B, policy) cell.
+
+    Parameters
+    ----------
+    arrivals : (J,) float array of absolute arrival times (non-decreasing).
+    svc, alt : (J, G) float arrays of primary / redundant service draws per
+        replica set; only the first ``n_groups`` columns are read.
+    kind : int policy code (``KIND_*``).
+    threshold : float trigger delay for clone/relaunch (``inf`` disables).
+    hedge_mask : (J,) bool array — job i dispatches a hedge iff set (only
+        read for ``KIND_HEDGED``).
+    n_groups : int number of replica sets ``B``.
+
+    Returns
+    -------
+    (out, extra) : (J,) float sojourn times and the int count of extra
+        (clone / relaunch / hedge) dispatches.
+    """
+    arrivals = np.asarray(arrivals)
+    svc = np.asarray(svc)
+    alt = np.asarray(alt)
+    dtype = svc.dtype
+    n_jobs = arrivals.shape[0]
+    inf = dtype.type(np.inf)
+    threshold = dtype.type(threshold)
+
+    free = np.zeros(n_groups, dtype=dtype)
+    doneg = np.zeros(n_groups, dtype=dtype)
+    trig = np.full(n_groups, inf, dtype=dtype)
+    jobid = np.full(n_groups, -1, dtype=np.int64)
+    out = np.zeros(n_jobs, dtype=dtype)
+    extra = 0
+    armed_policy = kind in (KIND_CLONE, KIND_RELAUNCH) and np.isfinite(threshold)
+
+    for i in range(n_jobs):
+        a = arrivals[i]
+        if armed_policy:
+            extra = _resolve_events(free, doneg, trig, jobid, out, arrivals,
+                                    alt, kind, threshold, a, inf, extra)
+        start = max(a, free.min())
+        g = int(np.argmin(free))          # lowest index among ties
+        done = start + svc[i, g]
+        if armed_policy:
+            free[g] = done
+            doneg[g] = done
+            trig[g] = start + threshold
+            jobid[g] = i
+            continue
+        if kind == KIND_HEDGED and hedge_mask[i]:
+            idle = np.flatnonzero(free <= start)
+            idle = idle[idle != g]
+            if idle.size:
+                h = idle[np.argmin(free[idle])]
+                done = min(done, start + alt[i, h])
+                free[h] = done
+                extra += 1
+        free[g] = done
+        out[i] = done - a
+
+    if armed_policy:
+        extra = _resolve_events(free, doneg, trig, jobid, out, arrivals, alt,
+                                kind, threshold, inf, inf, extra)
+    return out, extra
+
+
+def sojourn_cells_reference(arrivals, svc, alt, kinds, thresholds,
+                            hedge_masks, n_groups):
+    """Batched reference: all (cell, policy) pairs via the scalar kernel.
+
+    Shapes mirror :func:`repro.kernels.sojourn_sweep.ops.sojourn_policy_cells`:
+    ``svc``/``alt`` are (C, J, G), ``thresholds`` is (C, P), ``kinds`` and
+    ``hedge_masks`` are per-policy ((P,) and (P, J)), ``n_groups`` is (C,).
+    Returns ``(out (C, P, J), extra (C, P))``.
+    """
+    svc = np.asarray(svc)
+    n_cells, n_jobs, _ = svc.shape
+    n_pol = len(kinds)
+    out = np.zeros((n_cells, n_pol, n_jobs), dtype=svc.dtype)
+    extra = np.zeros((n_cells, n_pol), dtype=np.int64)
+    for c in range(n_cells):
+        for p in range(n_pol):
+            out[c, p], extra[c, p] = sojourn_cell_reference(
+                arrivals, svc[c], alt[c], int(kinds[p]),
+                thresholds[c][p], hedge_masks[p], int(n_groups[c]))
+    return out, extra

@@ -93,6 +93,15 @@ class ServeEngineConfig:
     metric: Metric = "mean"
     planner_mode: str = "analytic"  # 'analytic' | 'simulate' | 'empirical'
     plan_initial: bool = False
+    # sweep engine for simulation-capable planner modes: 'numpy', 'jax',
+    # 'pallas', or 'auto' (accelerator when present, else numpy) — see
+    # repro.core.simulator.SWEEP_BACKENDS.  'analytic' mode ignores it.
+    sim_backend: str = "numpy"
+    # wall-clock budget (seconds) for one re-plan: when the tuner measures
+    # planner.plan() at or under this, re-plan cooldown pacing is waived
+    # and hysteresis alone gates moves (TunerConfig.replan_time_budget).
+    # Pair with an accelerator sim_backend; None keeps fixed cooldown.
+    replan_time_budget: Optional[float] = None
     # goodness-of-fit gate: KS-test the parametric fit against the observed
     # service-time window at this significance; a rejected fit makes the
     # tuner re-plan through the empirical path for that attempt (None = off)
@@ -201,7 +210,8 @@ class ReplicatedServingEngine:
         # the objective is load-aware), so size it like the tuner's default
         # sim budget rather than the offline 20k-trial analysis default
         self.planner = make_planner(
-            mode=sc.planner_mode, n_trials=4_000, seed=sc.seed
+            mode=sc.planner_mode, n_trials=4_000, seed=sc.seed,
+            backend=sc.sim_backend,
         )
         if sc.plan_initial:
             n_batches = self.planner.plan(
@@ -223,7 +233,8 @@ class ReplicatedServingEngine:
             TunerConfig(
                 window_steps=256, min_samples=64, cooldown_steps=16,
                 metric=sc.metric, miss_rate_target=sc.miss_rate_target,
-                gof_alpha=sc.gof_alpha,
+                gof_alpha=sc.gof_alpha, sim_backend=sc.sim_backend,
+                replan_time_budget=sc.replan_time_budget,
             ),
             planner=self.planner,
             job_load=self._work(sc.batch_size),

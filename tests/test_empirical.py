@@ -282,8 +282,9 @@ def test_make_planner_empirical_mode():
     p = make_planner("empirical", n_trials=500, seed=7, n_resamples=9)
     assert isinstance(p, EmpiricalPlanner)
     assert p.n_trials == 500 and p.n_resamples == 9
-    with pytest.raises(ValueError):
-        make_planner("empirical", heterogeneous=True)
+    # heterogeneous composes since the rate-aware bootstrap (PR 8)
+    het = make_planner("empirical", heterogeneous=True)
+    assert isinstance(het, EmpiricalPlanner) and het.consumes_rates
 
 
 @pytest.mark.slow

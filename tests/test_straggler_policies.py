@@ -321,18 +321,32 @@ def test_master_agrees_with_recursion_per_policy(candidate):
 
 # -- bugfix regressions -------------------------------------------------------
 
-def test_empirical_planner_rejects_skewed_rates():
-    """BUGFIX pin: EmpiricalPlanner used to silently score a rate-skewed
-    fleet as uniform while emitting rate-aware placements.  It must now
-    fail loudly and point at HeterogeneousPlanner."""
+def test_empirical_planner_rate_aware_bootstrap():
+    """EmpiricalPlanner consumes rate skew directly (PR 8): the bootstrap
+    sweep couples each resample to the shared draws divided by per-worker
+    rates and scores every B under the rate-aware placement the plan
+    emits.  Only the LEGACY speculation_quantiles axis keeps the loud
+    guard (pointing at the policy axis / HeterogeneousPlanner)."""
     spec = ClusterSpec(
         n_workers=8, dist=Exponential(mu=2.0),
         rates=tuple(np.linspace(0.5, 1.5, 8)),
     )
     assert spec.has_skewed_rates
-    planner = EmpiricalPlanner(n_trials=200, seed=0, n_resamples=2)
+    planner = EmpiricalPlanner(n_trials=400, seed=0, n_resamples=2)
+    plan = planner.plan(spec, Objective(metric="mean"))
+    assert plan.n_batches in (1, 2, 4, 8)
+    assert len(plan.assignment.worker_batch) == 8
+    # skew actually reaches the scoring: a uniform twin scores differently
+    uniform = dataclasses.replace(spec, rates=None)
+    plan_u = planner.plan(uniform, Objective(metric="mean"))
+    assert plan.score != plan_u.score
+    # the one unsupported combo still fails loudly
     with pytest.raises(ValueError, match="HeterogeneousPlanner"):
-        planner.plan(spec, Objective(metric="mean"))
+        planner.plan(
+            spec,
+            Objective(metric="p99", utilization=0.5,
+                      speculation_quantiles=(0.9,)),
+        )
     # uniform fleets still plan fine
     ok = ClusterSpec(n_workers=8, dist=Exponential(mu=2.0))
     assert EmpiricalPlanner(
