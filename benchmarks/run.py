@@ -8,6 +8,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_cluster,
+        bench_coding,
         bench_collectives,
         bench_fig2_spectrum,
         bench_gradient_coding,
@@ -34,6 +35,7 @@ def main() -> None:
         bench_collectives,
         bench_serving_latency,
         bench_gradient_coding,
+        bench_coding,
         bench_roofline,
         bench_cluster,
     ]

@@ -17,6 +17,8 @@ from repro.cluster.coordinator import (
 )
 from repro.cluster.harness import LocalCluster, reap_orphans
 from repro.cluster.payloads import (
+    coded_data_blocks,
+    make_coded_spec,
     make_deterministic_spec,
     make_matmul_spec,
     make_sleep_spec,
@@ -38,6 +40,8 @@ __all__ = [
     "WorkerHandle",
     "LocalCluster",
     "reap_orphans",
+    "coded_data_blocks",
+    "make_coded_spec",
     "make_deterministic_spec",
     "make_matmul_spec",
     "make_sleep_spec",

@@ -33,6 +33,19 @@ survivors, and a worker that reappears (SIGCONT after a flap) or registers
 late is folded in at the next quiesce point — its stale results are
 ignored, so a flap can never double-complete a batch.
 
+Coded mode.  With ``ClusterConfig.coding`` set the dispatch fabric flips
+from first-replica-wins to a k-of-n RESULT quorum: the fleet forms ONE
+group of all N workers, each DISPATCH carries a per-worker coefficient row
+of the scheme's encode matrix (cyclic gradient coding or the real-valued
+MDS/polynomial Vandermonde — :mod:`repro.core.coding`), workers regenerate
+the data blocks from a seed and return their coded partial, and the
+coordinator decodes as soon as ANY ``k = N - s`` distinct partials arrive —
+verifying the decoded value against the ground truth it recomputes locally
+— then CANCELs the ``s`` stragglers.  Coding IS the straggler mitigation
+here, so speculative policies and the B-retuning loop are rejected at
+config time; worker deaths shrink the fleet and the code is rebuilt for
+the survivors at the same drain-then-swap point.
+
 Telemetry closes the loop: measured completions (cancellation- and
 kill-censored) feed :meth:`~repro.core.tuner.StragglerTuner.observe_tagged`,
 formation rates feed ``observe_load``, sojourns feed ``observe_sojourn`` —
@@ -56,10 +69,17 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.cluster import protocol
-from repro.cluster.payloads import make_sleep_spec
+from repro.cluster.payloads import (
+    coded_data_blocks,
+    make_coded_spec,
+    make_sleep_spec,
+)
 from repro.core import (
     ClusterSpec,
+    CodingCandidate,
+    CyclicGradientCode,
     Exponential,
+    MDSCode,
     Metric,
     Objective,
     PolicyCandidate,
@@ -94,19 +114,19 @@ def payload_prior(spec: dict) -> ServiceDistribution:
     model at all until the tuner fits one from telemetry.
     """
     kind = spec["kind"]
-    if kind == "sleep":
+    if kind == "sleep" or (kind == "coded" and spec.get("family")):
         if spec["family"] == "sexp":
             return ShiftedExponential(delta=spec["delta"], mu=spec["mu"])
         return Exponential(mu=spec["mu"])
     if kind == "deterministic":
         return ShiftedExponential(delta=1.0, mu=1e3)
-    return Exponential(mu=1.0)  # matmul: fit from telemetry
+    return Exponential(mu=1.0)  # matmul / bare coded: fit from telemetry
 
 
 def payload_work_units(spec: dict) -> float:
     """Nominal work units of one payload (telemetry normalization)."""
     kind = spec["kind"]
-    if kind == "sleep":
+    if kind in ("sleep", "coded"):
         return float(spec["work"])
     if kind == "deterministic":
         return float(spec["duration"])
@@ -116,7 +136,7 @@ def payload_work_units(spec: dict) -> float:
 def scale_payload(spec: dict, factor: int) -> dict:
     """The per-BATCH payload of ``factor`` requests sharing one dispatch."""
     kind = spec["kind"]
-    if kind == "sleep":
+    if kind in ("sleep", "coded"):
         return {**spec, "work": spec["work"] * factor}
     if kind == "deterministic":
         return {**spec, "duration": spec["duration"] * factor}
@@ -155,6 +175,12 @@ class ClusterConfig:
     policy_candidates: Optional[tuple[PolicyCandidate, ...]] = None
     clone_budget: int = 1
     min_policy_observations: int = 8  # empirical trigger calibration gate
+    # coded mode: k-of-n quorum dispatch instead of first-replica-wins
+    # (module docstring); requires a sleep payload (the timing model the
+    # coded partials ride on), and excludes the tuner + speculative
+    # policies — the code IS the straggler mitigation
+    coding: Optional[CodingCandidate] = None
+    coding_block_dim: int = 8  # data-block width (RESULT value length)
     seed: int = 0
 
     def __post_init__(self):
@@ -176,6 +202,38 @@ class ClusterConfig:
                 "heartbeat_timeout must exceed heartbeat_interval "
                 f"({self.heartbeat_timeout} <= {self.heartbeat_interval})"
             )
+        if self.coding is not None:
+            if not isinstance(self.coding, CodingCandidate):
+                raise TypeError(
+                    "coding must be a repro.core.CodingCandidate, "
+                    f"got {type(self.coding).__name__}"
+                )
+            self.coding.k(self.n_workers)  # s < N or ValueError
+            if self.n_batches not in (None, 1):
+                raise ValueError(
+                    "coded dispatch uses ONE group of all workers; "
+                    f"n_batches={self.n_batches} conflicts (use None or 1)"
+                )
+            if self.tuner:
+                raise ValueError(
+                    "coded dispatch pins B=1; the tuner's (B, policy) "
+                    "re-planning loop cannot run alongside it"
+                )
+            if self.policy is not None or self.policy_candidates:
+                raise ValueError(
+                    "coding IS the straggler mitigation: speculative "
+                    "policies cannot run alongside the k-of-n quorum"
+                )
+            if self.payload.get("kind") != "sleep":
+                raise ValueError(
+                    "coded runs take a sleep payload as the per-unit "
+                    f"timing model, got kind={self.payload.get('kind')!r}"
+                )
+            if self.coding_block_dim < 1:
+                raise ValueError(
+                    f"coding_block_dim must be >= 1, got "
+                    f"{self.coding_block_dim}"
+                )
 
 
 @dataclasses.dataclass
@@ -209,6 +267,9 @@ class AttemptRecord:
     kind: str  # 'primary'|'clone'|'relaunch'|'hedge'|'redispatch'
     active: bool = True
     reported: dict[int, float] = dataclasses.field(default_factory=dict)
+    # coded mode: worker -> coded partial (the RESULT value); the attempt
+    # decodes once k distinct partials have landed
+    values: dict[int, list] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -224,6 +285,7 @@ class ClusterJob:
     winner_attempt: int = -1
     n_relaunches: int = 0
     n_dispatches: int = 0  # DISPATCH messages sent for this job (all attempts)
+    decoded: Optional[list] = None  # coded mode: the verified decoded value
 
     @property
     def size(self) -> int:
@@ -312,8 +374,17 @@ class ClusterCoordinator:
             mode=config.planner_mode, n_trials=2_000, seed=config.seed
         )
         self.tuner: Optional[StragglerTuner] = None  # built with the fleet
+        # coded mode (built with each generation; None when coding is off)
+        self._code = None  # CyclicGradientCode | MDSCode
+        self._code_rows: Optional[np.ndarray] = None  # (N, n_blocks)
+        self._code_target: Optional[np.ndarray] = None  # ground truth
+        self._code_slot: dict[int, int] = {}  # worker id -> encode row
+        self._code_k = 0  # quorum size
+        self._code_load = 0.0  # per-worker data units (of N total)
         # counters / event log
         self.completed_jobs: list[ClusterJob] = []
+        self.decoded_jobs = 0
+        self.decode_failures = 0
         self.stale_results = 0
         self.redispatches = 0
         self.clones = 0
@@ -369,7 +440,12 @@ class ClusterCoordinator:
     def _build_initial_generation(self) -> None:
         live = self.live_workers()
         n = len(live)
-        if self.config.n_batches is not None and n % self.config.n_batches == 0:
+        if self.config.coding is not None:
+            b = 1  # coded quorum: one group of all workers
+        elif (
+            self.config.n_batches is not None
+            and n % self.config.n_batches == 0
+        ):
             b = self.config.n_batches
         else:
             b = self.planner.plan(
@@ -421,6 +497,8 @@ class ClusterCoordinator:
         ]
         self._group_attempts = {g: 0 for g in range(n_batches)}
         self._slots = list(live)
+        if self.config.coding is not None:
+            self._build_code(live)
         self.fault = FaultManager(
             ReplicationPlan(n_data=len(live), n_batches=n_batches),
             heartbeat_misses_fatal=1,
@@ -436,6 +514,41 @@ class ClusterCoordinator:
             self._send(w, msg)
         self._log("generation", {"gen": self.generation, "B": n_batches,
                                  "workers": list(live)})
+
+    def _build_code(self, live: Sequence[int]) -> None:
+        """(Re)build the encode matrix + ground truth for ``live`` workers.
+
+        Runs at every generation install: deaths shrink the fleet, so the
+        code is recut for the survivors (``s`` clamps to N-1 when the fleet
+        falls below the configured tolerance).  Worker -> encode-row binding
+        goes through ``_code_slot`` so rows stay stable within a generation
+        even when a member dies before a dispatch.
+        """
+        cand = self.config.coding
+        n = len(live)
+        s = min(cand.s, n - 1)
+        k = n - s
+        if cand.scheme == "cyclic":
+            self._code = CyclicGradientCode(
+                n_workers=n, s=s, seed=self.config.seed
+            )
+            rows = self._code.coefficients()  # (N, N) over N blocks
+            n_blocks, self._code_load = n, float(s + 1)
+        else:  # mds / poly share the Vandermonde k-of-n geometry
+            self._code = MDSCode(n=n, k=k)
+            rows = self._code.generator()  # (N, k) over k blocks
+            n_blocks, self._code_load = k, n / k
+        blocks = coded_data_blocks(
+            self.config.seed, n_blocks, self.config.coding_block_dim
+        )
+        self._code_rows = rows
+        self._code_target = (
+            blocks.sum(axis=0) if cand.scheme == "cyclic" else blocks
+        )
+        self._code_slot = {w: i for i, w in enumerate(sorted(live))}
+        self._code_k = k
+        self._log("code", {"scheme": cand.scheme, "n": n, "k": k,
+                           "load": self._code_load})
 
     # -- socket plumbing -----------------------------------------------------
     def _send(self, worker_id: int, msg: dict) -> None:
@@ -583,6 +696,44 @@ class ClusterCoordinator:
             # was retired (relaunch/flap) — never double-complete
             self.stale_results += 1
             return
+        if self.config.coding is not None:
+            self._on_coded_result(job, attempt, wid, msg)
+            return
+        self._complete_job(job, attempt, wid, float(msg["elapsed"]))
+
+    def _on_coded_result(
+        self, job: ClusterJob, attempt: AttemptRecord, wid: int, msg: dict
+    ) -> None:
+        """k-of-n quorum: bank the partial; at k distinct partials decode,
+        verify against the locally-recomputed ground truth, complete the
+        job (which CANCELs the stragglers) with the k-th reporter as the
+        winner — its arrival IS the completion instant."""
+        value = msg.get("value")
+        if value is not None and wid in self._code_slot:
+            attempt.values[wid] = value
+        if len(attempt.values) < self._code_k:
+            return
+        reporters = sorted(attempt.values, key=self._code_slot.__getitem__)
+        alive = np.zeros(len(self._code_slot), dtype=bool)
+        alive[[self._code_slot[w] for w in reporters]] = True
+        partials = np.asarray([attempt.values[w] for w in reporters])
+        weights = self._code.decode_weights(alive)
+        decoded = None if weights is None else (
+            weights @ partials
+            if self.config.coding.scheme == "cyclic"
+            else np.tensordot(weights, partials, axes=(1, 0))
+        )
+        ok = decoded is not None and np.allclose(
+            decoded, self._code_target, atol=1e-6
+        )
+        if not ok and len(attempt.values) < len(attempt.workers):
+            return  # rank-deficient quorum: wait for another partial
+        if ok:
+            self.decoded_jobs += 1
+            job.decoded = np.asarray(decoded).tolist()
+        else:
+            self.decode_failures += 1
+            self._log("decode-failure", job.job_id)
         self._complete_job(job, attempt, wid, float(msg["elapsed"]))
 
     # -- dispatch ------------------------------------------------------------
@@ -703,7 +854,11 @@ class ClusterCoordinator:
                     "job_id": job.job_id,
                     "attempt": attempt.attempt_id,
                     "batch_id": job.job_id,
-                    "payload": payload,
+                    "payload": (
+                        self._coded_payload(w, job.size)
+                        if self.config.coding is not None
+                        else payload
+                    ),
                     "seed": seed,
                     "deadline": deadline if math.isfinite(deadline) else None,
                 },
@@ -714,6 +869,23 @@ class ClusterCoordinator:
             for req in job.requests:
                 if math.isnan(req.dispatched):
                     req.dispatched = attempt.dispatched
+
+    def _coded_payload(self, worker_id: int, n_requests: int) -> dict:
+        """This worker's coded DISPATCH payload: its encode row plus the
+        sleep timing model at the coded per-worker load (a ``load(N)/N``
+        share of the batch's total work — the planner's size-dependent
+        service geometry on the wall clock)."""
+        base = self.config.payload
+        n = len(self._code_slot)
+        return make_coded_spec(
+            self._code_rows[self._code_slot[worker_id]],
+            data_seed=self.config.seed,
+            block_dim=self.config.coding_block_dim,
+            family=base["family"],
+            delta=base["delta"],
+            mu=base["mu"],
+            work=base["work"] * n_requests * self._code_load / n,
+        )
 
     # -- straggler policy ----------------------------------------------------
     def _policy_obj(self):
@@ -939,7 +1111,14 @@ class ClusterCoordinator:
                     live = [
                         w for w in attempt.workers if self.workers[w].alive
                     ]
-                    if not live:
+                    if self.config.coding is not None:
+                        # banked partials outlive their reporter; the
+                        # attempt dies only when the quorum is unreachable
+                        reachable = set(attempt.values) | set(live)
+                        if len(reachable) < self._code_k:
+                            self._retire_attempt(job, attempt,
+                                                 censor_at=self.now())
+                    elif not live:
                         self._retire_attempt(job, attempt,
                                              censor_at=self.now())
             if job.attempts and not job.active_attempts():
@@ -973,7 +1152,11 @@ class ClusterCoordinator:
         target = self._target_batches
         self._target_batches = None
         fleet_changed = sorted(live) != sorted(self._slots)
-        if target is not None and n % target == 0 and not fleet_changed:
+        if self.config.coding is not None:
+            # coded quorum keeps ONE group whatever the fleet size; the
+            # code itself is recut for the survivors in _install_generation
+            topo = self.executor.apply_replan(1)
+        elif target is not None and n % target == 0 and not fleet_changed:
             topo = self.executor.apply_replan(target)
         elif "death" in reasons and self.fault is not None and not any(
             r in ("join", "rejoin") for r in reasons
@@ -1080,5 +1263,12 @@ class ClusterCoordinator:
             "hedges": self.hedges,
             "replans": self.replans,
             "policy": self.policy.kind if self.policy is not None else "none",
+            "coding": (
+                self.config.coding.describe()
+                if self.config.coding is not None
+                else "none"
+            ),
+            "decoded_jobs": self.decoded_jobs,
+            "decode_failures": self.decode_failures,
         }
         return out

@@ -15,6 +15,17 @@ wall-clock elapsed time.  Three kinds:
   on an (n x n) shard, for runs where the "service distribution" must come
   from actual hardware contention rather than a model.  JAX is imported
   lazily so sleep/deterministic workers never pay the import.
+* ``coded``         — the coded-computation data plane: the worker
+  regenerates the job's data blocks from ``data_seed`` (data never rides
+  the wire — only the spec does), applies its per-worker coefficient
+  ``row`` (one row of the scheme's encode matrix, shipped in DISPATCH),
+  and returns the coded partial combination as its RESULT value.  The
+  coordinator decodes once ANY k of the N partials arrive
+  (:meth:`repro.core.coding.MDSCode.decode_weights` /
+  :meth:`repro.core.gradient_coding.CyclicGradientCode.decode_weights`)
+  and cancels the stragglers — a k-of-n quorum instead of
+  first-replica-wins.  An optional embedded sleep model supplies the
+  straggler service time on top of the (tiny) real combination.
 
 Cancellation: payloads poll a :class:`threading.Event` (sleeps wait ON it),
 so a CANCEL interrupts within one slice.  A chaos slowdown factor
@@ -32,7 +43,8 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["make_sleep_spec", "make_deterministic_spec", "make_matmul_spec",
-           "payload_duration", "run_payload"]
+           "make_coded_spec", "coded_data_blocks", "payload_duration",
+           "run_payload"]
 
 _SLICE = 0.02  # max uninterruptible wait (s): bounds cancel latency
 
@@ -75,6 +87,65 @@ def make_matmul_spec(size: int = 256, repeats: int = 4) -> dict:
     return {"kind": "matmul", "size": int(size), "repeats": int(repeats)}
 
 
+def coded_data_blocks(
+    data_seed: int, n_blocks: int, block_dim: int
+) -> np.ndarray:
+    """(n_blocks, block_dim) data blocks regenerated from ``data_seed``.
+
+    Coordinator and every worker call this with identical arguments, so the
+    coded data plane ships only a seed — the blocks themselves never cross
+    the wire, and the coordinator can verify a decoded result against the
+    ground truth it computes locally.
+    """
+    if n_blocks < 1 or block_dim < 1:
+        raise ValueError(
+            f"need n_blocks, block_dim >= 1; got {n_blocks}, {block_dim}"
+        )
+    rng = np.random.default_rng(int(data_seed))
+    return rng.standard_normal((int(n_blocks), int(block_dim)))
+
+
+def make_coded_spec(
+    row,
+    *,
+    data_seed: int = 0,
+    block_dim: int = 16,
+    family: Optional[str] = None,
+    delta: float = 0.0,
+    mu: float = 1.0,
+    work: float = 1.0,
+) -> dict:
+    """Coded-partial spec: one worker's share of a k-of-n coded job.
+
+    ``row`` is this worker's row of the scheme's encode matrix (length =
+    the number of data blocks); the worker computes ``row @ blocks`` where
+    the blocks come from :func:`coded_data_blocks`.  ``family`` (plus
+    ``delta``/``mu``/``work``) optionally embeds the same straggler sleep
+    model as ``make_sleep_spec`` — ``work`` here is the PER-WORKER coded
+    load (the coordinator scales it by ``CodingCandidate.load(N) / N``), so
+    the timing matches the planner's size-dependent service model.
+    """
+    row = [float(v) for v in np.asarray(row, dtype=float).ravel()]
+    if not row:
+        raise ValueError("coefficient row must be non-empty")
+    if family is not None and family not in ("exp", "sexp"):
+        raise ValueError(f"unknown sleep family {family!r} (use 'exp'|'sexp')")
+    if family is not None and (mu <= 0 or work <= 0 or delta < 0):
+        raise ValueError(
+            f"need mu > 0, work > 0, delta >= 0; got {mu}, {work}, {delta}"
+        )
+    return {
+        "kind": "coded",
+        "row": row,
+        "data_seed": int(data_seed),
+        "block_dim": int(block_dim),
+        "family": family,
+        "delta": float(delta),
+        "mu": float(mu),
+        "work": float(work),
+    }
+
+
 def payload_duration(spec: dict, seed: int) -> Optional[float]:
     """The duration a timed spec will run for under ``seed`` (None for
     matmul, whose duration is genuinely unknown until executed)."""
@@ -82,6 +153,14 @@ def payload_duration(spec: dict, seed: int) -> Optional[float]:
     if kind == "deterministic":
         return float(spec["duration"])
     if kind == "sleep":
+        rng = np.random.default_rng(seed)
+        base = rng.exponential(1.0 / float(spec["mu"]))
+        if spec["family"] == "sexp":
+            base += float(spec["delta"])
+        return base * float(spec["work"])
+    if kind == "coded":
+        if spec.get("family") is None:
+            return 0.0  # pure combination: effectively instantaneous
         rng = np.random.default_rng(seed)
         base = rng.exponential(1.0 / float(spec["mu"]))
         if spec["family"] == "sexp":
@@ -141,6 +220,17 @@ def run_payload(
         duration = payload_duration(spec, seed) * slowdown
         was_cancelled = _interruptible_sleep(duration, cancel)
         value = None if was_cancelled else duration
+    elif kind == "coded":
+        duration = payload_duration(spec, seed) * slowdown
+        was_cancelled = duration > 0 and _interruptible_sleep(duration, cancel)
+        if was_cancelled or cancel.is_set():
+            was_cancelled, value = True, None
+        else:
+            row = np.asarray(spec["row"], dtype=float)
+            blocks = coded_data_blocks(
+                spec["data_seed"], row.size, spec["block_dim"]
+            )
+            value = [float(v) for v in row @ blocks]
     elif kind == "matmul":
         repeats = max(1, round(int(spec["repeats"]) * slowdown))
         value = _run_matmul(spec, seed, repeats, cancel)

@@ -8,6 +8,14 @@ Execution layer (jax — data plane):
     replication (RDP mesh factoring + straggler-drop aggregation)
 """
 
+from .coding import (
+    CODING_SCHEMES,
+    CodingCandidate,
+    MDSCode,
+    PolynomialMatmulCode,
+    chebyshev_nodes,
+    expected_kofn_time,
+)
 from .gradient_coding import (
     CyclicGradientCode,
     compare_schemes,
@@ -47,6 +55,7 @@ from .replication import (
     rdp_data_spec,
 )
 from .simulator import (
+    CodedSweepResult,
     FaultEvent,
     PolicySweepResult,
     SimResult,
@@ -60,8 +69,10 @@ from .simulator import (
     simulate_maxmin,
     simulate_sojourn,
     simulate_sojourn_policies,
+    sweep_coded,
     sweep_simulate,
     sweep_sojourn,
+    sweep_sojourn_coded,
     sweep_sojourn_policies,
     sweep_sojourn_speculative,
 )

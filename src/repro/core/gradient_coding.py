@@ -26,7 +26,12 @@ import numpy as np
 
 from .order_stats import ServiceDistribution, harmonic
 from .policies import divisors
-from .simulator import SimResult
+from .simulator import (
+    SimResult,
+    _draw_worker_times,
+    _shared_draw_order,
+    _unit_times,
+)
 
 __all__ = [
     "CyclicGradientCode",
@@ -107,13 +112,22 @@ def simulate_gradient_coding(
     seed: int = 0,
 ) -> SimResult:
     """Completion = (N-s)-th order statistic of per-worker times, each worker
-    loaded with (s+1) units (size-dependent service model, |D| = N units)."""
-    rng = np.random.default_rng(seed)
-    per_worker = dist.scaled(s + 1)
-    t = per_worker.sample(rng, (n_trials, n_workers))
+    loaded with (s+1) units (size-dependent service model, |D| = N units).
+
+    Samples through the shared-CRN core (:func:`~.simulator._draw_worker_times`
+    at a constant load of ``s+1``), so at the same seed this is bit-identical
+    to :func:`~.simulator.simulate_maxmin` draws and to the cyclic lane of
+    :func:`~.simulator.sweep_coded` — the replication-vs-coding race runs on
+    one draw matrix.  ``Empirical`` distributions couple via shared quantile
+    order, same as every other sampling path.
+    """
+    if not 0 <= s < n_workers:
+        raise ValueError(f"s must be in [0, N={n_workers}), got {s}")
+    loads = np.full(n_workers, float(s + 1))
+    t = _draw_worker_times(dist, loads, n_trials, seed)
     t.sort(axis=1)
     completion = t[:, n_workers - s - 1]  # (N-s)-th smallest
-    return SimResult(completion)
+    return SimResult(completion.copy())
 
 
 def expected_coding_time(
@@ -146,20 +160,33 @@ def compare_schemes(
     Replication overheads are N/B for feasible B; coding overheads are s+1
     for s in [0, N).  Returns {overhead: {"replication": E, "coding": E}}
     at the overheads where both are defined (plus each scheme's full curve).
+
+    Both curves consume ONE shared (n_trials, N) unit-exponential draw
+    matrix — common random numbers, the same discipline as
+    :func:`~.simulator.sweep_simulate` — so the replication-vs-coding gap
+    at each overhead is variance-reduced, not noise between two
+    independent streams.  Each replication point is bit-identical to
+    ``simulate_maxmin(dist, N, B, n_trials, seed)`` and each coding point
+    to ``simulate_gradient_coding(dist, N, s, n_trials, seed)``.
+    ``Empirical`` distributions are accepted: the shared draws couple
+    through their quantile order (:func:`~.simulator._shared_draw_order`).
     """
-    from .simulator import simulate_maxmin
+    rng = np.random.default_rng(seed)
+    unit = rng.standard_exponential((n_trials, n_workers))
+    order = _shared_draw_order((dist,), unit)
+    core = _unit_times(unit, dist, None, order=order)
 
     rep = {}
     for b in divisors(n_workers):
         r = n_workers // b
-        rep[r] = simulate_maxmin(
-            dist, n_workers, b, n_trials=n_trials, seed=seed
-        ).mean
+        times = core * float(r)
+        rep[r] = float(
+            times.reshape(n_trials, b, r).min(axis=2).max(axis=1).mean()
+        )
     cod = {}
     for s in range(n_workers):
-        cod[s + 1] = simulate_gradient_coding(
-            dist, n_workers, s, n_trials=n_trials, seed=seed + 1
-        ).mean
+        t = np.sort(core * float(s + 1), axis=1)
+        cod[s + 1] = float(t[:, n_workers - s - 1].mean())
     both = {
         oh: {"replication": rep[oh], "coding": cod[oh]}
         for oh in sorted(set(rep) & set(cod))

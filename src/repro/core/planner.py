@@ -57,6 +57,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .coding import CodingCandidate
 from .estimator import FitResult
 from .order_stats import (
     Empirical,
@@ -291,6 +292,19 @@ class Objective:
     baseline is prepended automatically when absent, so "do nothing" always
     competes.
 
+    **Coded alternatives.**  ``coding`` asks the simulated planners to also
+    score each listed :class:`~repro.core.coding.CodingCandidate` — cyclic
+    gradient coding / MDS / polynomial-coded matmul at straggler tolerance
+    ``s`` — against every replication split, all on the SAME shared CRN
+    draw matrix (:func:`~repro.core.simulator.sweep_coded` /
+    :func:`~repro.core.simulator.sweep_sojourn_coded`).  Candidates whose
+    encode/decode overheads are ``None`` get them MEASURED (wall-clock,
+    :func:`~repro.kernels.coded.measure_coding_overhead`) before scoring,
+    so coding never wins by assuming its fixed costs free.  The winner — if
+    it strictly beats every replication split — lands on
+    :attr:`Plan.coding`; works for both batch-completion and load-aware
+    objectives.
+
     **Arrival process.**  ``arrivals`` (load-aware objectives only) carries
     the serving engine's ACTUAL arrival offsets (MMPP / bursty / trace)
     into every sojourn sweep — without it the planner silently scores
@@ -312,6 +326,7 @@ class Objective:
     speculation_quantiles: Optional[tuple[float, ...]] = None
     policies: Optional[tuple[PolicyCandidate, ...]] = None
     arrivals: Optional[tuple[float, ...]] = None
+    coding: Optional[tuple[CodingCandidate, ...]] = None
 
     def __post_init__(self):
         if self.metric not in METRICS:
@@ -390,6 +405,17 @@ class Objective:
                     "utilization): straggler policies are scored on sojourn "
                     "under queueing"
                 )
+        if self.coding is not None:
+            cands = tuple(self.coding)
+            if not cands:
+                raise ValueError("coding must be non-empty when given")
+            for c in cands:
+                if not isinstance(c, CodingCandidate):
+                    raise TypeError(
+                        "coding entries must be CodingCandidate, got "
+                        f"{type(c).__name__}"
+                    )
+            object.__setattr__(self, "coding", cands)
         if self.arrivals is not None:
             arr = np.asarray(self.arrivals, dtype=float)
             if arr.ndim != 1 or arr.size == 0:
@@ -455,6 +481,18 @@ class Plan:
     provenance for telemetry and for the tuner's re-plan-time budget
     accounting.  ``None`` from the closed-form planner, which simulates
     nothing.
+
+    ``coding`` is the winning :class:`~repro.core.coding.CodingCandidate`
+    when the Objective offered coded alternatives AND one strictly beat
+    every replication split on the shared CRN draws (overheads resolved —
+    measured if the objective left them ``None``).  ``None`` means
+    replication won and the rest of the plan reads as before.  When coding
+    wins, ``predicted`` carries the coded samples (``n_batches`` reads N:
+    every worker holds a distinct coded share, replication factor 1 on the
+    storage axis the replication vocabulary can express), ``policy`` and
+    ``speculation_quantile`` are ``None`` (the code IS the straggler
+    strategy), and ``spectrum`` still describes the replication sweep so
+    hysteresis comparisons keep working.
     """
 
     spec: ClusterSpec
@@ -470,6 +508,7 @@ class Plan:
     confidence: Optional[float] = None  # bootstrap vote share at B*
     vote_share: Optional[tuple[tuple[int, float], ...]] = None  # per-B votes
     backend: Optional[str] = None  # resolved sim backend (provenance)
+    coding: Optional[CodingCandidate] = None  # adopted coded scheme
 
     @property
     def n_workers(self) -> int:
@@ -579,28 +618,79 @@ class Planner:
         None for planners that simulate nothing)."""
         return None
 
+    def _coded_points(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> list[tuple[CodingCandidate, SpectrumPoint]]:
+        """Score the objective's coded candidates on the shared CRN draws.
+
+        Returns ``(candidate, point)`` pairs (overheads resolved) for the
+        selection race in :meth:`_select_coding`.  The base implementation
+        rejects coded objectives — a coded cell with MEASURED overheads has
+        no closed form, so only the simulated planners override this."""
+        if not objective.coding:
+            return []
+        raise ValueError(
+            f"{type(self).__name__} cannot score coded candidates (k-of-n "
+            "completion with measured encode/decode overhead has no closed "
+            "form); use SimulatedPlanner / HeterogeneousPlanner / "
+            "EmpiricalPlanner"
+        )
+
+    def _select_coding(
+        self,
+        spec: ClusterSpec,
+        objective: Objective,
+        best: SpectrumPoint,
+    ) -> tuple[SpectrumPoint, Optional[CodingCandidate]]:
+        """Race the best coded candidate against the best replication split.
+
+        Coding is adopted only on STRICT improvement of the objective
+        metric — the shared CRN draws make the comparison pathwise, and at
+        equal overhead balanced replication dominates cyclic coding
+        pathwise, so ties (e.g. an (N, 1)-style code that degenerates to
+        the same samples) resolve to replication and its simpler runtime.
+        """
+        coded = self._coded_points(spec, objective)
+        if not coded:
+            return best, None
+        metric = objective.metric
+        cand, point = min(
+            coded, key=lambda cp: metric_value(cp[1], metric)
+        )
+        if metric_value(point, metric) < metric_value(best, metric):
+            return point, cand
+        return best, None
+
     def plan(
         self, spec: ClusterSpec, objective: Optional[Objective] = None
     ) -> Plan:
-        """Sweep feasible B under ``objective``, pick the argmin, and emit
-        the full decision (factoring + placement + predictions)."""
+        """Sweep feasible B under ``objective``, pick the argmin, race it
+        against any coded candidates, and emit the full decision (factoring
+        + placement + predictions)."""
         objective = objective if objective is not None else Objective()
         spectrum = self.sweep_spectrum(spec, objective)
         best = spectrum.best(objective.metric)
-        assignment = self.assignment_for(spec, best.n_batches)
+        predicted, coding = self._select_coding(spec, objective, best)
+        assignment = self.assignment_for(spec, predicted.n_batches)
+        decisions = (
+            self._decision_fields(predicted.n_batches)
+            if coding is None
+            else {"policy": None, "speculation_quantile": None}
+        )
         return Plan(
             spec=spec,
             objective=objective,
             replication=ReplicationPlan(
-                n_data=spec.n_workers, n_batches=best.n_batches
+                n_data=spec.n_workers, n_batches=predicted.n_batches
             ),
             assignment=assignment,
-            predicted=best,
+            predicted=predicted,
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
             backend=self._plan_backend(),
-            **self._decision_fields(best.n_batches),
+            coding=coding,
+            **decisions,
         )
 
 
@@ -682,6 +772,89 @@ class SimulatedPlanner(Planner):
 
         self._last_backend = resolve_sweep_backend(self.backend)
         return self._last_backend
+
+    def _coding_backend(self) -> str:
+        """Backend for the coded race: reuse whatever engine the replication
+        sweep actually ran on (the skewed Heterogeneous paths force numpy
+        even when ``self.backend`` says otherwise), so ``Plan.backend``
+        provenance stays truthful."""
+        return getattr(self, "_last_backend", None) or self._resolve_backend()
+
+    def _resolved_coding(
+        self, objective: Objective, n_workers: int
+    ) -> tuple[CodingCandidate, ...]:
+        """Candidates with overheads resolved: any left ``None`` by the
+        objective are MEASURED now (wall-clock encode/decode on the sweep's
+        backend), so the race never scores coding's fixed costs as free."""
+        from repro.kernels.coded import measure_coding_overhead
+
+        backend = self._coding_backend()
+        out = []
+        for c in objective.coding:
+            if not c.resolved:
+                enc, dec = measure_coding_overhead(
+                    c, n_workers, backend=backend
+                )
+                c = dataclasses.replace(
+                    c,
+                    encode_overhead=(
+                        enc if c.encode_overhead is None else c.encode_overhead
+                    ),
+                    decode_overhead=(
+                        dec if c.decode_overhead is None else c.decode_overhead
+                    ),
+                )
+            out.append(c)
+        return tuple(out)
+
+    def _coded_sweep(self, spec: ClusterSpec, objective: Objective, dists):
+        """Run the coded CRN sweep (batch or sojourn mode) for ``dists``."""
+        from .simulator import (  # local: avoid import cycle
+            sweep_coded,
+            sweep_sojourn_coded,
+        )
+
+        cands = self._resolved_coding(objective, spec.n_workers)
+        backend = self._coding_backend()
+        rates = self._sweep_rates(spec)
+        if objective.load_aware:
+            return sweep_sojourn_coded(
+                dists,
+                spec.n_workers,
+                cands,
+                arrival_rate=objective.offered_rate(spec),
+                n_jobs=self.n_trials,
+                seed=self.seed,
+                rates=rates,
+                job_load=objective.job_load,
+                arrivals=objective.arrivals,
+                backend=backend,
+            )
+        return sweep_coded(
+            dists,
+            spec.n_workers,
+            cands,
+            n_trials=self.n_trials,
+            seed=self.seed,
+            rates=rates,
+            backend=backend,
+        )
+
+    def _coded_points(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> list[tuple[CodingCandidate, SpectrumPoint]]:
+        if not objective.coding:
+            return []
+        res = self._coded_sweep(spec, objective, spec.dist)
+        return [
+            (
+                res.candidates[ci],
+                point_from_samples(
+                    spec.n_workers, 1, res.samples[0, ci]
+                ),
+            )
+            for ci in range(len(res.candidates))
+        ]
 
     def _sweep_sojourn(
         self, spec: ClusterSpec, objective: Objective
@@ -1032,6 +1205,7 @@ class EmpiricalPlanner(SimulatedPlanner):
             for k in range(k_count)
         ]
         votes: dict[int, int] = {b: 0 for b in splits}
+        resample_best: list[float] = []
         for k in range(k_count):
             scores = [
                 metric_value(
@@ -1041,7 +1215,11 @@ class EmpiricalPlanner(SimulatedPlanner):
                 for s, b in enumerate(splits)
             ]
             votes[splits[int(np.argmin(scores))]] += 1
+            resample_best.append(min(scores))
         self._votes = votes
+        # per-resample best replication score: the coded race votes against
+        # exactly what each resample would otherwise run
+        self._resample_best = resample_best
         if not pooled:
             return None
         return result_from_points(
@@ -1075,6 +1253,10 @@ class EmpiricalPlanner(SimulatedPlanner):
                 "HeterogeneousPlanner (make_planner('heterogeneous'))."
             )
         dists = self._bootstrap_dists(spec)
+        # cached for the coded race: _bootstrap_dists draws fresh resamples
+        # every call, so the coded sweep must reuse THESE dists to stay on
+        # the same bootstrap sample
+        self._last_dists = dists
         splits = spec.feasible_batches()
         rates = self._sweep_rates(spec)
         worker_batches = self._sweep_worker_batches(spec, splits)
@@ -1242,11 +1424,70 @@ class EmpiricalPlanner(SimulatedPlanner):
             objective.metric,
         )
 
+    def _coded_points(
+        self, spec: ClusterSpec, objective: Objective
+    ) -> list[tuple[CodingCandidate, SpectrumPoint]]:
+        if not objective.coding:
+            return []
+        dists = getattr(self, "_last_dists", None)
+        if dists is None:
+            self._last_dists = dists = self._bootstrap_dists(spec)
+        res = self._coded_sweep(spec, objective, dists)
+        # bootstrap vote on the coded race itself: the fraction of
+        # resamples whose best coded candidate beats the replication score
+        # that SAME resample voted for — adoption uncertainty, reported as
+        # Plan.confidence when coding wins
+        resample_best = getattr(self, "_resample_best", None)
+        if resample_best is not None and len(resample_best) == len(dists):
+            metric = objective.metric
+            wins = 0
+            for k in range(len(dists)):
+                coded_best = min(
+                    metric_value(
+                        point_from_samples(
+                            spec.n_workers, 1, res.samples[k, ci]
+                        ),
+                        metric,
+                    )
+                    for ci in range(len(res.candidates))
+                )
+                wins += coded_best < resample_best[k]
+            self._coding_votes = wins / len(dists)
+        # pooled points (all resamples concatenated), matching the pooled
+        # replication spectrum the vote-winner's prediction comes from
+        return [
+            (
+                res.candidates[ci],
+                point_from_samples(
+                    spec.n_workers, 1, res.samples[:, ci, :].ravel()
+                ),
+            )
+            for ci in range(len(res.candidates))
+        ]
+
+    def _select_coding(
+        self,
+        spec: ClusterSpec,
+        objective: Objective,
+        best: SpectrumPoint,
+    ) -> tuple[SpectrumPoint, Optional[CodingCandidate]]:
+        """Adopt coding only when the pooled race AND a majority of
+        bootstrap resamples agree — the same double standard the B* vote
+        applies to replication splits."""
+        self._coding_votes = None
+        predicted, coding = super()._select_coding(spec, objective, best)
+        if coding is not None and (
+            self._coding_votes is not None and self._coding_votes <= 0.5
+        ):
+            return best, None
+        return predicted, coding
+
     def plan(
         self, spec: ClusterSpec, objective: Optional[Objective] = None
     ) -> Plan:
         """Sweep bootstrap resamples, pick B* by majority vote (pooled
-        metric breaks ties), and report the vote distribution on the Plan."""
+        metric breaks ties), race it against any coded candidates, and
+        report the vote distribution on the Plan."""
         objective = objective if objective is not None else Objective()
         spectrum = self.sweep_spectrum(spec, objective)
         votes = self._votes
@@ -1259,21 +1500,30 @@ class EmpiricalPlanner(SimulatedPlanner):
             ),
         )
         best = spectrum.at(best_b)
-        assignment = self.assignment_for(spec, best_b)
+        predicted, coding = self._select_coding(spec, objective, best)
+        assignment = self.assignment_for(spec, predicted.n_batches)
+        if coding is None:
+            decisions = self._decision_fields(best_b)
+            confidence = votes.get(best_b, 0) / total
+        else:
+            decisions = {"policy": None, "speculation_quantile": None}
+            # when coding wins, confidence reports the coded-race vote
+            confidence = self._coding_votes
         return Plan(
             spec=spec,
             objective=objective,
             replication=ReplicationPlan(
-                n_data=spec.n_workers, n_batches=best_b
+                n_data=spec.n_workers, n_batches=predicted.n_batches
             ),
             assignment=assignment,
-            predicted=best,
+            predicted=predicted,
             spectrum=spectrum,
             planner=self.name,
             closed_form_mean=self._closed_form_mean(spec, assignment),
             backend=self._plan_backend(),
-            **self._decision_fields(best_b),
-            confidence=votes.get(best_b, 0) / total,
+            coding=coding,
+            **decisions,
+            confidence=confidence,
             vote_share=tuple(
                 (p.n_batches, votes.get(p.n_batches, 0) / total)
                 for p in spectrum.points

@@ -55,6 +55,7 @@ from typing import Sequence
 
 import numpy as np
 
+from .coding import CodingCandidate
 from .order_stats import Empirical, ServiceDistribution
 from .policies import Assignment, PolicyCandidate, _validate_rates, divisors
 
@@ -63,6 +64,7 @@ __all__ = [
     "SweepSimResult",
     "SpeculativeSweepResult",
     "PolicySweepResult",
+    "CodedSweepResult",
     "simulate_maxmin",
     "simulate_coverage",
     "simulate_coverage_reference",
@@ -70,9 +72,11 @@ __all__ = [
     "simulate_sojourn_quantiles",
     "simulate_sojourn_policies",
     "sweep_simulate",
+    "sweep_coded",
     "sweep_sojourn",
     "sweep_sojourn_speculative",
     "sweep_sojourn_policies",
+    "sweep_sojourn_coded",
     "resolve_sweep_backend",
     "SWEEP_BACKENDS",
     "censored_observations",
@@ -564,6 +568,234 @@ def sweep_simulate(
     return SweepSimResult(
         n_workers=n_workers,
         splits=tuple(splits),
+        dists=dist_seq,
+        samples=samples,
+        backend=backend,
+    )
+
+
+# ---------------------------------------------------------------------------
+# coded-computation sweeps: (scheme, s) cells on the shared CRN draws
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedSweepResult:
+    """Samples for every (distribution, coding candidate) cell of a sweep.
+
+    ``samples[d, c]`` holds completion (or post-warmup sojourn, for
+    :func:`sweep_sojourn_coded`) times for ``dists[d]`` under
+    ``candidates[c]``, generated from the SAME unit-exponential draw
+    matrix a replication sweep at the same seed consumes — so a coded
+    cell is directly comparable to any ``sweep_simulate`` /
+    ``sweep_sojourn`` cell (common random numbers across the
+    replication-vs-coding race).  Encode+decode overheads are already
+    ADDED to every sample.  ``backend`` records the engine that ran.
+    """
+
+    n_workers: int
+    candidates: tuple[CodingCandidate, ...]
+    dists: tuple[ServiceDistribution, ...]
+    samples: np.ndarray  # (n_dists, n_candidates, n_trials)
+    backend: str
+
+    def result(self, c_index: int, dist_index: int = 0) -> SimResult:
+        return SimResult(self.samples[dist_index, c_index])
+
+    def means(self) -> np.ndarray:
+        """(n_dists, n_candidates) empirical mean completion times."""
+        return self.samples.mean(axis=2)
+
+    def best_mean(self, dist_index: int = 0) -> tuple[CodingCandidate, float]:
+        m = self.means()[dist_index]
+        c = int(np.argmin(m))
+        return self.candidates[c], float(m[c])
+
+
+def _validate_coding_candidates(
+    candidates: Sequence[CodingCandidate], n_workers: int
+) -> tuple[CodingCandidate, ...]:
+    cands = tuple(candidates)
+    if not cands:
+        raise ValueError("at least one coding candidate required")
+    for c in cands:
+        if not isinstance(c, CodingCandidate):
+            raise TypeError(
+                f"coding candidates must be CodingCandidate, got "
+                f"{type(c).__name__}"
+            )
+        c.k(n_workers)  # raises when s >= N
+    return cands
+
+
+def _coded_cell_stack(
+    dist_seq, cands, unit, rates_arr, order, n_workers, dtype, scale=1.0
+):
+    """(D*C, T, N) load-scaled worker-time cells (c = d*len(cands) + ci),
+    plus the per-cell quorum vector — the host-side build both coded
+    sweeps share.  A constant-load scalar multiply keeps each cyclic cell
+    bit-identical to the legacy ``simulate_gradient_coding`` rewrite
+    (same ``_unit_times`` core, same float ops)."""
+    n_c = len(cands)
+    loads = [scale * c.load(n_workers) for c in cands]
+    cells = np.empty(
+        (len(dist_seq) * n_c, unit.shape[0], n_workers), dtype=dtype
+    )
+    for di, dist in enumerate(dist_seq):
+        core = _unit_times(unit, dist, rates_arr, order=order)
+        for ci, load in enumerate(loads):
+            cells[di * n_c + ci] = core * load
+    ks = np.tile(
+        np.asarray([c.k(n_workers) for c in cands], dtype=np.int32),
+        len(dist_seq),
+    )
+    return cells, ks
+
+
+def sweep_coded(
+    dists: ServiceDistribution | Sequence[ServiceDistribution],
+    n_workers: int,
+    candidates: Sequence[CodingCandidate],
+    n_trials: int = 20_000,
+    seed: int = 0,
+    rates: Sequence[float] | None = None,
+    backend: str = "numpy",
+) -> CodedSweepResult:
+    """Batch-completion times of every (dist, coding candidate) cell.
+
+    The coded twin of :func:`sweep_simulate`: ONE (n_trials, N) matrix of
+    Exp(1) draws — the SAME matrix ``sweep_simulate`` draws at this seed,
+    since both consume it first — feeds every cell, so the
+    replication-vs-coding comparison is CRN-coupled.  A candidate's cell
+    is the ``k``-th order statistic of the N per-worker times at its
+    per-worker load (size-dependent service: ``dist.scaled(load)``), plus
+    its encode+decode overhead.  The cyclic lane is bit-identical to
+    :func:`~repro.core.gradient_coding.simulate_gradient_coding` at the
+    same seed (zero overhead, numpy backend).
+
+    ``backend`` routes the order-statistic reduction through the
+    :mod:`repro.kernels.sojourn_sweep` coded lanes — numpy reference,
+    jit+vmap JAX, or the Pallas kernel (CPU interpret mode) — recorded on
+    the result for :attr:`~repro.core.planner.Plan.backend` provenance.
+    """
+    from repro.kernels import sojourn_sweep as _ss
+
+    dist_seq = _normalize_dists(dists)
+    cands = _validate_coding_candidates(candidates, n_workers)
+    rates_arr = _validate_rates(rates, n_workers)
+    backend = resolve_sweep_backend(backend)
+
+    rng = np.random.default_rng(seed)
+    unit = rng.standard_exponential((n_trials, n_workers))
+    order = _shared_draw_order(dist_seq, unit)
+
+    if backend in ("jax", "pallas"):
+        import jax
+
+        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+    else:
+        dtype = np.float64
+    cells, ks = _coded_cell_stack(
+        dist_seq, cands, unit, rates_arr, order, n_workers, dtype
+    )
+    out = _ss.coded_completion_cells(cells, ks, backend=backend)
+    samples = np.asarray(out, dtype=float).reshape(
+        len(dist_seq), len(cands), n_trials
+    )
+    overheads = np.asarray([c.total_overhead for c in cands])
+    samples = samples + overheads[None, :, None]
+    return CodedSweepResult(
+        n_workers=n_workers,
+        candidates=cands,
+        dists=dist_seq,
+        samples=samples,
+        backend=backend,
+    )
+
+
+def sweep_sojourn_coded(
+    dists: ServiceDistribution | Sequence[ServiceDistribution],
+    n_workers: int,
+    candidates: Sequence[CodingCandidate],
+    arrival_rate: float,
+    n_jobs: int = 4_000,
+    seed: int = 0,
+    rates: Sequence[float] | None = None,
+    job_load: float = 1.0,
+    warmup: int | None = None,
+    arrivals: Sequence[float] | None = None,
+    backend: str = "numpy",
+) -> CodedSweepResult:
+    """Sojourn times of coded candidates under the queueing model.
+
+    The load-aware twin of :func:`sweep_coded`, CRN-coupled to
+    :func:`sweep_sojourn` at the same seed (identical arrival sequence +
+    draw matrix consumption).  A coded job splits its ``job_load`` units
+    across ALL N workers — per-worker load ``job_load * load / N`` — and
+    the fleet acts as ONE logical FIFO server whose service time is the
+    job's k-th worker completion plus encode+decode overhead: coding
+    trades replication's across-job parallelism (B parallel replica-sets)
+    for within-job parallelism plus straggler diversity, which is exactly
+    the Peng/Soljanin/Whiting trade-off the planner must see.  The
+    accelerator backends route the order statistic AND the queue
+    recursion through the :mod:`repro.kernels.sojourn_sweep` lanes.
+    """
+    from repro.kernels import sojourn_sweep as _ss
+
+    dist_seq = _normalize_dists(dists)
+    cands = _validate_coding_candidates(candidates, n_workers)
+    _validate_load(arrival_rate, job_load)
+    rates_arr = _validate_rates(rates, n_workers)
+    warm = _resolve_warmup(n_jobs, warmup)
+    backend = resolve_sweep_backend(backend)
+
+    rng = np.random.default_rng(seed)
+    arrivals = _resolve_arrivals(arrivals, n_jobs, arrival_rate, rng)
+    unit = rng.standard_exponential((n_jobs, n_workers))
+    order = _shared_draw_order(dist_seq, unit)
+
+    overheads = np.asarray([c.total_overhead for c in cands])
+    n_c = len(cands)
+    if backend != "numpy":
+        import jax
+
+        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+        cells, ks = _coded_cell_stack(
+            dist_seq, cands, unit, rates_arr, order, n_workers, dtype,
+            scale=job_load / n_workers,
+        )
+        svc = np.asarray(
+            _ss.coded_completion_cells(cells, ks, backend=backend)
+        )
+        svc = (svc + np.tile(overheads, len(dist_seq))[:, None]).astype(
+            dtype
+        )[:, :, None]  # (D*C, J, 1): one logical server
+        kinds = np.asarray([_ss.KIND_NONE], dtype=np.int32)
+        thresholds = np.full((svc.shape[0], 1), np.inf)
+        hmasks = np.zeros((1, n_jobs), dtype=bool)
+        out, _ = _ss.sojourn_policy_cells(
+            arrivals, svc, svc, kinds, thresholds, hmasks,
+            np.ones(svc.shape[0], dtype=np.int32), backend=backend,
+        )
+        samples = np.asarray(out, dtype=float)[:, 0, warm:].reshape(
+            len(dist_seq), n_c, n_jobs - warm
+        )
+    else:
+        cells, ks = _coded_cell_stack(
+            dist_seq, cands, unit, rates_arr, order, n_workers, np.float64,
+            scale=job_load / n_workers,
+        )
+        svc = _ss.coded_completion_cells(cells, ks, backend="numpy")
+        samples = np.empty((len(dist_seq), n_c, n_jobs - warm))
+        for di in range(len(dist_seq)):
+            for ci in range(n_c):
+                col = svc[di * n_c + ci] + overheads[ci]
+                samples[di, ci] = _sojourn_recursion(
+                    arrivals, col[:, None], 1
+                )[warm:]
+    return CodedSweepResult(
+        n_workers=n_workers,
+        candidates=cands,
         dists=dist_seq,
         samples=samples,
         backend=backend,

@@ -184,6 +184,7 @@ class StragglerTuner:
         speculation_quantiles: tuple[float, ...] | None = None,
         policy_candidates: tuple | None = None,
         arrival_offsets: np.ndarray | None = None,
+        coding_candidates: tuple | None = None,
     ):
         self.plan = plan
         self.config = config or TunerConfig()
@@ -217,6 +218,14 @@ class StragglerTuner:
                 "exclusive: the portfolio subsumes the clone-trigger sweep "
                 "(use PolicyCandidate('clone', quantile=q) candidates)"
             )
+        # coded-computation portfolio: when set, every re-plan races the
+        # listed CodingCandidates (cyclic / MDS / poly, measured overheads)
+        # against the replication sweep on shared CRN draws and lands a
+        # strict winner on Plan.coding — both batch-completion and
+        # load-aware objectives, simulated planners only.
+        self.coding_candidates = (
+            tuple(coding_candidates) if coding_candidates else None
+        )
         # measured job-arrival offsets (non-Poisson traffic): threaded into
         # the load-aware sweep so candidates are scored under the arrival
         # process the engine actually runs, not a Poisson stand-in
@@ -534,6 +543,13 @@ class StragglerTuner:
                 speculation_quantiles=self.speculation_quantiles,
                 policies=self.policy_candidates,
                 arrivals=self.arrival_offsets,
+            )
+        # the coded race applies to BOTH modes (batch completion and
+        # sojourn); gate on consumes_load as the "simulated planner"
+        # capability — the closed-form planner cannot score coded cells
+        if self.coding_candidates and planner.consumes_load:
+            objective = dataclasses.replace(
+                objective, coding=self.coding_candidates
             )
         return objective
 

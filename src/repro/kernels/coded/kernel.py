@@ -1,0 +1,51 @@
+"""Pallas/JAX combine kernel shared by coded encode and decode.
+
+Both ends of a coded job are the SAME linear map — encode multiplies an
+``(n, k)`` coefficient matrix into the k data blocks, decode multiplies a
+``(k', m)`` weight matrix into the m surviving responses — so one kernel
+body serves both.  The Pallas variant runs one output row per grid
+program with the block matrix resident per program, ``jnp.dot`` on the
+MXU-friendly ``preferred_element_type`` contraction; ``interpret=True``
+keeps it runnable on CPU-only tier-1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_fn(coeffs, blocks):
+    """(R, K) coefficients x (K, D) stacked blocks -> (R, D)."""
+    return jnp.dot(coeffs, blocks, preferred_element_type=blocks.dtype)
+
+
+combine_jit = jax.jit(_combine_fn)
+
+
+def _combine_kernel(coeff_ref, block_ref, out_ref):
+    out_ref[0, :] = jnp.dot(coeff_ref[0], block_ref[...],
+                            preferred_element_type=block_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine_pallas(coeffs, blocks, interpret: bool = True):
+    """Pallas grid over output rows; one coded row per program."""
+    n_rows, k = coeffs.shape
+    k2, d = blocks.shape
+    if k != k2:
+        raise ValueError(f"coeffs k={k} != blocks k={k2}")
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(n_rows,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda r: (r, 0)),
+            pl.BlockSpec((k, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), blocks.dtype),
+        interpret=interpret,
+    )(coeffs, blocks)

@@ -21,6 +21,7 @@ from .ops import (
     KIND_NONE,
     KIND_RELAUNCH,
     cells_mesh,
+    coded_completion_cells,
     hedge_mask,
     policy_kind_code,
     resolve_backend,
@@ -33,6 +34,7 @@ __all__ = [
     "KIND_RELAUNCH",
     "KIND_HEDGED",
     "cells_mesh",
+    "coded_completion_cells",
     "hedge_mask",
     "policy_kind_code",
     "resolve_backend",

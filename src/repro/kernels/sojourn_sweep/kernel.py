@@ -161,6 +161,41 @@ def _cells_fn(arrivals, svc, alt, kinds, thresholds, hedge_masks, n_groups,
 sojourn_cells_vmap = jax.jit(_cells_fn, static_argnames=("resolve",))
 
 
+def coded_cell(times, k):
+    """k-th order statistic per trial of one coded cell (jnp body shared
+    by the vmap and Pallas coded backends; ``k`` is a traced scalar)."""
+    srt = jnp.sort(times, axis=1)
+    return lax.dynamic_slice_in_dim(srt, k - 1, 1, axis=1)[:, 0]
+
+
+def _coded_cells_fn(times, ks):
+    return jax.vmap(coded_cell)(times, ks)
+
+
+coded_cells_vmap = jax.jit(_coded_cells_fn)
+
+
+def _coded_kernel(times_ref, k_ref, out_ref):
+    out_ref[0, :] = coded_cell(times_ref[0], k_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coded_cells_pallas(times, ks, interpret=True):
+    """Pallas grid over coded cells; one order-statistic scan per program."""
+    n_cells, n_trials, n_workers = times.shape
+    return pl.pallas_call(
+        _coded_kernel,
+        grid=(n_cells,),
+        in_specs=[
+            pl.BlockSpec((1, n_trials, n_workers), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1,), lambda c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_trials), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cells, n_trials), times.dtype),
+        interpret=interpret,
+    )(times, ks)
+
+
 def _sojourn_kernel(arr_ref, svc_ref, alt_ref, kind_ref, thr_ref, hmask_ref,
                     ng_ref, out_ref, extra_ref, *, resolve=True):
     out, extra = cell_recursion(

@@ -79,6 +79,30 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
+def coded_completion_cells(times, ks, *, backend: str = "jax",
+                           interpret: bool = True):
+    """k-of-N completion for a batch of coded cells on one backend.
+
+    The coded twin of :func:`sojourn_policy_cells`: ``times`` (C, T, N)
+    holds the per-cell load-scaled worker draws (built host-side from the
+    shared CRN matrix), ``ks`` (C,) the completion quorums, and the
+    result (C, T) is the k-th order statistic per trial.  Selection is
+    value-exact, so numpy/jax/pallas agree bit-for-bit at equal dtype —
+    the parity pin that lets coded sweep cells ride the same ``backend=``
+    lanes as the replication cells.
+    """
+    if backend == "numpy":
+        return _ref.coded_completion_reference(times, ks)
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    fdtype = jnp.result_type(float)
+    times = jnp.asarray(times, fdtype)
+    ks = jnp.asarray(ks, jnp.int32)
+    if backend == "pallas":
+        return _kernel.coded_cells_pallas(times, ks, interpret=interpret)
+    return _kernel.coded_cells_vmap(times, ks)
+
+
 def cells_mesh(devices: Optional[Sequence] = None) -> Mesh:
     """1-D ``cells`` mesh over the given (default: all) devices."""
     devices = jax.devices() if devices is None else list(devices)

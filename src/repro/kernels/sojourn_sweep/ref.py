@@ -174,6 +174,29 @@ def sojourn_cell_reference(arrivals, svc, alt, kind, threshold, hedge_mask,
     return out, extra
 
 
+def coded_completion_reference(times, ks):
+    """k-th-order-statistic completion of coded cells (numpy oracle).
+
+    ``times`` is (C, T, N): per-cell worker service times, already
+    load-scaled on the shared CRN draws; ``ks[c]`` is the completion
+    quorum (the job finishes once any k workers respond).  Returns the
+    (C, T) completion times.  Selection is value-exact — the output IS
+    one of the input floats — so at equal dtype the jnp backends are
+    bit-identical, the same layered contract as the sojourn cells.
+    """
+    times = np.asarray(times)
+    ks = np.asarray(ks, dtype=np.int64)
+    n_cells, _, n_workers = times.shape
+    if ks.shape != (n_cells,):
+        raise ValueError(f"ks shape {ks.shape} != ({n_cells},)")
+    if np.any(ks < 1) or np.any(ks > n_workers):
+        raise ValueError(f"ks must be in [1, N={n_workers}], got {ks}")
+    out = np.empty(times.shape[:2], dtype=times.dtype)
+    for c in range(n_cells):
+        out[c] = np.sort(times[c], axis=1)[:, ks[c] - 1]
+    return out
+
+
 def sojourn_cells_reference(arrivals, svc, alt, kinds, thresholds,
                             hedge_masks, n_groups):
     """Batched reference: all (cell, policy) pairs via the scalar kernel.

@@ -3,8 +3,9 @@
 The wall-clock twin of ``repro.launch.serve``: instead of simulating a
 fleet, this spawns ``--workers`` OS processes on localhost, serves a
 Poisson-ish request stream through the replicated dispatch fabric
-(first-replica-wins, CANCEL on completion), optionally injects one chaos
-fault (``--chaos kill|pause|slow|late-join``), and — with ``--tuner`` —
+(first-replica-wins, CANCEL on completion) or — with ``--coding`` — the
+coded k-of-n quorum, optionally injects one chaos fault
+(``--chaos kill|pause|slow|late-join``), and — with ``--tuner`` —
 lets the StragglerTuner re-plan (B, policy) online from the measured,
 censored telemetry.  Prints a JSON summary plus the control-plane event
 log.
@@ -29,7 +30,7 @@ from repro.cluster import (
     make_matmul_spec,
     make_sleep_spec,
 )
-from repro.core import PolicyCandidate
+from repro.core import CodingCandidate, PolicyCandidate
 from repro.serving.queueing import Request
 
 __all__ = ["build_config", "run_cluster", "main"]
@@ -56,6 +57,11 @@ def build_config(args) -> ClusterConfig:
         if args.policy != "none"
         else None
     )
+    coding = (
+        CodingCandidate(scheme=args.coding, s=args.coding_s)
+        if args.coding != "none"
+        else None
+    )
     return ClusterConfig(
         n_workers=args.workers,
         n_batches=args.batches,
@@ -69,6 +75,7 @@ def build_config(args) -> ClusterConfig:
         planner_mode=args.planner,
         min_samples=args.min_samples,
         policy=policy,
+        coding=coding,
         seed=args.seed,
     )
 
@@ -150,6 +157,12 @@ def main(argv=None) -> int:
                     choices=("none", "clone", "relaunch", "hedged"))
     ap.add_argument("--quantile", type=float, default=0.95)
     ap.add_argument("--hedge-fraction", type=float, default=0.25)
+    ap.add_argument("--coding", default="none",
+                    choices=("none", "cyclic", "mds", "poly"),
+                    help="coded k-of-n quorum dispatch (needs sleep payload; "
+                         "excludes --tuner/--policy)")
+    ap.add_argument("--coding-s", type=int, default=1,
+                    help="straggler tolerance s of the coded scheme")
     ap.add_argument("--chaos", default="none",
                     choices=("none", "kill", "pause", "slow", "late-join"))
     ap.add_argument("--chaos-at", type=float, default=0.5,

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core import (
     ClusterSpec,
+    CodingCandidate,
     Metric,
     Objective,
     PolicyCandidate,
@@ -144,6 +145,15 @@ class ServeEngineConfig:
     # the engine adopts it live (the online policy-switch loop).  Overrides
     # the speculation_quantile-seeded trigger sweep in re-plan objectives.
     policy_candidates: Optional[tuple[PolicyCandidate, ...]] = None
+    # coded-computation portfolio: CodingCandidate tuple every planner
+    # objective (initial plan + tuner re-plans) races against the
+    # replication sweep on shared CRN draws; a strict winner lands on
+    # Plan.coding.  The event-driven master keeps serving replicated
+    # batches — the coded pick is surfaced as telemetry/provenance (the
+    # coded data plane lives in the cluster runtime), so this knob is the
+    # control-plane view of the replication-vs-coding decision.  Needs a
+    # simulation-capable planner_mode ('simulate' | 'empirical').
+    coding_candidates: Optional[tuple[CodingCandidate, ...]] = None
     # --- deadlines / SLOs ---------------------------------------------------
     # uniform RELATIVE deadline applied to every request (arrival + deadline;
     # None = no SLO).  Per-request deadlines go through serve(deadlines=...).
@@ -213,10 +223,15 @@ class ReplicatedServingEngine:
             mode=sc.planner_mode, n_trials=4_000, seed=sc.seed,
             backend=sc.sim_backend,
         )
+        # the latest coded pick (Plan.coding) from any planner call: None
+        # until a coding_candidates objective adopts a scheme; telemetry
+        # provenance for run_load (the coded data plane is the cluster
+        # runtime's job)
+        self.last_coding: Optional[CodingCandidate] = None
         if sc.plan_initial:
-            n_batches = self.planner.plan(
-                self.cluster_spec, self.objective
-            ).n_batches
+            initial = self.planner.plan(self.cluster_spec, self.objective)
+            n_batches = initial.n_batches
+            self.last_coding = initial.coding
         else:
             n_batches = sc.n_batches
         self.plan = ReplicationPlan(
@@ -327,17 +342,23 @@ class ReplicatedServingEngine:
         """Straggler-mitigation axis of tuner re-plan objectives (mirrors
         ``_build_objective``'s choice)."""
         sc = self.sc
+        coding = (
+            {"coding_candidates": tuple(sc.coding_candidates)}
+            if sc.coding_candidates
+            else {}
+        )
         if sc.policy_candidates:
-            return {"policy_candidates": tuple(sc.policy_candidates)}
+            return {"policy_candidates": tuple(sc.policy_candidates), **coding}
         pol = self.policy
         if pol is not None and pol.kind in ("relaunch", "hedged"):
-            return {"policy_candidates": (pol,)}
+            return {"policy_candidates": (pol,), **coding}
         return {
             "speculation_quantiles": (
                 (pol.quantile,)
                 if pol is not None and pol.kind == "clone"
                 else None
-            )
+            ),
+            **coding,
         }
 
     # -- objective / arrivals ------------------------------------------------
@@ -395,6 +416,12 @@ class ReplicatedServingEngine:
                 policies = (pol,)
             elif pol is not None and pol.kind == "clone":
                 spec_qs = (pol.quantile,)
+        if sc.coding_candidates and sc.planner_mode == "analytic":
+            raise ValueError(
+                "coding_candidates needs a simulation-capable planner_mode "
+                "('simulate' | 'empirical'): the closed-form planner cannot "
+                "score coded candidates"
+            )
         objective = Objective(
             metric=sc.metric,
             arrival_rate=(
@@ -406,6 +433,9 @@ class ReplicatedServingEngine:
             job_load=self._work(sc.batch_size),
             speculation_quantiles=spec_qs,
             policies=policies,
+            coding=(
+                tuple(sc.coding_candidates) if sc.coding_candidates else None
+            ),
         )
         if load_aware and sc.arrival_kind != "poisson":
             rate = (
@@ -565,6 +595,8 @@ class ReplicatedServingEngine:
                 # adopt the mitigation the winning score assumed: when the
                 # re-plan swept (B, policy) or (B, trigger) cells, run what
                 # it scored — including "don't mitigate at this B" (None)
+                if rp.plan is not None and rp.plan.objective.coding:
+                    self.last_coding = rp.plan.coding
                 if rp.plan is not None and rp.plan.objective.policies:
                     self._adopt_policy(rp.plan)
                 elif (
@@ -577,6 +609,8 @@ class ReplicatedServingEngine:
             # a better policy/trigger AT the current B — adopting it needs
             # no drain/reconfig, so it is free (cooldown paces evaluations)
             lp = self.tuner.last_plan
+            if lp is not None and lp.objective.coding:
+                self.last_coding = lp.coding
             if lp is not None and lp.n_batches == self.plan.n_batches:
                 if lp.objective.policies:
                     self._adopt_policy(lp)
@@ -715,6 +749,11 @@ class ReplicatedServingEngine:
             ),
             "hedges": self.last_master.hedges if self.last_master else 0,
             "policy": self.policy.kind if self.policy is not None else "none",
+            "coding": (
+                self.last_coding.describe()
+                if self.last_coding is not None
+                else "none"
+            ),
             "stats": stats,
         }
 

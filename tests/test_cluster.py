@@ -28,7 +28,7 @@ from repro.cluster.payloads import (
     payload_duration,
     run_payload,
 )
-from repro.core import PolicyCandidate
+from repro.core import CodingCandidate, PolicyCandidate
 from repro.serving.queueing import Request
 
 TEST_TIMEOUT = 90  # wall seconds per test: generous; failures hit it, not CI
@@ -479,6 +479,124 @@ class TestChaosMatrix:
         assert coord.tuner.last_fit is not None  # fitted measured service
         x, c = coord.tuner.window_observations()
         assert len(x) >= 40
+
+
+# ------------------------------------------------------------- coded mode --
+class TestCodedQuorum:
+    """k-of-n coded dispatch (PR 9): every job completes by DECODE from k
+    distinct partials, verified against the coordinator's locally
+    recomputed ground truth, with the stragglers cancelled."""
+
+    def _run(self, coding, *, n=5, reqs=10, events=None, seed=9):
+        cfg = ClusterConfig(
+            n_workers=n,
+            max_wait=0.01,
+            payload=make_sleep_spec("sexp", work=1.0, delta=0.003, mu=60.0),
+            heartbeat_timeout=0.3,
+            coding=coding,
+            seed=seed,
+        )
+        with LocalCluster(cfg) as cluster:
+            coord = cluster.coordinator
+            base = _submit_stream(coord, reqs, gap=0.02)
+            inj = ChaosInjector(
+                cluster, events(base) if events is not None else []
+            )
+            drive(cluster, inj, timeout=60.0)
+            return coord.summary(), coord
+
+    def test_mds_quorum_decodes_every_job(self):
+        from repro.cluster.payloads import coded_data_blocks
+
+        s, coord = self._run(CodingCandidate(scheme="mds", s=2))
+        assert s["served"] == 10
+        assert s["final_B"] == 1  # one group of ALL workers
+        assert s["coding"] == "mds(s=2)"
+        assert s["decoded_jobs"] == len(coord.completed_jobs)
+        assert s["decode_failures"] == 0
+        # decode is EXACT: the job's decoded value equals the k data
+        # blocks the coordinator regenerates from the seed
+        k = 5 - 2
+        target = coded_data_blocks(9, k, coord.config.coding_block_dim)
+        for job in coord.completed_jobs:
+            np.testing.assert_allclose(
+                np.asarray(job.decoded), target, atol=1e-6
+            )
+            # quorum semantics: the winning attempt banked >= k partials
+            won = [a for a in job.attempts
+                   if a.attempt_id == job.winner_attempt]
+            assert len(won) == 1 and len(won[0].values) >= k
+
+    def test_cyclic_quorum_survives_kill(self):
+        from repro.cluster.payloads import coded_data_blocks
+
+        s, coord = self._run(
+            CodingCandidate(scheme="cyclic", s=1),
+            reqs=14,
+            events=lambda base: [
+                ChaosEvent(at=base + 0.15, kind="kill", worker=1)
+            ],
+        )
+        assert s["served"] == 14
+        assert s["deaths"] == 1
+        assert s["decode_failures"] == 0
+        assert s["decoded_jobs"] == len(coord.completed_jobs)
+        # the code was recut for the survivors: decoded sum matches the
+        # CURRENT generation's block count
+        n_now = len(coord._code_slot)
+        assert n_now == 4
+        target = coded_data_blocks(
+            9, n_now, coord.config.coding_block_dim
+        ).sum(axis=0)
+        np.testing.assert_allclose(
+            np.asarray(coord.completed_jobs[-1].decoded), target, atol=1e-5
+        )
+
+    def test_coded_config_conflicts_are_loud(self):
+        cand = CodingCandidate(scheme="mds", s=1)
+        sleep = make_sleep_spec("sexp", work=1.0, delta=0.01, mu=50.0)
+        with pytest.raises(ValueError, match="s=4 tolerates"):
+            ClusterConfig(n_workers=4, coding=CodingCandidate("mds", s=4))
+        with pytest.raises(ValueError, match="ONE group"):
+            ClusterConfig(n_workers=4, n_batches=2, coding=cand)
+        with pytest.raises(ValueError, match="tuner"):
+            ClusterConfig(n_workers=4, coding=cand, tuner=True)
+        with pytest.raises(ValueError, match="mitigation"):
+            ClusterConfig(
+                n_workers=4, coding=cand,
+                policy=PolicyCandidate(kind="clone", quantile=0.9),
+            )
+        with pytest.raises(ValueError, match="sleep payload"):
+            ClusterConfig(
+                n_workers=4, coding=cand,
+                payload=make_deterministic_spec(0.01),
+            )
+        ClusterConfig(n_workers=4, coding=cand, payload=sleep)  # valid
+
+
+def test_coded_payload_partial_is_exact():
+    """Worker-side coded payload: regenerated blocks + coefficient row
+    give the exact partial; pre-set cancel yields no value."""
+    from repro.cluster.payloads import coded_data_blocks, make_coded_spec
+
+    row = [0.5, -1.0, 2.0, 0.0]
+    spec = make_coded_spec(row, data_seed=21, block_dim=6,
+                           family="exp", mu=500.0, work=1.0)
+    out = run_payload(spec, seed=1, cancel=threading.Event())
+    blocks = coded_data_blocks(21, 4, 6)
+    np.testing.assert_allclose(out["value"], np.asarray(row) @ blocks)
+    assert not out["cancelled"]
+    assert payload_duration(spec, seed=1) > 0.0
+
+    cancelled = threading.Event()
+    cancelled.set()
+    out = run_payload(spec, seed=1, cancel=cancelled)
+    assert out["cancelled"] and out["value"] is None
+
+    bare = make_coded_spec(row, data_seed=21, block_dim=6)
+    assert payload_duration(bare, seed=0) == 0.0
+    with pytest.raises(ValueError, match="non-empty"):
+        make_coded_spec([])
 
 
 # ----------------------------------------------------------------- hygiene --

@@ -1,11 +1,14 @@
 """Cyclic gradient coding (the cited alternative scheme) — decode
-correctness + order-statistic closed forms + the comparison result."""
+correctness + order-statistic closed forms + the comparison result, plus
+the PR-9 CRN coupling pins: every replication-vs-coding comparison runs on
+ONE shared draw matrix, so each curve point is bit-identical to the
+standalone simulator that produced it."""
 
 import numpy as np
 import pytest
 from _prop import given, settings, st
 
-from repro.core import Exponential, ShiftedExponential
+from repro.core import Empirical, Exponential, ShiftedExponential
 from repro.core.gradient_coding import (
     CyclicGradientCode,
     compare_schemes,
@@ -81,3 +84,64 @@ def test_s0_equals_full_parallelism():
     cod = simulate_gradient_coding(dist, 8, 0, n_trials=50_000, seed=3)
     rep = simulate_maxmin(dist, 8, 8, n_trials=50_000, seed=4)
     assert abs(cod.mean - rep.mean) < 4 * (cod.stderr + rep.stderr)
+
+
+# -- CRN coupling pins (PR 9) ------------------------------------------------
+# compare_schemes consumes ONE shared (n_trials, N) draw matrix; each curve
+# point must be bit-identical to the standalone simulator at the same seed.
+
+_CRN_DISTS = [
+    Exponential(mu=1.5),
+    ShiftedExponential(delta=0.2, mu=2.0),
+    Empirical(np.random.default_rng(11).gamma(2.0, 0.5, 600)),
+]
+
+
+@pytest.mark.parametrize("dist", _CRN_DISTS, ids=["exp", "sexp", "empirical"])
+def test_compare_schemes_replication_curve_is_maxmin_bitwise(dist):
+    from repro.core import simulate_maxmin
+    from repro.core.policies import divisors
+
+    n, trials, seed = 12, 2_000, 7
+    cmp = compare_schemes(dist, n, n_trials=trials, seed=seed)
+    for b in divisors(n):
+        r = n // b
+        ref = simulate_maxmin(dist, n, b, n_trials=trials, seed=seed)
+        assert cmp["replication"][r] == float(ref.mean), (b, r)
+
+
+@pytest.mark.parametrize("dist", _CRN_DISTS, ids=["exp", "sexp", "empirical"])
+def test_compare_schemes_coding_curve_is_simulate_bitwise(dist):
+    n, trials, seed = 12, 2_000, 7
+    cmp = compare_schemes(dist, n, n_trials=trials, seed=seed)
+    for s in range(n):
+        ref = simulate_gradient_coding(dist, n, s, n_trials=trials, seed=seed)
+        assert cmp["coding"][s + 1] == float(ref.mean), s
+
+
+def test_sweep_coded_cyclic_lane_reproduces_legacy():
+    """The planner-facing coded sweep and the legacy per-scheme simulator
+    consume the same CRN stream: the cyclic (scheme, s) cell's SAMPLES are
+    bit-identical to simulate_gradient_coding (zero-overhead candidates)."""
+    from repro.core import CodingCandidate, sweep_coded
+
+    n, trials, seed = 10, 1_500, 4
+    cands = tuple(
+        CodingCandidate("cyclic", s, encode_overhead=0.0, decode_overhead=0.0)
+        for s in (0, 2, 5)
+    )
+    for dist in _CRN_DISTS:
+        res = sweep_coded([dist], n, cands, n_trials=trials, seed=seed)
+        for ci, c in enumerate(cands):
+            ref = simulate_gradient_coding(
+                dist, n, c.s, n_trials=trials, seed=seed
+            )
+            np.testing.assert_array_equal(res.samples[0, ci], ref.samples)
+
+
+def test_compare_schemes_shared_draws_rank_stably():
+    """CRN discipline: on shared draws the coding curve at overhead 1 and
+    the replication curve at overhead 1 are THE SAME statistic (both wait
+    for all N), so they must agree exactly — no stream divergence."""
+    cmp = compare_schemes(Exponential(1.0), 8, n_trials=3_000, seed=0)
+    assert cmp["replication"][1] == cmp["coding"][1]

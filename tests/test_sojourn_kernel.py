@@ -211,6 +211,82 @@ def test_backend_provenance_reaches_plan():
     assert make_planner("analytic").plan(spec, obj).backend is None
 
 
+# -- coded completion cells (PR 9) --------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def coded_cell_batch():
+    """(cells, trials, workers) service times + per-cell quorum sizes."""
+    rng = np.random.default_rng(13)
+    times = (rng.exponential(1.0, (5, 64, 12)) + 0.05).astype(np.float32)
+    ks = np.array([1, 4, 8, 12, 6], np.int32)
+    return times, ks
+
+
+def test_coded_cells_all_backends_bit_match(coded_cell_batch):
+    """f32 layer: the k-th-order-statistic selection is value-exact, so
+    numpy reference, jit+vmap and the Pallas kernel must agree bit for bit
+    at the same dtype."""
+    times, ks = coded_cell_batch
+    out_np = O.coded_completion_cells(times, ks, backend="numpy")
+    out_jx = O.coded_completion_cells(times, ks, backend="jax")
+    out_pl = O.coded_completion_cells(times, ks, backend="pallas")
+    np.testing.assert_array_equal(out_np, np.asarray(out_jx))
+    np.testing.assert_array_equal(np.asarray(out_jx), np.asarray(out_pl))
+
+
+def test_coded_cells_match_sorted_selection(coded_cell_batch):
+    """The reference IS the k-th smallest of each trial's worker times."""
+    times, ks = coded_cell_batch
+    out = O.coded_completion_cells(times, ks, backend="numpy")
+    srt = np.sort(times, axis=-1)
+    for c, k in enumerate(ks):
+        np.testing.assert_array_equal(out[c], srt[c, :, int(k) - 1])
+
+
+def test_sweep_coded_backends_agree_and_record_provenance():
+    """End-to-end coded sweep: jax and pallas produce IDENTICAL samples
+    (same traced body), numpy agrees to f32 tolerance, and each result
+    carries the engine that actually ran."""
+    from repro.core import CodingCandidate
+
+    cands = (
+        CodingCandidate("cyclic", 2, encode_overhead=0.0,
+                        decode_overhead=0.0),
+        CodingCandidate("mds", 6, encode_overhead=0.01,
+                        decode_overhead=0.02),
+    )
+    kw = dict(n_trials=600, seed=5)
+    r_np = S.sweep_coded(_DISTS, 12, cands, **kw)
+    r_jx = S.sweep_coded(_DISTS, 12, cands, backend="jax", **kw)
+    r_pl = S.sweep_coded(_DISTS, 12, cands, backend="pallas", **kw)
+    assert (r_np.backend, r_jx.backend, r_pl.backend) == (
+        "numpy", "jax", "pallas")
+    np.testing.assert_array_equal(r_jx.samples, r_pl.samples)
+    np.testing.assert_allclose(r_np.samples, r_jx.samples, rtol=1e-5)
+    # measured overhead is ADDED to every sample of its candidate's cells
+    zero = S.sweep_coded(_DISTS, 12, (cands[1].__class__(
+        "mds", 6, encode_overhead=0.0, decode_overhead=0.0),), **kw)
+    np.testing.assert_allclose(
+        r_np.samples[:, 1], zero.samples[:, 0] + 0.03, rtol=1e-12)
+
+
+def test_sweep_sojourn_coded_jax_matches_numpy():
+    """Queueing-aware coded sweep shares the replication sweep's layered
+    contract: numpy vs accelerated agree at distribution level."""
+    from repro.core import CodingCandidate
+
+    cands = (CodingCandidate("cyclic", 3, encode_overhead=0.0,
+                             decode_overhead=0.0),
+             CodingCandidate("mds", 8, encode_overhead=0.0,
+                             decode_overhead=0.0))
+    kw = dict(arrival_rate=0.6, n_jobs=300, seed=2)
+    r_np = S.sweep_sojourn_coded(_DISTS, 12, cands, **kw)
+    r_jx = S.sweep_sojourn_coded(_DISTS, 12, cands, backend="jax", **kw)
+    assert r_np.backend == "numpy" and r_jx.backend == "jax"
+    _dist_close(r_np.samples, r_jx.samples)
+
+
 def test_tuner_replan_budget_waives_cooldown():
     """With replan_time_budget set and the measured plan() time under it,
     attempt pacing stops gating re-plans; the budget-less twin still
