@@ -12,6 +12,7 @@ def main() -> None:
         bench_collectives,
         bench_fig2_spectrum,
         bench_gradient_coding,
+        bench_multitenant,
         bench_planner,
         bench_roofline,
         bench_serving_latency,
@@ -34,6 +35,7 @@ def main() -> None:
         bench_step_time,
         bench_collectives,
         bench_serving_latency,
+        bench_multitenant,
         bench_gradient_coding,
         bench_coding,
         bench_roofline,

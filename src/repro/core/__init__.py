@@ -38,6 +38,8 @@ from .order_stats import (
 from .policies import (
     Assignment,
     PolicyCandidate,
+    ShedPolicy,
+    SloClass,
     balanced_nonoverlapping,
     divisors,
     overlapping_cyclic,
@@ -58,6 +60,8 @@ from .simulator import (
     CodedSweepResult,
     FaultEvent,
     PolicySweepResult,
+    ServingSimResult,
+    ServingSweepResult,
     SimResult,
     SpeculativeSweepResult,
     StepTimeSimulator,
@@ -69,11 +73,13 @@ from .simulator import (
     simulate_maxmin,
     simulate_sojourn,
     simulate_sojourn_policies,
+    simulate_sojourn_serving,
     sweep_coded,
     sweep_simulate,
     sweep_sojourn,
     sweep_sojourn_coded,
     sweep_sojourn_policies,
+    sweep_sojourn_serving,
     sweep_sojourn_speculative,
 )
 from .spectrum import (

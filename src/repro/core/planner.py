@@ -69,6 +69,8 @@ from .order_stats import (
 from .policies import (
     Assignment,
     PolicyCandidate,
+    ShedPolicy,
+    SloClass,
     _validate_rates,
     divisors,
     rate_aware_assignment,
@@ -110,18 +112,30 @@ def _best_speculative_point(
     sample_sets: Sequence[np.ndarray],
     quantiles: Sequence[Optional[float]],
     metric: Metric,
+    feasible: Optional[Sequence[bool]] = None,
 ) -> tuple[SpectrumPoint, Optional[float]]:
     """Pick one B's best candidate: build a SpectrumPoint per candidate
     sample set and return the (point, label) minimizing the objective
     metric.  Label-generic — ``quantiles`` holds clone triggers on the
     legacy speculation axis (None = plain replication) and
     :class:`~repro.core.policies.PolicyCandidate` objects on the policy
-    axis."""
+    axis.
+
+    ``feasible`` masks candidates that fail the stability gate (charged
+    utilization >= 1 once the policy's redundant work is accounted): an
+    infeasible candidate can look great over a finite simulation window —
+    its queue simply has not diverged yet — so it may never win the argmin.
+    When EVERY candidate is infeasible the mask is ignored (the sweep must
+    still emit a point; the caller's feasibility report carries the bad
+    news)."""
     candidates = [
         point_from_samples(n_batches, replication, s) for s in sample_sets
     ]
+    indices: Sequence[int] = range(len(candidates))
+    if feasible is not None and any(feasible):
+        indices = [i for i in indices if feasible[i]]
     best = min(
-        range(len(candidates)),
+        indices,
         key=lambda qi: metric_value(candidates[qi], metric),
     )
     return candidates[best], quantiles[best]
@@ -310,6 +324,25 @@ class Objective:
     into every sojourn sweep — without it the planner silently scores
     Poisson arrivals the engine never runs (the bug this field fixes).
     Offsets shorter than the sweep's job count are cycled trace-style.
+    For serving objectives (``slo_classes``) the offsets are per-REQUEST
+    arrival times.
+
+    **Multi-tenant serving.**  ``slo_classes`` (load-aware objectives only;
+    requires ``batch_size``) switches :class:`SimulatedPlanner` into the
+    per-request serving sweep (:func:`~repro.core.simulator.
+    sweep_sojourn_serving`): requests carrying per-class SLO deadlines are
+    batch-formed by a weighted-fair-share master and every
+    (B, policy, max_wait, shed) cell is scored on the same shared-CRN draw
+    matrix.  ``max_waits`` makes the master's batch-formation timeout a
+    co-optimization axis; ``sheds`` lists the admission-control /
+    load-shedding candidates (a ``ShedPolicy('none')`` baseline is
+    prepended automatically, so "shed nothing" always competes).  A cell is
+    FEASIBLE only when every class's ``miss_target`` holds (shed requests
+    count as misses); the winner is picked feasibility-first, then by the
+    class-weighted objective metric over served requests, and lands on
+    :attr:`Plan.policy` / :attr:`Plan.max_wait` / :attr:`Plan.shed` with a
+    per-class miss report in :attr:`Plan.class_report`.  Mutually exclusive
+    with ``speculation_quantiles`` and ``coding``.
 
     >>> Objective(metric="p99", utilization=0.7).load_aware
     True
@@ -327,6 +360,10 @@ class Objective:
     policies: Optional[tuple[PolicyCandidate, ...]] = None
     arrivals: Optional[tuple[float, ...]] = None
     coding: Optional[tuple[CodingCandidate, ...]] = None
+    slo_classes: Optional[tuple[SloClass, ...]] = None
+    batch_size: Optional[int] = None
+    max_waits: Optional[tuple[float, ...]] = None
+    sheds: Optional[tuple[ShedPolicy, ...]] = None
 
     def __post_init__(self):
         if self.metric not in METRICS:
@@ -431,26 +468,145 @@ class Objective:
                     "utilization): arrival offsets only matter for sojourn "
                     "scoring"
                 )
+        if self.slo_classes is not None:
+            classes = tuple(self.slo_classes)
+            if not classes:
+                raise ValueError("slo_classes must be non-empty when given")
+            for c in classes:
+                if not isinstance(c, SloClass):
+                    raise TypeError(
+                        "slo_classes entries must be SloClass, got "
+                        f"{type(c).__name__}"
+                    )
+            names = [c.name for c in classes]
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate SLO class names in {names}")
+            object.__setattr__(self, "slo_classes", classes)
+            if not self.load_aware:
+                raise ValueError(
+                    "slo_classes needs a load-aware objective (arrival_rate "
+                    "or utilization): tenant classes are scored on "
+                    "per-request sojourn under queueing"
+                )
+            if self.batch_size is None:
+                raise ValueError(
+                    "slo_classes needs batch_size (requests per batch-job): "
+                    "the serving sweep forms request batches"
+                )
+            if self.speculation_quantiles is not None:
+                raise ValueError(
+                    "slo_classes is incompatible with the legacy "
+                    "speculation_quantiles axis — express clone triggers as "
+                    "PolicyCandidate('clone', quantile=q) in policies"
+                )
+            if self.coding is not None:
+                raise ValueError(
+                    "slo_classes cannot be combined with coding candidates "
+                    "(the coded sweep has no per-request serving mode yet)"
+                )
+        if self.batch_size is not None:
+            if self.slo_classes is None:
+                raise ValueError("batch_size requires slo_classes")
+            if int(self.batch_size) < 1:
+                raise ValueError(
+                    f"batch_size must be >= 1, got {self.batch_size}"
+                )
+            object.__setattr__(self, "batch_size", int(self.batch_size))
+        if self.max_waits is not None:
+            if self.slo_classes is None:
+                raise ValueError("max_waits requires slo_classes")
+            waits = tuple(float(w) for w in self.max_waits)
+            if not waits:
+                raise ValueError("max_waits must be non-empty when given")
+            for w in waits:
+                if not w > 0 or math.isnan(w):
+                    raise ValueError(
+                        f"max_waits entries must be positive, got {w}"
+                    )
+            object.__setattr__(self, "max_waits", waits)
+        if self.sheds is not None:
+            if self.slo_classes is None:
+                raise ValueError("sheds requires slo_classes")
+            sheds = tuple(self.sheds)
+            if not sheds:
+                raise ValueError("sheds must be non-empty when given")
+            for s in sheds:
+                if not isinstance(s, ShedPolicy):
+                    raise TypeError(
+                        "sheds entries must be ShedPolicy, got "
+                        f"{type(s).__name__}"
+                    )
+            if not any(s.kind == "none" for s in sheds):
+                # 'shed nothing' always competes, mirroring the policy axis
+                sheds = (ShedPolicy(), *sheds)
+            object.__setattr__(self, "sheds", sheds)
 
     @property
     def load_aware(self) -> bool:
         """True when the metric applies to sojourn under queueing load."""
         return self.arrival_rate is not None or self.utilization is not None
 
-    def offered_rate(self, spec: "ClusterSpec") -> float:
+    def offered_rate(
+        self,
+        spec: "ClusterSpec",
+        policy: Optional[PolicyCandidate] = None,
+    ) -> float:
         """The batch-job arrival rate this objective describes.
 
         ``utilization`` is anchored to the NO-REPLICATION capacity — N
         server groups each serving one ``job_load``-sized batch at a time —
         so a single utilization number compares fairly across candidate B
         (replication trades that capacity for lighter service tails).
+
+        ``policy`` charges that candidate's expected redundant work
+        (:meth:`~repro.core.policies.PolicyCandidate.work_factor`): a
+        clone/hedged policy dispatches extra replica sets that consume real
+        capacity, so the rate that holds ``utilization`` UNDER that policy
+        is lower by the work factor.  Without it the conversion silently
+        scored redundant cells at the no-redundancy rate — the optimistic
+        bias this argument fixes.  An explicit ``arrival_rate`` is returned
+        verbatim (the caller pinned the load; feasibility is then the
+        :meth:`charged_utilization` gate's job).
         """
         if self.arrival_rate is not None:
             return self.arrival_rate
         if self.utilization is None:
             raise ValueError("objective has no load (arrival_rate/utilization)")
         mean_service = spec.dist.scaled(self.job_load).mean()
-        return self.utilization * spec.n_workers / mean_service
+        rate = self.utilization * spec.n_workers / mean_service
+        if policy is not None:
+            rate /= policy.work_factor(spec.dist.scaled(self.job_load))
+        return rate
+
+    def charged_utilization(
+        self,
+        spec: "ClusterSpec",
+        policy: Optional[PolicyCandidate] = None,
+    ) -> float:
+        """Offered load as a fraction of fleet capacity AFTER charging the
+        policy's expected redundant work.
+
+        This is the stability gate's number: a sweep cell whose charged
+        utilization reaches 1 has no steady state — its finite-window
+        sojourn samples are a mirage — so the planners mark it infeasible
+        regardless of how good the samples look.
+        """
+        mean_service = spec.dist.scaled(self.job_load).mean()
+        util = self.offered_rate(spec) * mean_service / spec.n_workers
+        if policy is not None:
+            util *= policy.work_factor(spec.dist.scaled(self.job_load))
+        return util
+
+    def request_rate(self, spec: "ClusterSpec") -> float:
+        """Per-REQUEST arrival rate of a serving objective.
+
+        ``arrival_rate`` / ``utilization`` keep their batch-JOB semantics
+        everywhere (one job = ``batch_size`` requests), so the serving
+        sweep's request process is the job rate scaled by the batch size.
+        """
+        if self.batch_size is None:
+            raise ValueError("request_rate needs slo_classes + batch_size")
+        return self.offered_rate(spec) * self.batch_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -493,6 +649,13 @@ class Plan:
     ``speculation_quantile`` are ``None`` (the code IS the straggler
     strategy), and ``spectrum`` still describes the replication sweep so
     hysteresis comparisons keep working.
+
+    ``max_wait`` / ``shed`` / ``class_report`` are the serving-sweep
+    decision (only when the Objective carried ``slo_classes``): the batch
+    formation timeout and admission/shedding policy the winning cell ran
+    with — the engine adopts BOTH live — and the per-class
+    ``(name, miss_rate)`` report of that cell (NaN miss rate for classes
+    with no deadline).
     """
 
     spec: ClusterSpec
@@ -509,6 +672,9 @@ class Plan:
     vote_share: Optional[tuple[tuple[int, float], ...]] = None  # per-B votes
     backend: Optional[str] = None  # resolved sim backend (provenance)
     coding: Optional[CodingCandidate] = None  # adopted coded scheme
+    max_wait: Optional[float] = None  # serving: batch-formation timeout
+    shed: Optional[ShedPolicy] = None  # serving: adopted admission policy
+    class_report: Optional[tuple[tuple[str, float], ...]] = None  # miss rates
 
     @property
     def n_workers(self) -> int:
@@ -565,6 +731,11 @@ class Planner:
     # an Empirical distribution (rather than a parametric fit)?  The tuner
     # builds the spec's dist accordingly.
     consumes_empirical = False
+    # capability flag: can this planner score multi-tenant serving
+    # objectives (slo_classes — per-request sweep with WFQ batch formation,
+    # max_wait and shed axes)?  Serving re-plan triggers check it before
+    # attaching tenant classes to the Objective.
+    consumes_classes = False
 
     def sweep_spectrum(
         self, spec: ClusterSpec, objective: Objective
@@ -753,6 +924,7 @@ class SimulatedPlanner(Planner):
 
     name = "simulated"
     consumes_load = True
+    consumes_classes = True
 
     def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
         return None
@@ -898,6 +1070,12 @@ class SimulatedPlanner(Planner):
             )
             pts = []
             self._policy_by_b = {}
+            # stability gate: charge each candidate's redundant work before
+            # it may win (finite-window samples of an overloaded cell lie)
+            stable = [
+                objective.charged_utilization(spec, p) < 1.0
+                for p in res.policies
+            ]
             for i, b in enumerate(res.splits):
                 point, best_p = _best_speculative_point(
                     b,
@@ -905,6 +1083,7 @@ class SimulatedPlanner(Planner):
                     [res.samples[0, i, pi] for pi in range(len(res.policies))],
                     res.policies,
                     objective.metric,
+                    feasible=stable,
                 )
                 self._policy_by_b[b] = best_p
                 pts.append(point)
@@ -972,6 +1151,116 @@ class SimulatedPlanner(Planner):
             backend=self._resolve_backend(),
         )
 
+    def plan(
+        self, spec: ClusterSpec, objective: Optional[Objective] = None
+    ) -> Plan:
+        objective = objective if objective is not None else Objective()
+        if objective.slo_classes:
+            return self._plan_serving(spec, objective)
+        return super().plan(spec, objective)
+
+    def _plan_serving(self, spec: ClusterSpec, objective: Objective) -> Plan:
+        """Multi-tenant serving sweep: every (B, policy, max_wait, shed)
+        cell scored per-request on one shared-CRN draw matrix
+        (:func:`~repro.core.simulator.sweep_sojourn_serving`).
+
+        Winner selection is FEASIBILITY-FIRST: a cell is feasible when its
+        charged utilization stays under 1 (stability gate,
+        :meth:`Objective.charged_utilization`) AND every class's
+        ``miss_target`` holds (shed requests count as misses).  Among
+        feasible cells — or all cells when none is feasible — the
+        class-weighted objective metric over SERVED requests decides; ties
+        resolve to the earliest candidate on each axis, so the 'none'
+        baselines win when interventions buy nothing.  The per-B spectrum
+        is built from each B's best cell (served post-warmup latencies), so
+        hysteresis comparisons read the latency the engine would deliver.
+        """
+        from .simulator import (  # local: avoid import cycle
+            sweep_sojourn_serving,
+        )
+
+        if spec.heterogeneous:
+            raise ValueError(
+                "multi-tenant serving objectives (slo_classes) do not "
+                "support rate-skewed fleets yet — the serving sweep scores "
+                "homogeneous replica sets; drop spec.rates or plan without "
+                "slo_classes"
+            )
+        backend = self._resolve_backend()
+        res = sweep_sojourn_serving(
+            spec.dist,
+            spec.n_workers,
+            request_rate=objective.request_rate(spec),
+            batch_size=objective.batch_size,
+            slo_classes=objective.slo_classes,
+            policies=objective.policies or (PolicyCandidate(),),
+            max_waits=objective.max_waits or (math.inf,),
+            sheds=objective.sheds or (ShedPolicy(),),
+            n_requests=self.n_trials,
+            seed=self.seed,
+            feasible_b=spec.feasible_batches(),
+            job_load=objective.job_load,
+            arrivals=objective.arrivals,
+            backend=backend,
+        )
+        stable = [
+            objective.charged_utilization(spec, p) < 1.0
+            for p in res.policies
+        ]
+        n_p, n_w, n_h = len(res.policies), len(res.max_waits), len(res.sheds)
+        best_by_b: list[tuple] = []
+        for si in range(len(res.splits)):
+            best = None
+            for pi in range(n_p):
+                for wi in range(n_w):
+                    for hi in range(n_h):
+                        feas = stable[pi] and res.feasible(0, si, pi, wi, hi)
+                        score = res.weighted_metric(
+                            0, si, pi, wi, hi, objective.metric
+                        )
+                        key = (not feas, score, pi, wi, hi)
+                        if best is None or key < best:
+                            best = key
+            best_by_b.append(best)
+        pts = []
+        for si, b in enumerate(res.splits):
+            _, _, pi, wi, hi = best_by_b[si]
+            lat = res.request_latency(0, si, pi, wi, hi)[res.warmup :]
+            served = lat[~np.isnan(lat)]
+            if served.size == 0:
+                served = np.asarray([math.inf])
+            pts.append(point_from_samples(b, spec.n_workers // b, served))
+        spectrum = result_from_points(pts)
+        win = min(
+            range(len(res.splits)),
+            key=lambda si: (best_by_b[si][0], best_by_b[si][1], si),
+        )
+        _, _, pi, wi, hi = best_by_b[win]
+        b_star = res.splits[win]
+        pol = res.policies[pi]
+        miss = res.class_miss_rates(0, win, pi, wi, hi)
+        return Plan(
+            spec=spec,
+            objective=objective,
+            replication=ReplicationPlan(
+                n_data=spec.n_workers, n_batches=b_star
+            ),
+            assignment=self.assignment_for(spec, b_star),
+            predicted=spectrum.at(b_star),
+            spectrum=spectrum,
+            planner=self.name,
+            speculation_quantile=(
+                pol.quantile if pol.kind == "clone" else None
+            ),
+            policy=pol,
+            backend=self._plan_backend(),
+            max_wait=float(res.max_waits[wi]),
+            shed=res.sheds[hi],
+            class_report=tuple(
+                (c.name, float(m)) for c, m in zip(res.classes, miss)
+            ),
+        )
+
 
 @dataclasses.dataclass
 class HeterogeneousPlanner(SimulatedPlanner):
@@ -1036,6 +1325,10 @@ class HeterogeneousPlanner(SimulatedPlanner):
             rate = objective.offered_rate(spec)
             if objective.policies:
                 backend = self._resolve_backend()
+                stable = [
+                    objective.charged_utilization(spec, p) < 1.0
+                    for p in objective.policies
+                ]
                 pts = []
                 for b in spec.feasible_batches():
                     assignment = rate_aware_assignment(
@@ -1058,6 +1351,7 @@ class HeterogeneousPlanner(SimulatedPlanner):
                     point, best_p = _best_speculative_point(
                         b, spec.n_workers // b, sample_sets,
                         objective.policies, objective.metric,
+                        feasible=stable,
                     )
                     self._policy_by_b[b] = best_p
                     pts.append(point)
@@ -1157,6 +1451,9 @@ class EmpiricalPlanner(SimulatedPlanner):
     name = "empirical"
     consumes_empirical = True
     consumes_rates = True
+    # the serving sweep needs a mu-exposing parametric dist (its fluid
+    # drain model and empirical parity constraints reject Empirical)
+    consumes_classes = False
 
     def _sweep_rates(self, spec: ClusterSpec) -> Optional[np.ndarray]:
         # only feed rates through when actually skewed: a uniform fleet
@@ -1278,7 +1575,19 @@ class EmpiricalPlanner(SimulatedPlanner):
             )
             # each resample scores every B at its best candidate; the
             # candidate REPORTED per B comes from the pooled samples (one
-            # consistent answer for the engine to adopt)
+            # consistent answer for the engine to adopt).  The stability
+            # gate (charged utilization < 1) masks candidates whose
+            # redundant work overloads the fleet, unless every candidate
+            # is masked.
+            stable = [
+                objective.charged_utilization(spec, p) < 1.0
+                for p in res.policies
+            ]
+            pi_candidates = (
+                [pi for pi in range(len(res.policies)) if stable[pi]]
+                if any(stable)
+                else list(range(len(res.policies)))
+            )
             best_p_index: dict[int, int] = {}
             for s, b in enumerate(splits):
                 pooled_pts = [
@@ -1290,7 +1599,7 @@ class EmpiricalPlanner(SimulatedPlanner):
                     for pi in range(len(res.policies))
                 ]
                 pi_best = min(
-                    range(len(res.policies)),
+                    pi_candidates,
                     key=lambda pi: metric_value(
                         pooled_pts[pi], objective.metric
                     ),
@@ -1310,7 +1619,7 @@ class EmpiricalPlanner(SimulatedPlanner):
                     for pi in range(len(res.policies))
                 ]
                 pi = min(
-                    range(len(res.policies)),
+                    pi_candidates,
                     key=lambda i: metric_value(pts[i], objective.metric),
                 )
                 return res.samples[k, s, pi]
@@ -1489,6 +1798,13 @@ class EmpiricalPlanner(SimulatedPlanner):
         metric breaks ties), race it against any coded candidates, and
         report the vote distribution on the Plan."""
         objective = objective if objective is not None else Objective()
+        if objective.slo_classes:
+            raise ValueError(
+                "EmpiricalPlanner cannot score multi-tenant serving "
+                "objectives (slo_classes): the serving sweep's admission "
+                "model needs a parametric service distribution; use "
+                "SimulatedPlanner (make_planner('simulated'))"
+            )
         spectrum = self.sweep_spectrum(spec, objective)
         votes = self._votes
         total = sum(votes.values())

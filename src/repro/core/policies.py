@@ -26,6 +26,8 @@ import numpy as np
 __all__ = [
     "Assignment",
     "PolicyCandidate",
+    "ShedPolicy",
+    "SloClass",
     "balanced_nonoverlapping",
     "replica_major_nonoverlapping",
     "unbalanced_nonoverlapping",
@@ -34,6 +36,28 @@ __all__ = [
     "rate_aware_assignment",
     "divisors",
 ]
+
+
+def _pair_means(dist) -> tuple[float | None, float | None]:
+    """(E[X], E[min(X1, X2)]) of a service distribution, or (None, None).
+
+    Exp/SExp-shaped distributions (exposing ``mu`` + optional ``delta``)
+    get the closed form ``shift + 1/(k*mu)``; anything with a quantile
+    function gets the identity ``E[min2] = int_0^1 ppf(v) * 2(1-v) dv`` on
+    a midpoint grid.  Used by :meth:`PolicyCandidate.work_factor`.
+    """
+    if dist is None:
+        return None, None
+    mu = getattr(dist, "mu", None)
+    if mu is not None:
+        shift = float(getattr(dist, "delta", 0.0))
+        return shift + 1.0 / float(mu), shift + 0.5 / float(mu)
+    ppf = getattr(dist, "ppf", None)
+    if ppf is None:
+        return None, None
+    levels = (2.0 * np.arange(512) + 1.0) / 1024.0
+    vals = np.asarray(ppf(levels), dtype=float)
+    return float(vals.mean()), float((vals * 2.0 * (1.0 - levels)).mean())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +118,128 @@ class PolicyCandidate:
         if self.kind in ("clone", "relaunch"):
             return self.quantile is not None
         return self.hedge_fraction > 0.0
+
+    def work_factor(self, dist=None) -> float:
+        """Expected service WORK per job relative to an unmitigated job.
+
+        The redundancy charge load-aware capacity accounting applies
+        (Aktaş/Soljanin: clones attack capacity as well as stragglers):
+
+        * ``'none'`` / ``'relaunch'`` — 1.0 (relaunch re-draws on the SAME
+          set, no extra capacity);
+        * ``'clone'``  — ``1 + (1 - quantile)``: the trigger fires for the
+          ``(1-q)`` late fraction and the clone occupies at most one extra
+          set for at most its own service (an upper bound — clones launch
+          idle-only, so the true charge is no larger);
+        * ``'hedged'`` — ``1 + f * (2 E[min(X1,X2)] / E[X] - 1)`` with the
+          pair mean from ``dist`` (both racing sets run until the winner
+          cancels them).  Memoryless service makes hedging work-NEUTRAL
+          (the factor collapses to 1); a shift-dominated fleet pays nearly
+          the full duplicate.  Without a usable ``dist`` the conservative
+          full-duplicate bound ``1 + f`` applies.
+        """
+        if not self.enabled or self.kind == "relaunch":
+            return 1.0
+        if self.kind == "clone":
+            return 2.0 - self.quantile
+        mean, mean_min2 = _pair_means(dist)
+        if mean is None or mean <= 0:
+            return 1.0 + self.hedge_fraction
+        extra = max(2.0 * mean_min2 / mean - 1.0, 0.0)
+        return 1.0 + self.hedge_fraction * extra
+
+
+@dataclasses.dataclass(frozen=True)
+class SloClass:
+    """One tenant class of a multi-tenant serving objective.
+
+    * ``name``        — the :attr:`repro.serving.queueing.Request.slo` label
+      this class matches;
+    * ``share``       — this class's fraction of request traffic (shares
+      are normalized across the objective's classes);
+    * ``weight``      — fair-share weight: drives both the master's WFQ
+      batch formation and the weight of this class's metric in the sweep's
+      scoring;
+    * ``deadline``    — relative SLO deadline per request (sim-time units;
+      ``None`` = no deadline, the throughput-tenant setting);
+    * ``miss_target`` — maximum acceptable miss fraction (shed requests
+      count as misses).  Cells breaching any class's target are infeasible
+      in the sweep; requires a ``deadline``.
+
+    >>> SloClass("premium", share=0.25, weight=4.0, deadline=2.0,
+    ...          miss_target=0.05)
+    SloClass(name='premium', share=0.25, weight=4.0, deadline=2.0, miss_target=0.05)
+    """
+
+    name: str
+    share: float = 1.0
+    weight: float = 1.0
+    deadline: float | None = None
+    miss_target: float | None = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("tenant class needs a non-empty name")
+        if self.share <= 0 or not np.isfinite(self.share):
+            raise ValueError(f"share must be positive finite, got {self.share}")
+        if self.weight <= 0 or not np.isfinite(self.weight):
+            raise ValueError(
+                f"weight must be positive finite, got {self.weight}"
+            )
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(
+                f"deadline must be positive, got {self.deadline}"
+            )
+        if self.miss_target is not None:
+            if self.deadline is None:
+                raise ValueError(
+                    f"class {self.name!r}: miss_target needs a deadline"
+                )
+            if not 0.0 <= self.miss_target < 1.0:
+                raise ValueError(
+                    f"miss_target must be in [0, 1), got {self.miss_target}"
+                )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedPolicy:
+    """One admission-control / load-shedding setting for the sweep to score.
+
+    * ``'none'``    — serve everything (the baseline every sweep keeps);
+    * ``'expired'`` — drop requests already past their deadline at
+      admission or formation (``QueuePolicy.drop_expired``);
+    * ``'cap'``     — full admission control: batch formation is throttled
+      to a ``utilization`` fraction of the fleet's modeled drain rate, so
+      overload backlog accumulates in the admission queue, where arrivals
+      finding ``cap`` requests queued are shed — weight-aware under WFQ
+      (``QueuePolicy.queue_cap``): a heavier-class arrival evicts the
+      newest request of the cheapest backlogged class instead of being
+      shed itself, so overload lands on the low-weight tenants first.
+
+    >>> ShedPolicy("cap", cap=32)
+    ShedPolicy(kind='cap', cap=32, utilization=0.9)
+    """
+
+    kind: str = "none"  # 'none' | 'expired' | 'cap'
+    cap: int | None = None  # queue-length cap ('cap' only)
+    utilization: float = 0.9  # admission throttle target ('cap' only)
+
+    def __post_init__(self):
+        if self.kind not in ("none", "expired", "cap"):
+            raise ValueError(
+                f"unknown shed kind {self.kind!r} "
+                "(use 'none'|'expired'|'cap')"
+            )
+        if (self.cap is not None) != (self.kind == "cap"):
+            raise ValueError(
+                f"cap is required for 'cap' and only 'cap', got {self!r}"
+            )
+        if self.cap is not None and self.cap < 1:
+            raise ValueError(f"cap must be >= 1, got {self.cap}")
+        if not 0.0 < self.utilization <= 1.0:
+            raise ValueError(
+                f"utilization must be in (0, 1], got {self.utilization}"
+            )
 
 
 def divisors(n: int) -> list[int]:

@@ -99,6 +99,12 @@ class TunerConfig:
     # SLO trigger: when the observed deadline-miss rate exceeds this target,
     # the hysteresis threshold is waived for the next re-plan (None = off)
     miss_rate_target: Optional[float] = None
+    # sliding-window size, in REQUESTS, for deadline-miss telemetry.
+    # observe_deadline_misses feeds ONE entry per resolved request (served
+    # or dropped), so the window that matches window_steps batches of
+    # telemetry is window_steps x the serving batch size — the engine sets
+    # exactly that.  None = window_steps entries (legacy).
+    miss_window: Optional[int] = None
     # goodness-of-fit gate: when set, each re-plan attempt KS-tests the
     # parametric fit against the observation window (censoring-aware) at
     # this significance level; a rejected fit reroutes THAT re-plan through
@@ -185,6 +191,10 @@ class StragglerTuner:
         policy_candidates: tuple | None = None,
         arrival_offsets: np.ndarray | None = None,
         coding_candidates: tuple | None = None,
+        slo_classes: tuple | None = None,
+        serving_batch_size: int | None = None,
+        max_wait_candidates: tuple[float, ...] | None = None,
+        shed_candidates: tuple | None = None,
     ):
         self.plan = plan
         self.config = config or TunerConfig()
@@ -226,6 +236,52 @@ class StragglerTuner:
         self.coding_candidates = (
             tuple(coding_candidates) if coding_candidates else None
         )
+        # multi-tenant serving: when set, load-aware re-plans run the
+        # SERVING sweep (per-request admission/WFQ/shedding model) instead
+        # of the job-level sojourn sweep — every (B, policy, max_wait,
+        # shed) cell scored on shared CRN draws, winner landing on
+        # Plan.max_wait / Plan.shed / Plan.class_report.  Requires the
+        # serving batch size (Objective.request_rate needs it to convert
+        # the observed JOB arrival rate back to a request rate).
+        self.slo_classes = tuple(slo_classes) if slo_classes else None
+        self.serving_batch_size = (
+            int(serving_batch_size) if serving_batch_size is not None else None
+        )
+        self.max_wait_candidates = (
+            tuple(float(w) for w in max_wait_candidates)
+            if max_wait_candidates
+            else None
+        )
+        self.shed_candidates = (
+            tuple(shed_candidates) if shed_candidates else None
+        )
+        if self.slo_classes:
+            if self.serving_batch_size is None:
+                raise ValueError(
+                    "slo_classes requires serving_batch_size (the request "
+                    "rate is the observed job rate times the batch size)"
+                )
+            if self.speculation_quantiles:
+                raise ValueError(
+                    "slo_classes and speculation_quantiles are mutually "
+                    "exclusive; use PolicyCandidate('clone', quantile=q) "
+                    "entries in policy_candidates"
+                )
+            if self.coding_candidates:
+                raise ValueError(
+                    "slo_classes and coding_candidates are mutually "
+                    "exclusive: the serving sweep scores replication "
+                    "policies only"
+                )
+        elif (
+            self.max_wait_candidates
+            or self.shed_candidates
+            or self.serving_batch_size is not None
+        ):
+            raise ValueError(
+                "serving_batch_size / max_wait_candidates / shed_candidates "
+                "only apply with slo_classes"
+            )
         # measured job-arrival offsets (non-Poisson traffic): threaded into
         # the load-aware sweep so candidates are scored under the arrival
         # process the engine actually runs, not a Poisson stand-in
@@ -250,10 +306,25 @@ class StragglerTuner:
         self._sojourns: deque[np.ndarray] = deque(
             maxlen=self.config.window_steps
         )
-        # (n_missed, n_total) per observation: windowed deadline-miss telemetry
-        self._misses: deque[tuple[int, int]] = deque(
-            maxlen=self.config.window_steps
+        # (n_missed, n_total) per observation: windowed deadline-miss
+        # telemetry, one entry per resolved request — sized in request
+        # units (TunerConfig.miss_window), window_steps entries by default
+        self._miss_window = (
+            self.config.miss_window
+            if self.config.miss_window is not None
+            else self.config.window_steps
         )
+        if self._miss_window < 1:
+            raise ValueError(
+                f"miss_window must be >= 1, got {self._miss_window}"
+            )
+        self._misses: deque[tuple[int, int]] = deque(
+            maxlen=self._miss_window
+        )
+        # same telemetry split per SLO class (key = class name): the
+        # per-class windows drive class-target breach detection — a fleet
+        # meeting its GLOBAL miss target can still be starving one tenant
+        self._class_misses: dict[str, deque[tuple[int, int]]] = {}
         self._step = 0
         self._last_replan = -(10**9)
         self._last_attempt = -(10**9)
@@ -391,14 +462,19 @@ class StragglerTuner:
         if s.size:
             self._sojourns.append(s)
 
-    def observe_deadline_misses(self, n_missed: int, n_total: int) -> None:
+    def observe_deadline_misses(
+        self, n_missed: int, n_total: int, slo: str = ""
+    ) -> None:
         """Record SLO outcomes: of ``n_total`` deadline-carrying requests
         that resolved (served or dropped), ``n_missed`` missed.
 
         The windowed rate (:attr:`observed_miss_rate`) is the SLO re-plan
         trigger: past ``TunerConfig.miss_rate_target`` the next re-plan
         skips the hysteresis threshold — a fleet in breach moves for any
-        predicted win, not just a large one.
+        predicted win, not just a large one.  ``slo`` attributes the
+        observation to a tenant class; per-class windows
+        (:meth:`class_miss_rates`) then drive class-target breach
+        detection for multi-tenant objectives.
         """
         if n_total < 0 or not 0 <= n_missed <= max(n_total, 0):
             raise ValueError(
@@ -406,6 +482,12 @@ class StragglerTuner:
             )
         if n_total > 0:
             self._misses.append((int(n_missed), int(n_total)))
+            if slo:
+                lane = self._class_misses.get(slo)
+                if lane is None:
+                    lane = deque(maxlen=self._miss_window)
+                    self._class_misses[slo] = lane
+                lane.append((int(n_missed), int(n_total)))
 
     @property
     def observed_miss_rate(self) -> Optional[float]:
@@ -415,6 +497,29 @@ class StragglerTuner:
         missed = sum(m for m, _ in self._misses)
         total = sum(t for _, t in self._misses)
         return missed / total
+
+    def class_miss_rates(self) -> dict[str, float]:
+        """Windowed deadline-miss fraction per SLO class (observed classes
+        only — a class with no resolved deadline-carrying requests in the
+        window has no entry)."""
+        out: dict[str, float] = {}
+        for name, lane in self._class_misses.items():
+            total = sum(t for _, t in lane)
+            if total > 0:
+                out[name] = sum(m for m, _ in lane) / total
+        return out
+
+    def _class_target_breached(self) -> bool:
+        """Whether any SLO class with a miss target is over it (windowed)."""
+        if not self.slo_classes:
+            return False
+        rates = self.class_miss_rates()
+        return any(
+            c.miss_target is not None
+            and rates.get(c.name) is not None
+            and rates[c.name] > c.miss_target
+            for c in self.slo_classes
+        )
 
     def observed_sojourn(self, metric: Metric) -> Optional[float]:
         """The objective metric evaluated on the observed sojourn window."""
@@ -544,6 +649,17 @@ class StragglerTuner:
                 policies=self.policy_candidates,
                 arrivals=self.arrival_offsets,
             )
+            # multi-tenant serving: a class-capable planner re-plans with
+            # the full per-request objective — the sweep then co-optimizes
+            # (B, policy, max_wait, shed) and reports per-class miss rates
+            if self.slo_classes and getattr(planner, "consumes_classes", False):
+                objective = dataclasses.replace(
+                    objective,
+                    slo_classes=self.slo_classes,
+                    batch_size=self.serving_batch_size,
+                    max_waits=self.max_wait_candidates,
+                    sheds=self.shed_candidates,
+                )
         # the coded race applies to BOTH modes (batch completion and
         # sojourn); gate on consumes_load as the "simulated planner"
         # capability — the closed-form planner cannot score coded cells
@@ -671,6 +787,10 @@ class StragglerTuner:
             and miss_rate > self.config.miss_rate_target
         ):
             threshold = 0.0
+        # a PER-CLASS target in breach waives hysteresis too: the global
+        # rate can look healthy while a premium tenant is starving
+        if self._class_target_breached():
+            threshold = 0.0
         if improvement < threshold:
             return None
         self._last_replan = self._step
@@ -696,4 +816,5 @@ class StragglerTuner:
         # transient) observations would let every move justify the next one
         self._sojourns.clear()
         self._misses.clear()
+        self._class_misses.clear()
         return self.plan

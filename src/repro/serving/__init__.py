@@ -4,6 +4,7 @@ from repro.serving.arrivals import (
     ArrivalProcess,
     DeterministicArrivals,
     MMPPArrivals,
+    MultiTenantArrivals,
     PoissonArrivals,
     TraceArrivals,
     make_arrivals,
@@ -14,6 +15,7 @@ from repro.serving.engine import (
     ServeEngineConfig,
 )
 from repro.serving.queueing import (
+    AdmissionQueue,
     BatchJob,
     ClonePolicy,
     EventDrivenMaster,
@@ -28,6 +30,7 @@ from repro.serving.queueing import (
 )
 
 __all__ = [
+    "AdmissionQueue",
     "ArrivalProcess",
     "BatchJob",
     "ClonePolicy",
@@ -35,6 +38,7 @@ __all__ = [
     "EventDrivenMaster",
     "HedgedDispatchPolicy",
     "MMPPArrivals",
+    "MultiTenantArrivals",
     "NoOpPolicy",
     "PoissonArrivals",
     "QueuePolicy",

@@ -16,7 +16,14 @@ not just the service distribution.  This module supplies the arrival side:
 * :class:`DeterministicArrivals`  — fixed inter-arrival gap (D/G/B), the
                                     zero-variance anchor;
 * :class:`TraceArrivals`          — replay of recorded arrival offsets, for
-                                    production traces and regression pinning.
+                                    production traces and regression pinning;
+* :class:`MultiTenantArrivals`    — the north-star serving workload: several
+                                    tenant classes sharing one stream, with
+                                    diurnal (sinusoidal) rate modulation and
+                                    Poisson-burst spikes layered on top.  Its
+                                    :meth:`~MultiTenantArrivals
+                                    .sample_with_classes` additionally labels
+                                    each arrival with its tenant class.
 
 Every process implements ``sample(rng, n, start) -> (n,) ascending absolute
 times``; randomness comes only from the caller's ``numpy`` Generator so runs
@@ -36,6 +43,7 @@ __all__ = [
     "MMPPArrivals",
     "DeterministicArrivals",
     "TraceArrivals",
+    "MultiTenantArrivals",
     "make_arrivals",
 ]
 
@@ -199,11 +207,142 @@ class TraceArrivals(ArrivalProcess):
         return (len(o) - 1) / float(o[-1] - o[0])
 
 
+@dataclasses.dataclass(frozen=True)
+class MultiTenantArrivals(ArrivalProcess):
+    """Mixed-tenant traffic: classes + diurnal load + burst spikes.
+
+    The north-star serving workload of the multi-tenant planner sweep.  A
+    base nonhomogeneous Poisson stream carries the steady traffic, its rate
+    modulated sinusoidally (``rate * (1 + diurnal_amplitude *
+    sin(2*pi*t/diurnal_period))``, sampled by thinning against the peak
+    rate); on top, burst EVENTS arrive as a Poisson process of rate
+    ``burst_rate``, each dumping ``burst_size`` extra arrivals uniformly
+    over the next ``burst_span`` time units (flash crowds).  Every arrival
+    is labeled with a tenant class drawn i.i.d. from ``classes`` — a tuple
+    of ``(name, share)`` pairs, shares normalized internally — via
+    :meth:`sample_with_classes`; plain :meth:`sample` yields the times
+    alone, so the process drops into every :class:`ArrivalProcess` slot.
+
+    ``mean_rate`` is the long-run average including bursts, so utilization
+    accounting sees the real offered load, not just the base stream.
+
+    >>> mt = MultiTenantArrivals(rate=8.0, classes=(("premium", 1.0),
+    ...                                             ("batch", 3.0)))
+    >>> rng = np.random.default_rng(0)
+    >>> times, labels = mt.sample_with_classes(rng, 4)
+    >>> len(times), sorted(set(labels) | {"premium"})
+    (4, ['batch', 'premium'])
+    """
+
+    rate: float
+    classes: tuple[tuple[str, float], ...] = (("default", 1.0),)
+    diurnal_amplitude: float = 0.0  # in [0, 1): rate swings +/- this fraction
+    diurnal_period: float = 100.0
+    burst_rate: float = 0.0  # burst events per unit time
+    burst_size: int = 0  # extra arrivals dumped per burst event
+    burst_span: float = 1.0  # each burst spreads over this many time units
+
+    def __post_init__(self):
+        _validate_rate(self.rate)
+        cls = tuple((str(n), float(s)) for n, s in self.classes)
+        if not cls:
+            raise ValueError("at least one tenant class required")
+        if any(s <= 0 or not np.isfinite(s) for _, s in cls):
+            raise ValueError(f"class shares must be positive finite: {cls}")
+        if len({n for n, _ in cls}) != len(cls):
+            raise ValueError(f"duplicate class names: {cls}")
+        object.__setattr__(self, "classes", cls)
+        if not 0.0 <= self.diurnal_amplitude < 1.0:
+            raise ValueError(
+                f"diurnal_amplitude must be in [0, 1), got "
+                f"{self.diurnal_amplitude}"
+            )
+        if self.diurnal_period <= 0:
+            raise ValueError(
+                f"diurnal_period must be positive, got {self.diurnal_period}"
+            )
+        if self.burst_rate < 0 or not np.isfinite(self.burst_rate):
+            raise ValueError(
+                f"burst_rate must be >= 0 and finite, got {self.burst_rate}"
+            )
+        if self.burst_size < 0:
+            raise ValueError(
+                f"burst_size must be >= 0, got {self.burst_size}"
+            )
+        if self.burst_span <= 0:
+            raise ValueError(
+                f"burst_span must be positive, got {self.burst_span}"
+            )
+
+    @property
+    def class_names(self) -> tuple[str, ...]:
+        return tuple(n for n, _ in self.classes)
+
+    @property
+    def class_shares(self) -> tuple[float, ...]:
+        """Normalized per-class traffic fractions (sum to 1)."""
+        total = sum(s for _, s in self.classes)
+        return tuple(s / total for _, s in self.classes)
+
+    def _times_in_window(self, rng, lo: float, hi: float) -> np.ndarray:
+        """All arrivals (base, thinned + bursts) inside [lo, hi), sorted."""
+        span = hi - lo
+        peak = self.rate * (1.0 + self.diurnal_amplitude)
+        n_base = rng.poisson(peak * span)
+        base = lo + rng.random(n_base) * span
+        if self.diurnal_amplitude > 0.0 and n_base:
+            lam = self.rate * (
+                1.0
+                + self.diurnal_amplitude
+                * np.sin(2.0 * np.pi * base / self.diurnal_period)
+            )
+            base = base[rng.random(n_base) * peak < lam]
+        parts = [base]
+        if self.burst_rate > 0.0 and self.burst_size > 0:
+            n_bursts = rng.poisson(self.burst_rate * span)
+            if n_bursts:
+                origins = lo + rng.random(n_bursts) * span
+                extra = (
+                    origins[:, None]
+                    + rng.random((n_bursts, self.burst_size)) * self.burst_span
+                )
+                parts.append(extra.ravel())
+        return np.sort(np.concatenate(parts))
+
+    def sample(self, rng, n, start=0.0):
+        times: list[np.ndarray] = []
+        filled, lo = 0, float(start)
+        # window sized so one or two laps usually suffice; short final
+        # windows keep the tail from overshooting the diurnal phase grid
+        window = max((n + 1) / self.mean_rate(), self.diurnal_period)
+        while filled < n:
+            chunk = self._times_in_window(rng, lo, lo + window)
+            times.append(chunk)
+            filled += len(chunk)
+            lo += window
+        return np.concatenate(times)[:n]
+
+    def sample_with_classes(
+        self, rng, n, start=0.0
+    ) -> tuple[np.ndarray, list[str]]:
+        """Arrival times plus an i.i.d. tenant-class label per arrival."""
+        times = self.sample(rng, n, start)
+        edges = np.cumsum(self.class_shares)
+        idx = np.searchsorted(edges, rng.random(n), side="right")
+        idx = np.minimum(idx, len(self.classes) - 1)  # guard fp edge
+        names = self.class_names
+        return times, [names[i] for i in idx]
+
+    def mean_rate(self) -> float:
+        return self.rate + self.burst_rate * self.burst_size
+
+
 def make_arrivals(kind: str, rate: float, **kwargs) -> ArrivalProcess:
     """Factory keyed by the serving-config literal.
 
     ``kind``: 'poisson' | 'mmpp' | 'deterministic' | 'trace' (trace requires
-    ``offsets=...``).  Extra kwargs go to the process constructor.
+    ``offsets=...``) | 'multitenant'.  Extra kwargs go to the process
+    constructor.
     """
     if kind == "poisson":
         return PoissonArrivals(rate=rate, **kwargs)
@@ -211,11 +350,13 @@ def make_arrivals(kind: str, rate: float, **kwargs) -> ArrivalProcess:
         return MMPPArrivals(rate=rate, **kwargs)
     if kind == "deterministic":
         return DeterministicArrivals(rate=rate, **kwargs)
+    if kind == "multitenant":
+        return MultiTenantArrivals(rate=rate, **kwargs)
     if kind == "trace":
         if "offsets" not in kwargs:
             raise ValueError("trace arrivals need offsets=...")
         return TraceArrivals(**kwargs)
     raise ValueError(
         f"unknown arrival kind {kind!r} "
-        "(use 'poisson'|'mmpp'|'deterministic'|'trace')"
+        "(use 'poisson'|'mmpp'|'deterministic'|'trace'|'multitenant')"
     )

@@ -48,7 +48,9 @@ from repro.core import (
     PolicyCandidate,
     ReplicationPlan,
     ServiceDistribution,
+    ShedPolicy,
     ShiftedExponential,
+    SloClass,
     StragglerTuner,
     TunerConfig,
     make_planner,
@@ -124,7 +126,21 @@ class ServeEngineConfig:
     # alternatively pass any ArrivalProcess straight to serve())
     arrival_offsets: Optional[tuple[float, ...]] = None
     max_wait: float = math.inf  # batch-formation deadline (sim-time units)
-    queue_discipline: str = "fifo"  # 'fifo' | 'priority' | 'edf'
+    queue_discipline: str = "fifo"  # 'fifo' | 'priority' | 'edf' | 'wfq'
+    # --- multi-tenant SLO serving -------------------------------------------
+    # tenant classes (core.SloClass): arrivals are labeled by class share,
+    # per-class deadlines/weights drive EDF/WFQ and per-class miss
+    # telemetry, and (with a 'simulate' planner) re-plans run the SERVING
+    # sweep — every (B, policy, max_wait, shed) cell scored per request,
+    # the winner's max_wait/shed adopted live.  Requires offered load
+    # (arrival_rate or utilization).
+    slo_classes: Optional[tuple[SloClass, ...]] = None
+    # formation-deadline candidates for the serving sweep's max_wait axis
+    # (default: just the config's max_wait)
+    max_wait_candidates: Optional[tuple[float, ...]] = None
+    # admission-control candidates for the serving sweep's shed axis
+    # (core.ShedPolicy); the no-shed baseline is always raced alongside
+    shed_candidates: Optional[tuple[ShedPolicy, ...]] = None
     # --- speculative re-dispatch (clone-attack straggler mitigation) --------
     # launch a clone of a batch onto an idle replica-set when its first
     # response is later than this quantile of the fitted min-over-replicas
@@ -173,7 +189,8 @@ class RequestStats:
     tokens: np.ndarray
     dispatched: float = math.nan
     deadline: float = math.inf  # absolute SLO deadline (inf = none)
-    dropped: bool = False  # shed by drop-on-expiry, never served
+    dropped: bool = False  # shed (drop-on-expiry / admission cap), never served
+    slo: str = ""  # tenant class name ("" = untagged)
 
     @property
     def latency(self) -> float:
@@ -211,6 +228,44 @@ class ReplicatedServingEngine:
         # the planner found plain replication better at the new B).  Set
         # before the objective/tuner: both are seeded from it.
         self.policy: Optional[PolicyCandidate] = self._initial_policy()
+        # multi-tenant serving needs offered load (the per-request sweep is
+        # load-aware by construction) and, for planning, the simulated
+        # sweep — the analytic/empirical planners cannot score the
+        # admission/WFQ/shedding model
+        if sc.slo_classes:
+            if sc.arrival_rate is None and sc.utilization is None:
+                raise ValueError(
+                    "slo_classes needs offered load: set ServeEngineConfig"
+                    ".arrival_rate or .utilization"
+                )
+            if (sc.tuner or sc.plan_initial) and sc.planner_mode != "simulate":
+                raise ValueError(
+                    "slo_classes re-plans run the serving sweep; use "
+                    "planner_mode='simulate'"
+                )
+            if sc.coding_candidates:
+                raise ValueError(
+                    "slo_classes and coding_candidates are mutually "
+                    "exclusive: the serving sweep scores replication "
+                    "policies only"
+                )
+        else:
+            if sc.queue_discipline == "wfq":
+                raise ValueError(
+                    "queue_discipline='wfq' needs slo_classes (the class "
+                    "weights are the WFQ shares)"
+                )
+            if sc.max_wait_candidates or sc.shed_candidates:
+                raise ValueError(
+                    "max_wait_candidates / shed_candidates only apply with "
+                    "slo_classes"
+                )
+        # LIVE serving knobs: start at the config's, adopt each serving
+        # re-plan's winning (max_wait, shed) cell — _queue_policy() reads
+        # these, so the next formed master (and, via the reconfig/
+        # swap_policy path, the running one) runs what the sweep scored
+        self.max_wait: float = sc.max_wait
+        self.shed: Optional[ShedPolicy] = None
         # job-arrival offsets for non-Poisson traffic, filled by
         # _build_objective and threaded into tuner re-plans (bugfix: sweeps
         # used to assume Poisson arrivals whatever the engine actually ran)
@@ -232,6 +287,10 @@ class ReplicatedServingEngine:
             initial = self.planner.plan(self.cluster_spec, self.objective)
             n_batches = initial.n_batches
             self.last_coding = initial.coding
+            if sc.slo_classes:
+                # the serving plan decides policy/max_wait/shed too — run
+                # from the start what the winning cell assumed
+                self._adopt_serving(initial)
         else:
             n_batches = sc.n_batches
         self.plan = ReplicationPlan(
@@ -247,6 +306,10 @@ class ReplicatedServingEngine:
             self.plan,
             TunerConfig(
                 window_steps=256, min_samples=64, cooldown_steps=16,
+                # miss telemetry arrives one entry per resolved REQUEST
+                # (served and dropped paths alike), so the window that
+                # covers 256 batches of it is 256 x the batch size
+                miss_window=256 * sc.batch_size,
                 metric=sc.metric, miss_rate_target=sc.miss_rate_target,
                 gof_alpha=sc.gof_alpha, sim_backend=sc.sim_backend,
                 replan_time_budget=sc.replan_time_budget,
@@ -338,6 +401,15 @@ class ReplicatedServingEngine:
         pol = plan.policy
         self.policy = pol if pol is not None and pol.enabled else None
 
+    def _adopt_serving(self, plan) -> None:
+        """Adopt a serving plan's FULL decision: mitigation policy plus the
+        winning (max_wait, shed) cell."""
+        self._adopt_policy(plan)
+        if plan.max_wait is not None:
+            self.max_wait = float(plan.max_wait)
+        shed = plan.shed
+        self.shed = shed if shed is not None and shed.kind != "none" else None
+
     def _tuner_decision_kwargs(self) -> dict:
         """Straggler-mitigation axis of tuner re-plan objectives (mirrors
         ``_build_objective``'s choice)."""
@@ -347,6 +419,28 @@ class ReplicatedServingEngine:
             if sc.coding_candidates
             else {}
         )
+        if sc.slo_classes:
+            # serving sweep: the (max_wait, shed) axes ride along, and the
+            # mitigation axis must be a portfolio (the serving sweep has no
+            # legacy clone-trigger path) — the live policy becomes a
+            # single-candidate portfolio when none is configured
+            serving = {
+                "slo_classes": tuple(sc.slo_classes),
+                "serving_batch_size": sc.batch_size,
+                "max_wait_candidates": (
+                    tuple(sc.max_wait_candidates)
+                    if sc.max_wait_candidates
+                    else (sc.max_wait,)
+                ),
+                "shed_candidates": (
+                    tuple(sc.shed_candidates) if sc.shed_candidates else None
+                ),
+            }
+            if sc.policy_candidates:
+                serving["policy_candidates"] = tuple(sc.policy_candidates)
+            elif self.policy is not None:
+                serving["policy_candidates"] = (self.policy,)
+            return serving
         if sc.policy_candidates:
             return {"policy_candidates": tuple(sc.policy_candidates), **coding}
         pol = self.policy
@@ -394,6 +488,30 @@ class ReplicatedServingEngine:
             return None
         return tuple(float(t) for t in jobs)
 
+    def _request_offsets_for(
+        self, request_rate: float
+    ) -> Optional[tuple[float, ...]]:
+        """REQUEST arrival offsets implied by a non-Poisson config.
+
+        The serving-sweep counterpart of :meth:`_job_offsets_for`: the
+        multi-tenant scorer replays the per-request trace and forms its
+        own batches, so no job collapsing happens here.  Short traces are
+        cycled by the sweep (TraceArrivals replay rule).
+        """
+        sc = self.sc
+        if sc.arrival_kind == "trace":
+            if sc.arrival_offsets is None:
+                return None
+            times = np.asarray(sc.arrival_offsets, dtype=float)
+        else:
+            proc = make_arrivals(sc.arrival_kind, rate=request_rate)
+            # dedicated stream: must not perturb serve()'s arrival draws
+            rng = np.random.default_rng((sc.seed, 0xA222))
+            times = proc.sample(rng, 2_048 * sc.batch_size)
+        if times.size < 2:
+            return None
+        return tuple(float(t) for t in times)
+
     def _build_objective(self) -> Objective:
         sc = self.sc
         if sc.arrival_rate is not None and sc.utilization is not None:
@@ -415,7 +533,12 @@ class ReplicatedServingEngine:
             elif pol is not None and pol.kind in ("relaunch", "hedged"):
                 policies = (pol,)
             elif pol is not None and pol.kind == "clone":
-                spec_qs = (pol.quantile,)
+                # the serving sweep has no legacy clone-trigger path: a live
+                # clone policy rides as a single-candidate portfolio there
+                if sc.slo_classes:
+                    policies = (pol,)
+                else:
+                    spec_qs = (pol.quantile,)
         if sc.coding_candidates and sc.planner_mode == "analytic":
             raise ValueError(
                 "coding_candidates needs a simulation-capable planner_mode "
@@ -437,13 +560,43 @@ class ReplicatedServingEngine:
                 tuple(sc.coding_candidates) if sc.coding_candidates else None
             ),
         )
+        if sc.slo_classes:
+            objective = dataclasses.replace(
+                objective,
+                slo_classes=tuple(sc.slo_classes),
+                batch_size=sc.batch_size,
+                max_waits=(
+                    tuple(sc.max_wait_candidates)
+                    if sc.max_wait_candidates
+                    else (sc.max_wait,)
+                ),
+                sheds=(
+                    tuple(sc.shed_candidates) if sc.shed_candidates else None
+                ),
+            )
         if load_aware and sc.arrival_kind != "poisson":
             rate = (
                 sc.arrival_rate
                 if sc.arrival_rate is not None
                 else objective.offered_rate(self.cluster_spec) * sc.batch_size
             )
-            offs = self._job_offsets_for(rate)
+            if sc.slo_classes:
+                # the serving sweep is PER-REQUEST — it forms its own
+                # batches per (max_wait, shed) cell — so it needs the raw
+                # request trace.  Handing it the job-collapsed offsets
+                # below would score every cell at 1/batch_size of the true
+                # load, and B=1 "wins" the sweep of a fleet that is not
+                # actually underloaded.  The default multitenant process is
+                # Poisson-with-labels, exactly the sweep's internal
+                # generator: attach nothing there, so tuner re-plans track
+                # the OBSERVED rate instead of a trace pinned at build time.
+                offs = (
+                    None
+                    if sc.arrival_kind == "multitenant"
+                    else self._request_offsets_for(rate)
+                )
+            else:
+                offs = self._job_offsets_for(rate)
             if offs is not None:
                 self._job_arrival_offsets = offs
                 objective = dataclasses.replace(objective, arrivals=offs)
@@ -472,6 +625,14 @@ class ReplicatedServingEngine:
                 )
             return make_arrivals(
                 "trace", rate=1.0, offsets=sc.arrival_offsets
+            )
+        if sc.arrival_kind == "multitenant" and sc.slo_classes:
+            # tenant shares come from the configured classes, so the
+            # process's labels match the engine's class vocabulary
+            return make_arrivals(
+                "multitenant",
+                rate=self._request_rate(),
+                classes=tuple((c.name, c.share) for c in sc.slo_classes),
             )
         return make_arrivals(sc.arrival_kind, rate=self._request_rate())
 
@@ -560,6 +721,38 @@ class ReplicatedServingEngine:
             )
         return HedgedDispatchPolicy(k=2, hedge_fraction=pol.hedge_fraction)
 
+    def _queue_policy(self) -> QueuePolicy:
+        """The master's queue policy from the LIVE serving state: config
+        discipline + adopted ``max_wait`` + adopted shed policy ('expired'
+        -> drop-on-expiry, 'cap' -> admission queue cap)."""
+        sc = self.sc
+        shed = self.shed
+        return QueuePolicy(
+            max_batch_size=sc.batch_size,
+            max_wait=self.max_wait,
+            discipline=sc.queue_discipline,
+            drop_expired=(
+                sc.drop_expired or (shed is not None and shed.kind == "expired")
+            ),
+            queue_cap=(
+                shed.cap if shed is not None and shed.kind == "cap" else None
+            ),
+            class_weights=(
+                tuple((c.name, c.weight) for c in sc.slo_classes)
+                if sc.slo_classes and sc.queue_discipline == "wfq"
+                else None
+            ),
+        )
+
+    def _on_drop(self, req: Request) -> None:
+        """Stream a shed request into the tuner AS IT HAPPENS (a drop-heavy
+        SLO breach can then trigger a re-plan mid-stream).  PER-REQUEST and
+        class-attributed, the same granularity as the served path — and
+        only deadline-carrying requests count (a cap-shed of a best-effort
+        request is lost work, not a deadline miss)."""
+        if math.isfinite(req.deadline):
+            self.tuner.observe_deadline_misses(1, 1, slo=req.slo)
+
     def _on_job_complete(self, job: BatchJob) -> Optional[dict]:
         """Telemetry + model work + (maybe) a drain-then-swap re-plan."""
         work = self._work(job.size)
@@ -571,14 +764,16 @@ class ReplicatedServingEngine:
         self.tuner.observe_sojourn(
             np.array([req.sojourn for req in job.requests])
         )
-        with_deadline = [
-            req for req in job.requests if math.isfinite(req.deadline)
-        ]
-        if with_deadline:
-            self.tuner.observe_deadline_misses(
-                sum(req.completion > req.deadline for req in with_deadline),
-                len(with_deadline),
-            )
+        # PER-REQUEST miss accounting, matching the drop path's granularity
+        # (a batch-level (n_missed, n_batch) observation would weight each
+        # batch equally however many requests it resolved — partial batches
+        # then skew the windowed rate) and carrying the SLO class so
+        # per-class breach detection sees served outcomes too
+        for req in job.requests:
+            if math.isfinite(req.deadline):
+                self.tuner.observe_deadline_misses(
+                    int(req.completion > req.deadline), 1, slo=req.slo
+                )
         self._formations.append(job.formed_at)
         if len(self._formations) >= 2:
             # jobs complete out of formation order (slow sets finish late),
@@ -597,6 +792,15 @@ class ReplicatedServingEngine:
                 # it scored — including "don't mitigate at this B" (None)
                 if rp.plan is not None and rp.plan.objective.coding:
                     self.last_coding = rp.plan.coding
+                if rp.plan is not None and rp.plan.objective.slo_classes:
+                    # serving re-plan: adopt the whole (policy, max_wait,
+                    # shed) cell and ship the new queue policy to the
+                    # quiesce point alongside the new fabric
+                    self._adopt_serving(rp.plan)
+                    return {
+                        "n_groups": self.plan.n_batches,
+                        "policy": self._queue_policy(),
+                    }
                 if rp.plan is not None and rp.plan.objective.policies:
                     self._adopt_policy(rp.plan)
                 elif (
@@ -612,7 +816,13 @@ class ReplicatedServingEngine:
             if lp is not None and lp.objective.coding:
                 self.last_coding = lp.coding
             if lp is not None and lp.n_batches == self.plan.n_batches:
-                if lp.objective.policies:
+                if lp.objective.slo_classes:
+                    self._adopt_serving(lp)
+                    # same-B adoption needs no drain: max_wait/cap are
+                    # scalar knobs the live master swaps in place
+                    if self.last_master is not None:
+                        self.last_master.swap_policy(self._queue_policy())
+                elif lp.objective.policies:
                     self._adopt_policy(lp)
                 elif lp.objective.speculation_quantiles:
                     self.speculation_quantile = lp.speculation_quantile
@@ -633,10 +843,33 @@ class ReplicatedServingEngine:
         config's uniform ``deadline``; ``priorities`` feeds the
         ``'priority'`` discipline.  Requests carrying deadlines drive EDF
         ordering, drop-on-expiry, and deadline-miss telemetry.
+
+        With ``slo_classes`` every arrival is labeled with a tenant class —
+        by the arrival process itself when it can
+        (:meth:`~repro.serving.arrivals.MultiTenantArrivals
+        .sample_with_classes`), else by an independent share draw — and the
+        class deadline applies where neither ``deadlines`` nor the config's
+        uniform ``deadline`` does.
         """
         sc = self.sc
         process = arrivals if arrivals is not None else self._default_arrivals()
-        times = process.sample(self._arrival_rng, n_requests, start=self.clock)
+        labels: Optional[list[str]] = None
+        if sc.slo_classes and hasattr(process, "sample_with_classes"):
+            times, labels = process.sample_with_classes(
+                self._arrival_rng, n_requests, start=self.clock
+            )
+        else:
+            times = process.sample(
+                self._arrival_rng, n_requests, start=self.clock
+            )
+            if sc.slo_classes:
+                shares = np.array(
+                    [c.share for c in sc.slo_classes], dtype=float
+                )
+                idx = self._arrival_rng.choice(
+                    len(shares), size=n_requests, p=shares / shares.sum()
+                )
+                labels = [sc.slo_classes[i].name for i in idx]
         if deadlines is None and sc.deadline is not None:
             deadlines = np.full(n_requests, sc.deadline)
         if deadlines is not None and len(deadlines) != n_requests:
@@ -647,18 +880,30 @@ class ReplicatedServingEngine:
             raise ValueError(
                 f"priorities length {len(priorities)} != {n_requests}"
             )
+        class_deadline = (
+            {c.name: c.deadline for c in sc.slo_classes}
+            if sc.slo_classes
+            else {}
+        )
+
+        def _deadline(i: int, t: float) -> float:
+            if deadlines is not None:
+                return t + float(deadlines[i])
+            if labels is not None:
+                rel = class_deadline.get(labels[i])
+                if rel is not None:
+                    return t + float(rel)
+            return math.inf
+
         requests = [
             Request(
                 request_id=self._next_id + i,
                 arrival=float(t),
-                deadline=(
-                    float(t) + float(deadlines[i])
-                    if deadlines is not None
-                    else math.inf
-                ),
+                deadline=_deadline(i, float(t)),
                 priority=(
                     float(priorities[i]) if priorities is not None else 0.0
                 ),
+                slo=labels[i] if labels is not None else "",
             )
             for i, t in enumerate(times)
         ]
@@ -666,26 +911,23 @@ class ReplicatedServingEngine:
         master = EventDrivenMaster(
             n_groups=self.plan.n_batches,
             service_sampler=self._service_sampler,
-            policy=QueuePolicy(
-                max_batch_size=sc.batch_size,
-                max_wait=sc.max_wait,
-                discipline=sc.queue_discipline,
-                drop_expired=sc.drop_expired,
-            ),
+            policy=self._queue_policy(),
             clock=self.clock,
             on_job_complete=self._on_job_complete,
             speculation=self._speculation_policy(),
             # a dropped request resolved as a miss without reaching any job
-            # callback: stream it into the tuner AS IT HAPPENS, so a
-            # drop-heavy SLO breach can trigger a re-plan mid-stream
-            on_drop=lambda req: self.tuner.observe_deadline_misses(1, 1),
+            # callback: stream it into the tuner AS IT HAPPENS, per request
+            # and class-attributed (see _on_drop)
+            on_drop=self._on_drop,
         )
         self._tokens = {}
+        # visible to _on_job_complete DURING the run: same-B serving
+        # re-plans swap the live master's queue policy in place
+        self.last_master = master
         for req in requests:
             master.submit(req)
         master.run()
         self.clock = master.clock
-        self.last_master = master
         return [
             RequestStats(
                 request_id=req.request_id,
@@ -695,6 +937,7 @@ class ReplicatedServingEngine:
                 dispatched=req.dispatched,
                 deadline=req.deadline,
                 dropped=req.dropped,
+                slo=req.slo,
             )
             for req in requests
         ]
@@ -710,7 +953,8 @@ class ReplicatedServingEngine:
         :meth:`run`).  Sojourn quantiles cover SERVED requests only;
         ``deadline_miss_rate`` covers every deadline-carrying request
         (dropped ones count as misses) and is None when no request carried
-        a deadline."""
+        a deadline.  With ``slo_classes``, ``class_stats`` breaks request
+        counts, drops, miss rates, and sojourns down per tenant class."""
         start = self.clock
         stats = self.serve(n_requests, arrivals, deadlines=deadlines)
         served = [s for s in stats if not s.dropped]
@@ -722,6 +966,32 @@ class ReplicatedServingEngine:
             if with_deadline
             else None
         )
+        class_stats: Optional[dict] = None
+        if self.sc.slo_classes:
+            class_stats = {}
+            for c in self.sc.slo_classes:
+                cls = [s for s in stats if s.slo == c.name]
+                cls_served = [s for s in cls if not s.dropped]
+                cls_dl = [s for s in cls if math.isfinite(s.deadline)]
+                cls_soj = np.array([s.latency for s in cls_served])
+                class_stats[c.name] = {
+                    "requests": len(cls),
+                    "served": len(cls_served),
+                    "dropped": len(cls) - len(cls_served),
+                    "miss_rate": (
+                        sum(s.missed_deadline for s in cls_dl) / len(cls_dl)
+                        if cls_dl
+                        else None
+                    ),
+                    "mean_sojourn": (
+                        float(cls_soj.mean()) if len(cls_served) else math.nan
+                    ),
+                    "p99_sojourn": (
+                        float(np.quantile(cls_soj, 0.99))
+                        if len(cls_served)
+                        else math.nan
+                    ),
+                }
         return {
             "requests": len(stats),
             "mean_sojourn": float(soj.mean()) if len(served) else math.nan,
@@ -749,6 +1019,9 @@ class ReplicatedServingEngine:
             ),
             "hedges": self.last_master.hedges if self.last_master else 0,
             "policy": self.policy.kind if self.policy is not None else "none",
+            "max_wait": self.max_wait,
+            "shed": self.shed.kind if self.shed is not None else "none",
+            "class_stats": class_stats,
             "coding": (
                 self.last_coding.describe()
                 if self.last_coding is not None

@@ -8,19 +8,30 @@ is factored (per the active :class:`~repro.core.planner.Plan`) into
 groups.  The master's event loop:
 
 * **Admission** — requests enter the queue at their arrival time under one of
-  three disciplines (``QueuePolicy.discipline``): ``'fifo'`` (arrival order),
-  ``'priority'`` (larger ``Request.priority`` first, ties FIFO), or ``'edf'``
+  four disciplines (``QueuePolicy.discipline``): ``'fifo'`` (arrival order),
+  ``'priority'`` (larger ``Request.priority`` first, ties FIFO), ``'edf'``
   (earliest ``Request.deadline`` first, ties FIFO — the deadline/SLO
-  discipline).  With ``QueuePolicy.drop_expired`` set, a request whose
-  deadline has already passed is DROPPED instead of queued (at admission) or
-  instead of dispatched (at batch formation); dropped requests land in
+  discipline), or ``'wfq'`` (weighted fair queueing across ``Request.slo``
+  tenant classes: each class keeps FIFO order internally and classes share
+  formation slots in proportion to ``QueuePolicy.class_weights``, stride-
+  scheduled so no backlogged class ever starves).  With
+  ``QueuePolicy.drop_expired`` set, a request whose deadline has already
+  passed is DROPPED instead of queued (at admission) or instead of
+  dispatched (at batch formation); with ``QueuePolicy.queue_cap`` set, an
+  arriving request finding the admission queue at capacity is shed on the
+  spot (admission-control load shedding — weight-aware under ``'wfq'``,
+  where a heavier-class arrival instead evicts the newest request of the
+  cheapest backlogged class).  Dropped requests land in
   :attr:`EventDrivenMaster.dropped_requests` and never occupy a replica-set.
 * **Batch formation** — a batch forms as soon as ``max_batch_size`` requests
-  wait, or when the oldest queued request has waited ``max_wait`` (whichever
-  comes first); leftovers are flushed once the arrival stream ends, so no
-  request is ever dropped by formation (the lock-step engine's remainder bug
-  — see :func:`partition_requests`).  A batch inherits the EARLIEST deadline
-  and the LARGEST priority of its requests.
+  wait, or when the OLDEST queued request has waited ``max_wait`` (whichever
+  comes first; the master keeps exactly one formation timer armed at
+  ``oldest_arrival + max_wait`` and re-arms it after every formation, so the
+  bound holds under every discipline, including the ones whose pop order is
+  not arrival order); leftovers are flushed once the arrival stream ends, so
+  no request is ever dropped by formation (the lock-step engine's remainder
+  bug — see :func:`partition_requests`).  A batch inherits the EARLIEST
+  deadline and the LARGEST priority of its requests.
 * **Replica dispatch** — a formed batch goes to the lowest-numbered idle
   replica-set (under ``'priority'``/``'edf'`` an urgent batch overtakes
   earlier-formed pending ones); its ``r`` replicas all start, the FASTEST
@@ -56,7 +67,9 @@ groups.  The master's event loop:
   report :attr:`Request.missed_deadline`.
 
 Re-planning: ``on_job_complete`` may return a reconfiguration (new
-``n_groups`` and/or sampler).  The master then DRAINS — formed batches keep
+``n_groups``, sampler, and/or ``policy`` — a replacement
+:class:`QueuePolicy` with the same discipline/weights, so a swept
+``max_wait`` or shed cap lands on the live master).  The master then DRAINS — formed batches keep
 queueing, in-flight batches finish, no new clones launch — and swaps the
 replica-set fabric only at the quiesce point, mirroring how re-factoring a
 real mesh flushes compiled executables before traffic resumes.
@@ -124,24 +137,49 @@ class QueuePolicy:
     """Admission + batch-formation knobs of the event-driven master.
 
     * ``max_batch_size`` — form a batch as soon as this many requests wait.
-    * ``max_wait``       — ... or when the oldest queued request has waited
-      this long (finite values arm a per-request formation timer).
+    * ``max_wait``       — ... or when the OLDEST queued request has waited
+      this long.  The master keeps one formation timer armed at
+      ``oldest_arrival + max_wait`` (re-armed after every formation), so
+      the bound is oldest-waiting under EVERY discipline — including
+      ``'edf'``/``'priority'``/``'wfq'``, whose pop order is not arrival
+      order.
     * ``discipline``     — ``'fifo'`` | ``'priority'`` (larger
       :attr:`Request.priority` first) | ``'edf'`` (earliest
-      :attr:`Request.deadline` first; requests without a deadline sort last).
+      :attr:`Request.deadline` first; requests without a deadline sort last)
+      | ``'wfq'`` (weighted fair queueing across :attr:`Request.slo` tenant
+      classes, see ``class_weights``).
+    * ``class_weights``  — ``((class_name, weight), ...)`` fair-share
+      weights for ``'wfq'`` (hashable so planner sweeps can carry it).
+      Classes not listed get weight 1.0; under sustained backlog each
+      class's share of formation slots converges to its weight fraction,
+      and no backlogged class ever starves (stride scheduling).
     * ``drop_expired``   — drop a request whose deadline has already passed
       instead of admitting/dispatching it (the SLO "don't serve dead work"
       knob; default off, so late requests are still served and merely
       counted as deadline misses).
+    * ``queue_cap``      — admission-control load shedding: an arriving
+      request finding this many requests already queued is dropped instead
+      of admitted (bounds queue wait under overload; ``None`` = unbounded).
+      Under ``'wfq'`` the shedding is weight-aware: an arrival of a
+      heavier class evicts the NEWEST queued request of the cheapest
+      backlogged class instead of being shed itself (see
+      :meth:`AdmissionQueue.evict_for`), so overload pressure lands on the
+      low-weight tenants first.  A cap also THROTTLES size-triggered
+      formation to ``n_groups`` pending batches (see
+      :meth:`EventDrivenMaster._maybe_form`): overload backlog then
+      accumulates in the admission queue where the cap acts, instead of
+      draining into the unbounded formed-batch buffer.
 
     >>> QueuePolicy(max_batch_size=8, discipline="edf", drop_expired=True)
-    QueuePolicy(max_batch_size=8, max_wait=inf, discipline='edf', drop_expired=True)
+    QueuePolicy(max_batch_size=8, max_wait=inf, discipline='edf', class_weights=None, drop_expired=True, queue_cap=None)
     """
 
     max_batch_size: int = 4  # form a batch as soon as this many wait
     max_wait: float = math.inf  # ... or the oldest has waited this long
-    discipline: str = "fifo"  # 'fifo' | 'priority' | 'edf'
+    discipline: str = "fifo"  # 'fifo' | 'priority' | 'edf' | 'wfq'
+    class_weights: Optional[tuple] = None  # ((slo, weight), ...) for 'wfq'
     drop_expired: bool = False  # drop requests already past their deadline
+    queue_cap: Optional[int] = None  # shed arrivals beyond this queue length
 
     def __post_init__(self):
         if self.max_batch_size < 1:
@@ -150,10 +188,27 @@ class QueuePolicy:
             )
         if not self.max_wait > 0:
             raise ValueError(f"max_wait must be positive, got {self.max_wait}")
-        if self.discipline not in ("fifo", "priority", "edf"):
+        if self.discipline not in ("fifo", "priority", "edf", "wfq"):
             raise ValueError(
                 f"unknown discipline {self.discipline!r} "
-                "(use 'fifo'|'priority'|'edf')"
+                "(use 'fifo'|'priority'|'edf'|'wfq')"
+            )
+        if self.class_weights is not None:
+            if self.discipline != "wfq":
+                raise ValueError(
+                    "class_weights only applies to the 'wfq' discipline"
+                )
+            cw = tuple((str(n), float(w)) for n, w in self.class_weights)
+            if any(w <= 0 or not math.isfinite(w) for _, w in cw):
+                raise ValueError(
+                    f"class weights must be positive finite, got {cw}"
+                )
+            if len({n for n, _ in cw}) != len(cw):
+                raise ValueError(f"duplicate class names in {cw}")
+            object.__setattr__(self, "class_weights", cw)
+        if self.queue_cap is not None and self.queue_cap < 1:
+            raise ValueError(
+                f"queue_cap must be >= 1, got {self.queue_cap}"
             )
 
 
@@ -440,8 +495,11 @@ class AdmissionQueue:
 
     Orders waiting requests under a :class:`QueuePolicy` discipline —
     ``'fifo'`` (arrival order), ``'priority'`` (larger
-    :attr:`Request.priority` first, ties FIFO), or ``'edf'`` (earliest
-    :attr:`Request.deadline` first, ties FIFO).  It holds NO clock and NO
+    :attr:`Request.priority` first, ties FIFO), ``'edf'`` (earliest
+    :attr:`Request.deadline` first, ties FIFO), or ``'wfq'`` (weighted fair
+    queueing: per-:attr:`Request.slo` FIFO lanes, stride-scheduled by
+    ``QueuePolicy.class_weights`` so backlogged classes share pops in
+    weight proportion and none starves).  It holds NO clock and NO
     dispatch state, so the same class backs both the simulated-clock
     :class:`EventDrivenMaster` and the wall-clock
     :class:`repro.cluster.coordinator.ClusterCoordinator` (drop-on-expiry
@@ -459,13 +517,17 @@ class AdmissionQueue:
         self._queue: deque[Request] = deque()  # fifo order
         self._prio: list = []  # (key, Request) heap: 'priority'/'edf' order
         self._queued_ids: set[int] = set()
+        # oldest-waiting lookup (max_wait timers): lazily-cleaned min-heap,
+        # valid under every discipline (pops leave stale entries behind)
+        self._arrival_heap: list[tuple[float, int]] = []
+        # 'wfq' state: per-class FIFO lanes + stride-scheduler pass values
+        self._lanes: dict[str, deque[Request]] = {}
+        self._pass: dict[str, float] = {}
+        self._vclock = 0.0  # pass of the most recently popped class
+        self._weights = dict(policy.class_weights or ())
 
     def __len__(self) -> int:
-        return (
-            len(self._queue)
-            if self.policy.discipline == "fifo"
-            else len(self._prio)
-        )
+        return len(self._queued_ids)
 
     def __contains__(self, request_id: int) -> bool:
         return request_id in self._queued_ids
@@ -478,17 +540,79 @@ class AdmissionQueue:
     def push(self, req: Request) -> None:
         if self.policy.discipline == "fifo":
             self._queue.append(req)
+        elif self.policy.discipline == "wfq":
+            lane = self._lanes.setdefault(req.slo, deque())
+            if not lane:
+                # a class (re)activating joins at the current virtual time:
+                # it cannot burst ahead on pass credit accrued while idle
+                self._pass[req.slo] = max(
+                    self._pass.get(req.slo, 0.0), self._vclock
+                )
+            lane.append(req)
         else:
             heapq.heappush(self._prio, (self._key(req), req))
         self._queued_ids.add(req.request_id)
+        heapq.heappush(self._arrival_heap, (req.arrival, req.request_id))
+
+    def _pop_wfq(self) -> Request:
+        best = None
+        for name, lane in self._lanes.items():
+            if not lane:
+                continue
+            key = (self._pass[name], lane[0].arrival, name)
+            if best is None or key < best:
+                best = key
+        name = best[2]
+        req = self._lanes[name].popleft()
+        self._vclock = self._pass[name]
+        self._pass[name] += 1.0 / self._weights.get(name, 1.0)
+        return req
 
     def pop(self) -> Request:
         if self.policy.discipline == "fifo":
             req = self._queue.popleft()
+        elif self.policy.discipline == "wfq":
+            req = self._pop_wfq()
         else:
             req = heapq.heappop(self._prio)[1]
         self._queued_ids.discard(req.request_id)
         return req
+
+    def oldest_arrival(self) -> float:
+        """Arrival time of the longest-waiting queued request (``inf`` when
+        empty) — the quantity ``max_wait`` formation timers key on."""
+        h = self._arrival_heap
+        while h and h[0][1] not in self._queued_ids:
+            heapq.heappop(h)
+        return h[0][0] if h else math.inf
+
+    def evict_for(self, req: Request) -> Optional[Request]:
+        """Pick a queued victim to shed so an arriving ``req`` can be
+        admitted at capacity (weight-aware load shedding).
+
+        Under ``'wfq'``: the NEWEST request of the cheapest backlogged
+        class (smallest weight, ties by name) is evicted — but only when
+        its class weighs strictly less than ``req``'s, so equal-weight
+        classes never evict each other and the newcomer is shed instead
+        (``None``).  Under every other discipline the queue has no class
+        structure, so the newcomer is always the victim (``None`` — plain
+        tail drop).
+        """
+        if self.policy.discipline != "wfq":
+            return None
+        w_new = self._weights.get(req.slo, 1.0)
+        best = None
+        for name, lane in self._lanes.items():
+            if not lane:
+                continue
+            key = (self._weights.get(name, 1.0), name)
+            if best is None or key < best:
+                best = key
+        if best is None or best[0] >= w_new:
+            return None
+        victim = self._lanes[best[1]].pop()
+        self._queued_ids.discard(victim.request_id)
+        return victim
 
 
 def late_threshold(
@@ -608,6 +732,7 @@ class EventDrivenMaster:
         heapq.heapify(self._idle)
         self._in_flight: dict[int, BatchJob] = {}
         self._batch_seq = itertools.count()
+        self._timer_due = math.inf  # earliest pending max_wait timer
         self._reconfig: Optional[dict] = None
         self.completed_jobs: list[BatchJob] = []
         self.dropped_requests: list[Request] = []
@@ -698,17 +823,70 @@ class EventDrivenMaster:
             # already expired at admission: never queue dead work
             self._drop(req)
             return
+        cap = self.policy.queue_cap
+        if cap is not None and self._n_queued() >= cap:
+            # admission-control shedding: the queue is at capacity.  Under
+            # 'wfq' a heavier-class arrival evicts the newest request of
+            # the cheapest backlogged class instead of being shed itself.
+            victim = self._admission.evict_for(req)
+            if victim is None:
+                self._drop(req)
+                return
+            self._drop(victim)
         self._admission.push(req)
-        if self._n_queued() >= self.policy.max_batch_size:
-            self._form(self.policy.max_batch_size)
-        elif math.isfinite(self.policy.max_wait):
-            self._push(req.arrival + self.policy.max_wait, "timer", req.request_id)
+        self._maybe_form()
+        self._arm_wait_timer()
 
-    def _on_timer(self, request_id: int) -> None:
-        # the max-wait deadline of a request that is still queued fires a
-        # batch with whatever is waiting (>= 1 request, <= max size)
-        if request_id in self._admission:
+    def _maybe_form(self) -> None:
+        """Size-triggered formation, throttled under admission control.
+
+        Without a ``queue_cap`` formation is eager: every
+        ``max_batch_size``-full queue forms immediately (formed batches
+        buffer unboundedly awaiting idle sets).  With a cap, eager
+        formation would drain the admission queue into that unbounded
+        buffer and make the cap cosmetic — overload backlog must stay IN
+        the admission queue, where the cap and WFQ eviction act.  So
+        size-triggered formation only runs while fewer than ``n_groups``
+        batches await dispatch; ``max_wait`` timers and the end-of-stream
+        flush bypass the throttle, so the oldest-waiting bound holds
+        regardless.  Re-checked on every departure (freed capacity pulls
+        queued work forward).
+        """
+        while self._n_queued() >= self.policy.max_batch_size:
+            if (
+                self.policy.queue_cap is not None
+                and len(self._pending) >= self.n_groups
+            ):
+                return
+            self._form(self.policy.max_batch_size)
+
+    def _arm_wait_timer(self) -> None:
+        """Keep ONE formation timer armed at ``oldest_arrival + max_wait``.
+
+        Oldest-waiting semantics: the timer tracks the longest-waiting
+        QUEUED request (not a per-request deadline), so the ``max_wait``
+        bound holds under disciplines whose pop order is not arrival order.
+        ``_timer_due`` dedupes — a timer already pending at or before the
+        due time is reused; stale timers re-check and re-arm harmlessly.
+        """
+        if not math.isfinite(self.policy.max_wait) or not self._n_queued():
+            return
+        due = self._admission.oldest_arrival() + self.policy.max_wait
+        if due < self._timer_due:
+            self._timer_due = due
+            self._push(due, "timer", None)
+
+    def _on_timer(self, _payload=None) -> None:
+        # oldest-waiting formation: fire batches until no queued request
+        # has waited max_wait, then re-arm for the new oldest
+        self._timer_due = math.inf
+        w = self.policy.max_wait
+        while (
+            self._n_queued()
+            and self._admission.oldest_arrival() + w <= self.clock
+        ):
             self._form(min(self._n_queued(), self.policy.max_batch_size))
+        self._arm_wait_timer()
 
     def _pop_request(self) -> Request:
         return self._admission.pop()
@@ -889,6 +1067,10 @@ class EventDrivenMaster:
             req.completion = job.completed
         self.completed_jobs.append(job)
         self._service_window.append(job.service)
+        # freed capacity pulls throttled queued work forward (no-op unless
+        # a queue_cap armed the formation throttle)
+        self._maybe_form()
+        self._arm_wait_timer()
         # every completed job reports (model work + telemetry happen in the
         # callback), including those draining out; a newer reconfig request
         # supersedes the pending one at the same quiesce point
@@ -897,6 +1079,30 @@ class EventDrivenMaster:
             if rc:
                 self._reconfig = dict(rc)
 
+    def swap_policy(self, new: QueuePolicy) -> None:
+        """Swap the live queue policy in place (serving re-plan adoption).
+
+        Only the scalar knobs may move — ``max_wait``, ``queue_cap``,
+        ``drop_expired``, ``max_batch_size``; the admission structure
+        (discipline, class weights = WFQ lane state) must survive the swap,
+        so changing either raises.  A shorter ``max_wait`` re-arms the
+        formation timer against the oldest queued request immediately, and
+        a loosened cap/size pulls queued work forward through the
+        (possibly throttled) size trigger.
+        """
+        if (
+            new.discipline != self.policy.discipline
+            or new.class_weights != self.policy.class_weights
+        ):
+            raise ValueError(
+                "cannot change the queue discipline or class weights on a "
+                "live master (queued lane state would be orphaned)"
+            )
+        self.policy = new
+        self._admission.policy = new
+        self._maybe_form()
+        self._arm_wait_timer()
+
     def _apply_reconfig(self) -> None:
         rc, self._reconfig = self._reconfig, None
         self.n_groups = int(rc.get("n_groups", self.n_groups))
@@ -904,6 +1110,8 @@ class EventDrivenMaster:
             raise ValueError(f"reconfig n_groups must be >= 1, got {self.n_groups}")
         if "service_sampler" in rc:
             self._sampler = rc["service_sampler"]
+        if "policy" in rc:
+            self.swap_policy(rc["policy"])
         self._idle = list(range(self.n_groups))
         heapq.heapify(self._idle)
         self.reconfigurations += 1

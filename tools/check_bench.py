@@ -38,7 +38,10 @@ BENCH_DIR = REPO / "benchmarks"
 
 # modules guarded with committed baselines; the rest of benchmarks/run.py
 # still runs nightly but is not regression-pinned
-GUARDED = ("planner", "serving_latency", "cluster", "sweep_kernel", "coding")
+GUARDED = (
+    "planner", "serving_latency", "cluster", "sweep_kernel", "coding",
+    "multitenant",
+)
 
 
 def run_module(name: str) -> list[dict]:
